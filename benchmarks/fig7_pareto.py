@@ -1,0 +1,97 @@
+"""Paper Fig. 7: accuracy vs compression-ratio Pareto fronts for the four
+methods — quant-only, SVD+quant, ITERA (ours), ITERA+SRA (ours). The
+paper's claims checked here:
+  * ITERA dominates SVD+quant across the ratio spectrum;
+  * SRA adds the biggest gains at lower compression;
+  * at W4A8 / comparable ratio, ITERA(+SRA) beats quant-only.
+"""
+import numpy as np
+
+from common import BLOCK_LINEARS, DecompCache, train_proxy, token_accuracy, csv_row
+from repro.core.compress import CompressionConfig
+from repro.core.sra import sra_allocate, uniform_allocation
+
+
+def run_method(params, cfg, task, method, wl, rank_fracs, use_sra=False):
+    dc = DecompCache(params, CompressionConfig(method="itera", weight_wl=wl, exclude=BLOCK_LINEARS))
+    L = dc.num_layers
+    full = max(dc.max_rank(p) for p in dc.targets)
+    rows = []
+    for frac in rank_fracs:
+        budget = max(L, int(L * full * frac))
+        if use_sra:
+            def ev(ranks):
+                cp = dc.compressed_params(params, list(ranks), method)
+                return token_accuracy(cp, cfg, task, batches=2)
+
+            res = sra_allocate(ev, L, budget, [full] * L,
+                               delta0=max(1, full // 8), max_iters=12,
+                               patience=4)
+            ranks = res.ranks
+        else:
+            ranks = uniform_allocation(L, budget, [full] * L)
+        cp = dc.compressed_params(params, ranks, method)
+        acc = token_accuracy(cp, cfg, task)
+        ratio, nops, dnops = dc.accounting(ranks, method)
+        rows.append((ratio, acc, nops, dnops, ranks))
+    return rows
+
+
+def main():
+    params, cfg, task = train_proxy()
+    base = token_accuracy(params, cfg, task)
+    csv_row("fig7_fp32", 0.0, f"acc={base:.4f};ratio=1.0")
+
+    fracs = (0.9, 0.6, 0.4, 0.25)
+
+    # quant-only reference points (ratio fixed by wl); W3/W2 extend into
+    # the proxy's actual degradation region (see EXPERIMENTS.md note).
+    quant_pts = {}
+    for qwl in (8, 6, 4, 3, 2):
+        dcq = DecompCache(params, CompressionConfig(method="quant",
+                                                    weight_wl=qwl, exclude=BLOCK_LINEARS))
+        cp = dcq.compressed_params(params, 0, "quant")
+        acc = token_accuracy(cp, cfg, task)
+        ratio, _, _ = dcq.accounting(0, "quant")
+        quant_pts[qwl] = (ratio, acc)
+        csv_row(f"fig7_quant_W{qwl}", 0.0, f"acc={acc:.4f};ratio={ratio:.2f}")
+
+    for wl in (4, 2):
+        results = {}
+        for label, method, sra in (("svd", "svd", False),
+                                   ("itera", "itera", False),
+                                   ("itera_sra", "itera", True)):
+            rows = run_method(params, cfg, task, method, wl, fracs,
+                              use_sra=sra)
+            results[label] = rows
+            for ratio, acc, *_ in rows:
+                csv_row(f"fig7_{label}_W{wl}_r{ratio:.1f}", 0.0,
+                        f"acc={acc:.4f};ratio={ratio:.2f}")
+
+        # claim checks at this word length
+        it = {round(r[0], 1): r[1] for r in results["itera"]}
+        sv = {round(r[0], 1): r[1] for r in results["svd"]}
+        common_ratios = sorted(set(it) & set(sv))
+        wins = sum(it[r] >= sv[r] - 0.005 for r in common_ratios)
+        csv_row(f"fig7_claim_itera_ge_svd_W{wl}", 0.0,
+                f"wins={wins}/{len(common_ratios)}")
+        best_sra = max(r[1] for r in results["itera_sra"])
+        best_it = max(r[1] for r in results["itera"])
+        csv_row(f"fig7_claim_sra_gain_W{wl}", 0.0,
+                f"best_sra={best_sra:.4f};best_itera={best_it:.4f};"
+                f"gain={best_sra-best_it:+.4f}")
+        # crossover vs quant-only at comparable ratio (the paper's Fig. 7
+        # "region of interest"): compare itera points against the quant
+        # point of equal-or-lower ratio.
+        qr, qa = quant_pts[wl]
+        near = [r for r in results["itera"] if r[0] >= qr * 0.95]
+        if near:
+            best = max(near, key=lambda r: r[1])
+            csv_row(f"fig7_claim_vs_quant_W{wl}", 0.0,
+                    f"itera_acc={best[1]:.4f}@ratio{best[0]:.1f};"
+                    f"quant_acc={qa:.4f}@ratio{qr:.1f};"
+                    f"delta={100*(best[1]-qa):+.2f}pts")
+
+
+if __name__ == "__main__":
+    main()

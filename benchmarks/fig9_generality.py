@@ -1,0 +1,61 @@
+"""Paper Fig. 9: generality across source->target language pairs (EN-DE,
+FR-EN). Offline analog: two *different* seeded Markov worlds = two tasks;
+the comparison at compression ratio ~8 (W4A8) mirrors the paper's bars:
+quant-only vs ITERA (+1.2% claimed) vs ITERA+SRA (up to +4.9% claimed)."""
+from common import BLOCK_LINEARS, DecompCache, train_proxy, token_accuracy, csv_row
+from repro.core.compress import CompressionConfig
+from repro.core.sra import sra_allocate, uniform_allocation
+
+
+def matched_ratio_ranks(dc, L, full, target_ratio):
+    """Largest uniform rank whose compression ratio >= the quant point's."""
+    for r in range(full, 0, -1):
+        ratio, _, _ = dc.accounting([r] * L, "itera")
+        if ratio >= target_ratio:
+            return [r] * L
+    return [1] * L
+
+
+def main():
+    # W4 = the paper's operating point (above the proxy's degradation
+    # threshold -> expect parity); W2 = the proxy's actual sub-precision
+    # threshold, where the paper's crossover manifests (EXPERIMENTS.md).
+    for pair, seed in (("EN-DE", 0), ("FR-EN", 1)):
+        params, cfg, task = train_proxy(name=f"pair_{seed}", seed=seed)
+        base = token_accuracy(params, cfg, task)
+        for wl in (4, 2):
+            dcq = DecompCache(params, CompressionConfig(
+                method="quant", weight_wl=wl, exclude=BLOCK_LINEARS))
+            acc_q = token_accuracy(
+                dcq.compressed_params(params, 0, "quant"), cfg, task)
+            ratio_q, _, _ = dcq.accounting(0, "quant")
+
+            dc = DecompCache(params, CompressionConfig(
+                method="itera", weight_wl=wl, exclude=BLOCK_LINEARS))
+            L = dc.num_layers
+            full = max(dc.max_rank(p) for p in dc.targets)
+            ranks = matched_ratio_ranks(dc, L, full, ratio_q)
+            acc_it = token_accuracy(
+                dc.compressed_params(params, ranks, "itera"), cfg, task)
+
+            budget = sum(ranks)
+
+            def ev(rs):
+                cp = dc.compressed_params(params, list(rs), "itera")
+                return token_accuracy(cp, cfg, task, batches=2)
+
+            res = sra_allocate(ev, L, budget, [full] * L,
+                               delta0=max(1, full // 8), max_iters=12,
+                               patience=4)
+            acc_sra = token_accuracy(
+                dc.compressed_params(params, res.ranks, "itera"), cfg, task)
+
+            csv_row(f"fig9_{pair}_W{wl}", 0.0,
+                    f"fp32={base:.4f};quant={acc_q:.4f}@r{ratio_q:.1f};"
+                    f"itera={acc_it:.4f};itera_sra={acc_sra:.4f};"
+                    f"itera_gain={100*(acc_it-acc_q):+.2f}pts;"
+                    f"sra_gain={100*(acc_sra-acc_q):+.2f}pts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Kernel microbenchmarks: Pallas kernels (interpret mode — CPU wall time
+is NOT TPU latency; reported for relative sanity only) plus the analytical
+TPU latencies the DSE actually uses (modeled compute/memory terms)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from common import csv_row, timed
+from repro.core.itera import svd_decompose
+from repro.core.quant import quantize
+from repro.hw import tpu_model as tm
+from repro.kernels import ops
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    cases = [
+        ("paper512", 512, 512, 512, 128),
+        ("ffn_like", 256, 1024, 4096, 256),
+        ("decode_like", 8, 4096, 4096, 512),
+    ]
+    for name, m, k, n, r in cases:
+        x = jax.random.normal(key, (m, k), jnp.float32)
+        w = jax.random.normal(key, (k, n), jnp.float32) / np.sqrt(k)
+        wq = quantize(w, 8, axis=0)
+        lr = svd_decompose(w, r, 8)
+
+        dt, _ = timed(lambda: ops.qmm(x, wq, use_kernel=True,
+                                      interpret=True), iters=1)
+        csv_row(f"kernel_qmm_interp_{name}", dt * 1e6,
+                f"M={m};K={k};N={n}")
+        dt, _ = timed(lambda: ops.lrmm(x, lr, use_kernel=True,
+                                       interpret=True), iters=1)
+        csv_row(f"kernel_lrmm_interp_{name}", dt * 1e6,
+                f"M={m};K={k};N={n};R={r}")
+        dt, _ = timed(lambda: ops.qmm(x, wq, use_kernel=False), iters=3)
+        csv_row(f"kernel_qmm_ref_{name}", dt * 1e6, "jnp-reference")
+
+        # modeled TPU latencies (what the roofline/DSE uses)
+        bp = tm.best_point(m, k, n, None, weight_wl=8)
+        cp = tm.best_point(m, k, n, r, weight_wl=8,
+                           engines=("cascade",))
+        csv_row(f"kernel_qmm_tpu_model_{name}", bp.latency_s * 1e6,
+                f"bound={'compute' if bp.compute_s >= bp.memory_s else 'memory'}")
+        csv_row(f"kernel_lrmm_tpu_model_{name}", cp.latency_s * 1e6,
+                f"bound={'compute' if cp.compute_s >= cp.memory_s else 'memory'};"
+                f"speedup_vs_dense={bp.latency_s / cp.latency_s:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

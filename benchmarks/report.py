@@ -1,0 +1,73 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline tables from the
+dry-run JSON cache. Usage:
+
+    PYTHONPATH=src python benchmarks/report.py [results/dryrun] > tables.md
+"""
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+from roofline import roofline_row  # noqa: E402
+
+
+def fmt_bytes(b):
+    return f"{b/2**30:.2f}"
+
+
+def main(out_dir="results/dryrun"):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+
+    oks = [r for r in recs if r.get("status") == "ok"]
+    skips = [r for r in recs if r.get("status") == "skipped"]
+
+    print("### Dry-run results (per (arch x shape x mesh) cell)\n")
+    print(f"{len(oks)} compiled cells, {len(skips)} documented skips, "
+          f"{sum(1 for r in recs if r.get('status') == 'error')} failures.\n")
+    print("| cell | chips | compile s | args GiB/dev | peak GiB/dev | "
+          "HLO TFLOP/dev | HBM GB/dev | coll GB/dev | top collective |")
+    print("|---|--:|--:|--:|--:|--:|--:|--:|---|")
+    for r in sorted(oks, key=lambda r: r["cell"]):
+        h = r["hlo_analysis"]
+        m = r["memory_analysis"]
+        top = max(h["collective_breakdown"],
+                  key=h["collective_breakdown"].get, default="-") \
+            if h["collective_breakdown"] else "-"
+        print(f"| {r['cell']} | {r['n_chips']} "
+              f"| {r['seconds']['compile']:.0f} "
+              f"| {fmt_bytes(m['argument_bytes_per_device'])} "
+              f"| {fmt_bytes(m['peak_bytes_per_device'])} "
+              f"| {h['flops_per_device']/1e12:.2f} "
+              f"| {h['mem_bytes_per_device']/1e9:.1f} "
+              f"| {h['collective_bytes_per_device']/1e9:.2f} "
+              f"| {top} |")
+    print()
+    if skips:
+        print("Skipped cells (DESIGN.md §5):\n")
+        for r in sorted(skips, key=lambda r: r["cell"]):
+            print(f"* `{r['cell']}` — {r['reason']}")
+        print()
+
+    print("### Roofline (single-pod baseline cells)\n")
+    print("| cell | compute s | memory s | collective s | dominant | "
+          "useful | roofline-MFU | fits 16 GiB |")
+    print("|---|--:|--:|--:|---|--:|--:|:--:|")
+    base = [r for r in oks
+            if "__single" in r["cell"] and r["cell"].count("__") == 2]
+    for r in sorted(base, key=lambda r: r["cell"]):
+        x = roofline_row(r)
+        print(f"| {x['cell']} | {x['t_compute_s']:.4g} "
+              f"| {x['t_memory_s']:.4g} | {x['t_collective_s']:.4g} "
+              f"| {x['dominant']} | {x['useful_ratio']:.2f} "
+              f"| {x['roofline_mfu']:.3f} "
+              f"| {'yes' if x['fits_16g'] else 'NO'} |")
+    print()
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

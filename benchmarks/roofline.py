@@ -1,0 +1,87 @@
+"""Roofline analysis over the dry-run cache (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape x mesh) cell:
+  compute    = HLO_FLOPs / peak            (per-chip numbers from the
+  memory     = HLO_bytes / HBM_bw           post-SPMD HLO — already /chip)
+  collective = collective_bytes / (links x link_bw)
+dominant term = the bottleneck; MODEL_FLOPS = 6·N_active·D (train) or
+2·N_active·D (inference fwd) + useful-compute ratio.
+"""
+import glob
+import json
+import os
+
+from common import RESULTS, csv_row
+
+PEAK_BF16 = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+ICI_LINKS = 4
+
+
+def roofline_row(rec):
+    hlo = rec["hlo_analysis"]
+    spec = rec["workload"]
+    chips = rec["n_chips"]
+    flops = hlo["flops_per_device"]
+    mem = hlo["mem_bytes_per_device"]
+    coll = hlo["collective_bytes_per_device"]
+
+    t_comp = flops / PEAK_BF16
+    t_mem = mem / HBM_BW
+    t_coll = coll / (ICI_BW * ICI_LINKS)
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dom = max(terms, key=terms.get)
+
+    tokens = spec["global_batch"] * (spec["seq_len"]
+                                     if spec["kind"] != "decode" else 1)
+    n_active = spec["active_params"]
+    mult = 6 if spec["kind"] == "train" else 2
+    model_flops = mult * n_active * tokens / chips  # per chip
+    useful = model_flops / max(flops, 1)
+    # roofline fraction: useful model FLOPs per second achievable vs peak
+    step_time = max(terms.values())
+    mfu = model_flops / step_time / PEAK_BF16 if step_time else 0.0
+    return {
+        "cell": rec["cell"],
+        "t_compute_s": t_comp, "t_memory_s": t_mem, "t_collective_s": t_coll,
+        "dominant": dom,
+        "model_flops_per_chip": model_flops,
+        "useful_ratio": useful,
+        "roofline_mfu": mfu,
+        "peak_gib": rec["memory_analysis"]["peak_bytes_per_device"] / 2**30,
+        "fits_16g": rec["memory_analysis"]["peak_bytes_per_device"]
+        < 16 * 2**30,
+    }
+
+
+def load_cells(out_dir=None, pattern="*.json"):
+    out_dir = out_dir or os.path.join(RESULTS, "dryrun")
+    recs = []
+    for f in sorted(glob.glob(os.path.join(out_dir, pattern))):
+        with open(f) as fh:
+            rec = json.load(fh)
+        if rec.get("status") == "ok":
+            recs.append(rec)
+    return recs
+
+
+def main():
+    recs = load_cells()
+    if not recs:
+        csv_row("roofline_no_dryrun_cache", 0.0,
+                "run launch/dryrun.py --all first")
+        return
+    for rec in recs:
+        r = roofline_row(rec)
+        csv_row(
+            f"roofline_{r['cell']}", max(r["t_compute_s"], r["t_memory_s"],
+                                         r["t_collective_s"]) * 1e6,
+            f"compute_s={r['t_compute_s']:.4g};memory_s={r['t_memory_s']:.4g};"
+            f"collective_s={r['t_collective_s']:.4g};dominant={r['dominant']};"
+            f"useful={r['useful_ratio']:.3f};mfu={r['roofline_mfu']:.3f};"
+            f"peak_gib={r['peak_gib']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

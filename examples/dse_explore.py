@@ -1,0 +1,54 @@
+"""Hardware-aware DSE walkthrough (paper §VII) on both platform models.
+
+Explores engine/tile configurations for the paper's 512x512x512 workload
+on the faithful ZCU111 model, then runs the TPU-model co-design loop over
+compression candidates and prints the accuracy-latency Pareto points.
+
+    PYTHONPATH=src python examples/dse_explore.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.hw import engine_model as em                       # noqa: E402
+from repro.hw import tpu_model as tm                          # noqa: E402
+
+
+def main():
+    m = k = n = 512
+    r = 128
+
+    print("== ZCU111 (paper eqs. 12-19), 512^3 W4A8, rank 128 ==")
+    pts = em.explore(m, k, n, r, weight_wl=4)
+    for kind in ("baseline", "single", "cascade"):
+        front = em.pareto_front([p for p in pts if p.kind == kind])
+        best = min(front, key=lambda p: p.latency_cycles)
+        print(f"  {kind:8s}: best {best.latency_cycles/200e3:.2f} ms "
+              f"@ {best.bandwidth:.0f} bits/cyc, DSP {best.dsp}, "
+              f"BRAM {best.bram}  (front: {len(front)} pts)")
+
+    print("== TPU v5e model, same workload ==")
+    for bw_scale, regime in ((1.0, "full-bandwidth"),
+                             (0.25, "quarter-bandwidth")):
+        row = []
+        for kind, engines in (("baseline", ("baseline",)),
+                              ("single", ("single",)),
+                              ("cascade", ("cascade",))):
+            p = tm.best_point(m, k, n, r, weight_wl=4,
+                              hbm_bw=tm.HBM_BW * bw_scale, engines=engines)
+            row.append(f"{kind} {p.latency_s*1e6:.2f}us"
+                       f"[{'C' if p.compute_s >= p.memory_s else 'M'}]")
+        print(f"  {regime:18s}: " + "  ".join(row))
+
+    print("== per-layer engine choice for an OPUS-MT-like stack ==")
+    layers = [("qkv", 512, 512, 128), ("ffn_up", 512, 2048, 192),
+              ("ffn_dn", 2048, 512, 192)]
+    for name, kk, nn, rr in layers:
+        best = tm.best_point(512, kk, nn, rr, weight_wl=4)
+        print(f"  {name:8s}: {best.kind:8s} {best.latency_s*1e6:8.2f} us  "
+              f"blocks {best.config['blocks']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,104 @@
+"""End-to-end driver: train a ~100M-parameter LM for a few hundred steps
+on the synthetic Markov stream, with checkpointing and fault tolerance.
+
+By default this trains a 12-layer / d=768 decoder (~103M params) for 200
+steps — sized for a CPU session (use --steps 500 on a beefier host). The
+same entry point scales to the pod configs via --arch.
+
+    PYTHONPATH=src python examples/train_lm.py [--tiny]
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax                                                    # noqa: E402
+import numpy as np                                            # noqa: E402
+
+from repro.configs.base import ModelConfig                    # noqa: E402
+from repro.data.pipeline import LatentMarkovTask, shard_batch  # noqa: E402
+from repro.models import transformer as tfm                   # noqa: E402
+from repro.optim import adamw                                 # noqa: E402
+from repro.checkpoint import ckpt as ckpt_lib                 # noqa: E402
+from repro.runtime.fault import ResilientLoop                 # noqa: E402
+
+
+def lm_100m() -> ModelConfig:
+    return ModelConfig(
+        name="lm-100m", layout="dense", num_layers=12, d_model=768,
+        num_heads=12, num_kv_heads=4, d_ff=2048, vocab_size=8192,
+        mlp_act="swiglu", dtype="float32", remat=False, loss_chunk=512,
+    )
+
+
+def lm_tiny() -> ModelConfig:
+    return ModelConfig(
+        name="lm-tiny", layout="dense", num_layers=4, d_model=256,
+        num_heads=4, num_kv_heads=2, d_ff=1024, vocab_size=2048,
+        mlp_act="swiglu", dtype="float32", remat=False, loss_chunk=256,
+    )
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="4L/256d variant for quick demos")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/itera_lm_ckpt")
+    args = ap.parse_args(argv)
+
+    cfg = lm_tiny() if args.tiny else lm_100m()
+    n_params = cfg.param_count()
+    print(f"[train_lm] {cfg.name}: {n_params/1e6:.1f}M params, "
+          f"{args.steps} steps of batch {args.batch} x seq {args.seq}")
+
+    task = LatentMarkovTask(cfg.vocab_size, seed=0, branching=8, classes=64)
+    key = jax.random.PRNGKey(0)
+    params = tfm.init_params(key, cfg)
+    opt_cfg = adamw.AdamWConfig(lr=args.lr, total_steps=args.steps,
+                                warmup_steps=max(args.steps // 10, 5))
+    opt = adamw.init(params, opt_cfg)
+
+    @jax.jit
+    def train_step(params, opt, batch):
+        (loss, m), g = jax.value_and_grad(tfm.loss_fn, has_aux=True)(
+            params, batch, cfg)
+        p, o, om = adamw.update(g, opt, params, opt_cfg)
+        return p, o, {"loss": loss, **om}
+
+    def step_fn(state, step):
+        p, o, metrics = train_step(state["params"], state["opt"],
+                                   task.batch(step, args.batch, args.seq))
+        if step % 20 == 0:
+            print(f"  step {step:4d}  loss {float(metrics['loss']):.4f}  "
+                  f"lr {float(metrics['lr']):.2e}", flush=True)
+        return {"params": p, "opt": o}, metrics
+
+    def save_fn(state, step):
+        ckpt_lib.save(args.ckpt_dir, step, state, async_save=True)
+
+    def restore_fn():
+        like = jax.tree_util.tree_map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+        return ckpt_lib.restore(args.ckpt_dir, like)
+
+    state = {"params": params, "opt": opt}
+    loop = ResilientLoop(step_fn, save_fn, restore_fn, ckpt_every=100)
+    state, _ = loop.run(state, 0, args.steps)
+
+    losses = loop.report.losses
+    k = max(len(losses) // 10, 1)
+    print(f"[train_lm] loss: first {np.mean(losses[:k]):.4f} -> "
+          f"last {np.mean(losses[-k:]):.4f} "
+          f"(entropy floor {task.entropy_floor():.4f})")
+    ckpt_lib.save(args.ckpt_dir, args.steps, state)
+    print(f"[train_lm] checkpoint at {args.ckpt_dir}")
+    return losses
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""phi3-medium-14b [dense] — RoPE + SwiGLU + GQA kv=10.
+[arXiv:2404.14219; unverified]"""
+from repro.configs.base import ModelConfig
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="phi3-medium-14b",
+        layout="dense",
+        num_layers=40,
+        d_model=5120,
+        num_heads=40,
+        num_kv_heads=10,
+        d_ff=17920,
+        vocab_size=100352,
+        mlp_act="swiglu",
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="phi3-medium-14b-smoke",
+        layout="dense",
+        num_layers=2,
+        d_model=80,
+        num_heads=4,
+        num_kv_heads=2,
+        d_ff=256,
+        vocab_size=256,
+        mlp_act="swiglu",
+        dtype="float32",
+        remat=False,
+    )

@@ -1,0 +1,31 @@
+"""ITERA-LLM core: quantization, iterative SVD decomposition, SRA, driver."""
+from repro.core.quant import (
+    QuantizedTensor,
+    fake_quant,
+    quant_linear_ref,
+    quantize,
+    dequantize,
+    qmax,
+)
+from repro.core.itera import (
+    LowRankQ,
+    itera_decompose,
+    svd_decompose,
+    reconstruction_error,
+)
+from repro.core.sra import SRAResult, sra_allocate, uniform_allocation
+from repro.core.compress import (
+    CompressionConfig,
+    CompressionReport,
+    compress_params,
+    eligible_linears,
+    sra_eval_closure,
+)
+
+__all__ = [
+    "QuantizedTensor", "fake_quant", "quant_linear_ref", "quantize",
+    "dequantize", "qmax", "LowRankQ", "itera_decompose", "svd_decompose",
+    "reconstruction_error", "SRAResult", "sra_allocate", "uniform_allocation",
+    "CompressionConfig", "CompressionReport", "compress_params",
+    "eligible_linears", "sra_eval_closure",
+]

@@ -1,0 +1,194 @@
+"""ITERA-LLM core: SVD-based *iterative* tensor decomposition (paper Alg. 1).
+
+The classic baseline (paper §III-A) decomposes W ≈ (U_r Σ_r^½)(Σ_r^½ V_rᵀ)
+= W1 W2 in one shot and quantizes afterwards. Algorithm 1 instead runs a
+refinement loop: at step k it takes the best rank-1 approximation of the
+*current residual*, quantizes that rank-1 pair, and subtracts the QUANTIZED
+product from the residual — so every later iteration sees (and compensates)
+the quantization error of all earlier ones. Outliers dominate the residual
+Frobenius norm and therefore get captured first.
+
+Quantization granularity: one scale per singular vector (the paper's
+"vector-wise" scheme): W1' is (K, r) with a (1, r) scale, W2' is (r, N)
+with an (r, 1) scale.
+
+Two rank-1 engines are provided:
+  * method="svd"   — exact jnp.linalg.svd of the residual each step
+                     (faithful to the listing; O(r · svd(K,N)))
+  * method="power" — warm-started power iteration (default; numerically
+                     equivalent top singular pair at a fraction of the cost,
+                     validated against "svd" in tests)
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import QuantizedTensor, qmax
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class LowRankQ:
+    """Quantized rank-r factorization W ≈ dequant(w1) @ dequant(w2).
+
+    w1: (K, r) codes, scale (1, r)   — one scale per left singular vector
+    w2: (r, N) codes, scale (r, 1)   — one scale per right singular vector
+    """
+
+    w1: QuantizedTensor
+    w2: QuantizedTensor
+
+    @property
+    def rank(self) -> int:
+        return self.w1.shape[1]
+
+    def dequant_product(self) -> Array:
+        return self.w1.dequant() @ self.w2.dequant()
+
+    def apply(self, x: Array) -> Array:
+        """y = (x @ W1) @ W2 without reconstructing W (paper eq. 3)."""
+        return (x @ self.w1.dequant()) @ self.w2.dequant()
+
+    def storage_bits(self) -> int:
+        return self.w1.storage_bits() + self.w2.storage_bits()
+
+    def nops(self, batch_m: int) -> int:
+        """MACs for a batch of M rows: M·K·r + M·r·N (paper's NOps metric)."""
+        k, r = map(int, self.w1.shape)
+        _, n = map(int, self.w2.shape)
+        return batch_m * r * (k + n)
+
+
+jax.tree_util.register_pytree_with_keys(
+    LowRankQ,
+    lambda t: ((("w1", t.w1), ("w2", t.w2)), None),
+    lambda aux, ch: LowRankQ(*ch),
+)
+
+
+def _rank1_svd(r_mat: Array, _v0: Array):
+    """Exact top singular triple via full SVD (paper listing: SVD(R)_1)."""
+    u, s, vt = jnp.linalg.svd(r_mat, full_matrices=False)
+    return u[:, 0], s[0], vt[0, :]
+
+
+def _rank1_power(r_mat: Array, v0: Array, iters: int = 24):
+    """Top singular triple via power iteration on RᵀR, warm-started at v0."""
+
+    def body(_, v):
+        u = r_mat @ v
+        u = u / (jnp.linalg.norm(u) + 1e-30)
+        v = r_mat.T @ u
+        return v / (jnp.linalg.norm(v) + 1e-30)
+
+    v = jax.lax.fori_loop(0, iters, body, v0)
+    u = r_mat @ v
+    s = jnp.linalg.norm(u)
+    u = u / (s + 1e-30)
+    return u, s, v
+
+
+def _quant_vec(x: Array, wl: int):
+    """Single-scale symmetric quantization of one singular vector."""
+    m = qmax(wl)
+    absmax = jnp.max(jnp.abs(x))
+    scale = jnp.where(absmax > 0, absmax / m, 1.0)
+    q = jnp.clip(jnp.round(x / scale), -m, m).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+@partial(jax.jit, static_argnames=("rank", "wl", "method", "power_iters"))
+def itera_decompose(
+    w: Array,
+    rank: int,
+    wl: int,
+    *,
+    method: str = "power",
+    power_iters: int = 24,
+    seed: int = 0,
+) -> LowRankQ:
+    """Paper Algorithm 1: SVD-based iterative tensor decomposition.
+
+    Args:
+      w: (K, N) fp weight matrix.
+      rank: target decomposition rank r.
+      wl: weight word length (4 / 6 / 8).
+      method: "power" (default) or "svd" rank-1 engine.
+    Returns LowRankQ with int8-carried codes and fp32 per-vector scales.
+    """
+    w = w.astype(jnp.float32)
+    k_dim, n_dim = w.shape
+    rank1 = {"svd": _rank1_svd, "power": partial(_rank1_power, iters=power_iters)}[
+        method
+    ]
+
+    def step(carry, key):
+        resid = carry
+        v0 = jax.random.normal(key, (n_dim,), jnp.float32)
+        u, s, v = rank1(resid, v0 / jnp.linalg.norm(v0))
+        sq = jnp.sqrt(jnp.maximum(s, 0.0))
+        w1q, s1 = _quant_vec(u * sq, wl)           # (K,)  codes + scalar scale
+        w2q, s2 = _quant_vec(v * sq, wl)           # (N,)
+        # Residual update uses the QUANTIZED product — the error-compensation
+        # mechanism at the heart of the paper.
+        resid = resid - (w1q.astype(jnp.float32) * s1)[:, None] * (
+            w2q.astype(jnp.float32) * s2
+        )[None, :]
+        return resid, (w1q, s1, w2q, s2)
+
+    # fold_in (not split): key k is independent of the requested rank, so
+    # a rank-r decomposition is exactly the first r steps of a full-rank
+    # one (prefix consistency — used by truncate()).
+    keys = jax.vmap(lambda k: jax.random.fold_in(jax.random.PRNGKey(seed),
+                                                 k))(jnp.arange(rank))
+    _, (w1_cols, s1s, w2_rows, s2s) = jax.lax.scan(step, w, keys)
+
+    w1 = QuantizedTensor(w1_cols.T, s1s[None, :], wl, axis=0)      # (K, r)
+    w2 = QuantizedTensor(w2_rows, s2s[:, None], wl, axis=1)        # (r, N)
+    return LowRankQ(w1, w2)
+
+
+@partial(jax.jit, static_argnames=("rank", "wl"))
+def svd_decompose(w: Array, rank: int, wl: int) -> LowRankQ:
+    """Baseline (paper §VIII-B): one-shot truncated SVD, then vector-wise
+    quantization of the produced factors. Same storage format as ITERA so
+    comparisons are apples-to-apples."""
+    w = w.astype(jnp.float32)
+    u, s, vt = jnp.linalg.svd(w, full_matrices=False)
+    sq = jnp.sqrt(jnp.maximum(s[:rank], 0.0))
+    w1f = u[:, :rank] * sq[None, :]                # (K, r)
+    w2f = vt[:rank, :] * sq[:, None]               # (r, N)
+
+    m = qmax(wl)
+    s1 = jnp.maximum(jnp.max(jnp.abs(w1f), axis=0, keepdims=True), 1e-30) / m
+    s2 = jnp.maximum(jnp.max(jnp.abs(w2f), axis=1, keepdims=True), 1e-30) / m
+    w1q = jnp.clip(jnp.round(w1f / s1), -m, m).astype(jnp.int8)
+    w2q = jnp.clip(jnp.round(w2f / s2), -m, m).astype(jnp.int8)
+    return LowRankQ(
+        QuantizedTensor(w1q, s1.astype(jnp.float32), wl, axis=0),
+        QuantizedTensor(w2q, s2.astype(jnp.float32), wl, axis=1),
+    )
+
+
+def truncate(lr: LowRankQ, rank: int) -> LowRankQ:
+    """First-r-components decomposition. For ITERA this equals running
+    Algorithm 1 with target rank r (greedy prefix consistency); for the
+    SVD baseline it equals truncated SVD + vector-wise quantization."""
+    return LowRankQ(
+        QuantizedTensor(lr.w1.values[:, :rank], lr.w1.scale[:, :rank],
+                        lr.w1.wl, lr.w1.axis),
+        QuantizedTensor(lr.w2.values[:rank, :], lr.w2.scale[:rank, :],
+                        lr.w2.wl, lr.w2.axis),
+    )
+
+
+def reconstruction_error(w: Array, lr: LowRankQ) -> Array:
+    """Relative Frobenius reconstruction error ‖W − W1'W2'‖_F / ‖W‖_F."""
+    return jnp.linalg.norm(w - lr.dequant_product()) / (
+        jnp.linalg.norm(w) + 1e-30
+    )

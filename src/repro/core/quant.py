@@ -1,0 +1,134 @@
+"""Fixed-point quantization schemes (paper §III, §VIII-B).
+
+The paper uses symmetric fixed-point quantization with notation WxAy
+(weight word length x, activation word length y). Quantization is applied
+*vector-wise* ("quantization is applied vector-wise in the produced matrix"
+— §VIII-B) which on a (K, N) weight matrix means one scale per output
+column (per-channel), and on the SVD factors one scale per rank-column /
+rank-row.
+
+On TPU there is no native int4/int6 datapath: values are stored in an int8
+carrier clamped to the word-length range; the *storage* cost used for
+compression-ratio accounting is the true word length (packed int4 / int6
+in HBM — see core/compress.py). The MXU computes int8xint8->int32.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def qmax(wl: int) -> int:
+    """Largest magnitude representable by a symmetric signed `wl`-bit code."""
+    if wl < 2:
+        raise ValueError(f"word length must be >= 2, got {wl}")
+    return 2 ** (wl - 1) - 1
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantizedTensor:
+    """A symmetric per-axis quantized tensor.
+
+    values : integer codes in an int8 carrier (|v| <= qmax(wl))
+    scale  : fp32 scale, broadcastable against `values` along `axis`
+    wl     : word length in bits (4, 6, 8) — the *storage* width
+    axis   : axis along which scales are shared (the reduction axis of the
+             matmul this tensor feeds); scale shape has 1 there.
+    """
+
+    values: Array
+    scale: Array
+    wl: int
+    axis: int
+
+    @property
+    def shape(self):
+        return self.values.shape
+
+    def dequant(self) -> Array:
+        return self.values.astype(jnp.float32) * self.scale
+
+    def storage_bits(self) -> int:
+        """True HBM storage cost in bits (packed sub-8-bit + fp32 scales)."""
+        n = 1
+        for d in self.values.shape:
+            n *= int(d)
+        ns = 1
+        for d in self.scale.shape:
+            ns *= int(d)
+        return n * self.wl + ns * 32
+
+
+jax.tree_util.register_pytree_with_keys(
+    QuantizedTensor,
+    lambda q: ((("values", q.values), ("scale", q.scale)), (q.wl, q.axis)),
+    lambda aux, ch: QuantizedTensor(ch[0], ch[1], aux[0], aux[1]),
+)
+
+
+@partial(jax.jit, static_argnames=("wl", "axis"))
+def quantize(x: Array, wl: int, axis: int = 0) -> QuantizedTensor:
+    """Symmetric per-vector quantization of `x` along `axis`.
+
+    `axis` is the reduction axis: scales are shared along it (one scale per
+    remaining index), matching the paper's vector-wise scheme.
+    """
+    m = qmax(wl)
+    absmax = jnp.max(jnp.abs(x), axis=axis, keepdims=True)
+    scale = jnp.where(absmax > 0, absmax / m, 1.0).astype(jnp.float32)
+    q = jnp.clip(jnp.round(x / scale), -m, m).astype(jnp.int8)
+    return QuantizedTensor(q, scale, wl, axis)
+
+
+def dequantize(q: QuantizedTensor) -> Array:
+    return q.dequant()
+
+
+@partial(jax.jit, static_argnames=("wl", "axis"))
+def fake_quant(x: Array, wl: int, axis: int = 0) -> Array:
+    """Quantize-dequantize in one go (used for activation quantization and
+    for emulating the quantized model in fp math)."""
+    m = qmax(wl)
+    absmax = jnp.max(jnp.abs(x), axis=axis, keepdims=True)
+    scale = jnp.where(absmax > 0, absmax / m, 1.0)
+    return jnp.clip(jnp.round(x / scale), -m, m) * scale
+
+
+@partial(jax.jit, static_argnames=("w_wl", "a_wl"))
+def quant_linear_ref(x: Array, w: Array, w_wl: int, a_wl: int) -> Array:
+    """Reference WxAy linear layer: y = Qa(x) @ Qw(w).
+
+    Weight scales are per output channel (axis=0 of the (K, N) matrix is the
+    reduction axis); activation scales per token row.
+    """
+    qw = quantize(w, w_wl, axis=0)
+    xq = fake_quant(x, a_wl, axis=-1)
+    return xq @ qw.dequant()
+
+
+def pack_int4(codes: Array) -> Array:
+    """Pack int8-carried int4 codes into bytes (two nibbles per byte).
+
+    Storage-layer utility: models the HBM layout for W4. The last dim must
+    be even. Values must be in [-8, 7].
+    """
+    lo = codes[..., 0::2] & 0x0F
+    hi = (codes[..., 1::2] & 0x0F) << 4
+    return (lo | hi).astype(jnp.int8)
+
+
+def unpack_int4(packed: Array) -> Array:
+    """Inverse of pack_int4 (sign-extends each nibble)."""
+    lo = (packed & 0x0F).astype(jnp.int8)
+    hi = ((packed.astype(jnp.int32) >> 4) & 0x0F).astype(jnp.int8)
+
+    def sext(v):
+        return jnp.where(v >= 8, v - 16, v)
+
+    out = jnp.stack([sext(lo), sext(hi)], axis=-1)
+    return out.reshape(*packed.shape[:-1], packed.shape[-1] * 2)

@@ -1,0 +1,152 @@
+"""Data pipeline: deterministic synthetic token streams, device sharding,
+and a double-buffered prefetcher.
+
+Two generators:
+  * `hash_stream`   — uniform pseudo-random tokens, fully deterministic in
+    (seed, step); used by dry-runs and throughput benches.
+  * `markov_stream` — tokens from a seeded sparse Markov chain. This task
+    is *learnable* (a trained model reaches far-below-uniform loss), which
+    is what the SRA calibration metric and the compression-quality Pareto
+    benchmarks need: quality differences between compression methods are
+    invisible on pure noise.
+
+For the modality-frontend archs the same streams are lifted to embedding
+space by a frozen random projection table ("precomputed frame/patch
+embeddings" per the stub contract).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.runtime.shardctx import get_mesh, logical_spec
+
+
+def hash_batch(seed: int, step: int, batch: int, seq: int, vocab: int):
+    """Deterministic uniform tokens for (seed, step)."""
+    key = jax.random.fold_in(jax.random.fold_in(jax.random.PRNGKey(seed),
+                                                step), 0xDA7A)
+    toks = jax.random.randint(key, (batch, seq + 1), 0, vocab, jnp.int32)
+    return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+
+class MarkovTask:
+    """Seeded sparse Markov chain over `vocab` states (numpy, host-side)."""
+
+    def __init__(self, vocab: int, seed: int = 0, branching: int = 4):
+        rng = np.random.default_rng(seed)
+        self.vocab = vocab
+        self.succ = rng.integers(0, vocab, size=(vocab, branching))
+        logits = rng.standard_normal((vocab, branching))
+        e = np.exp(logits - logits.max(-1, keepdims=True))
+        self.probs = e / e.sum(-1, keepdims=True)
+
+    def batch(self, step: int, batch: int, seq: int):
+        rng = np.random.default_rng((hash((step, 0xC0FFEE)) & 0x7FFFFFFF))
+        toks = np.empty((batch, seq + 1), np.int32)
+        toks[:, 0] = rng.integers(0, self.vocab, size=batch)
+        for t in range(seq):
+            cur = toks[:, t]
+            choice = (rng.random(batch)[:, None] >
+                      np.cumsum(self.probs[cur], -1)).sum(-1)
+            choice = np.minimum(choice, self.probs.shape[1] - 1)
+            toks[:, t + 1] = self.succ[cur, choice]
+        return {"tokens": jnp.asarray(toks[:, :-1]),
+                "labels": jnp.asarray(toks[:, 1:])}
+
+    def entropy_floor(self) -> float:
+        """Mean conditional entropy (nats) — the best achievable loss."""
+        p = self.probs
+        return float(-(p * np.log(p)).sum(-1).mean())
+
+
+class LatentMarkovTask(MarkovTask):
+    """Markov chain whose transition structure factors through `classes`
+    latent classes: successor distribution depends only on class(token).
+
+    The optimal predictor therefore has intrinsic rank ~= classes — the
+    regime real language models sit in (decaying weight spectra), and the
+    reason SVD compression works on OPUS-MT at all (DESIGN.md §7). Trained
+    proxies on this task develop low-rank-compressible weights, unlike
+    flat-spectrum uniform chains.
+    """
+
+    def __init__(self, vocab: int, seed: int = 0, branching: int = 4,
+                 classes: int = 16):
+        rng = np.random.default_rng(seed)
+        self.vocab = vocab
+        self.classes = classes
+        cls_succ = rng.integers(0, classes, size=(classes, branching))
+        logits = rng.standard_normal((classes, branching))
+        e = np.exp(logits - logits.max(-1, keepdims=True))
+        cls_probs = e / e.sum(-1, keepdims=True)
+        # per-token successor = a fixed representative of the target class
+        reps = rng.integers(0, vocab // classes, size=(classes, branching))
+        tok_cls = np.arange(vocab) % classes
+        self.succ = np.empty((vocab, branching), np.int64)
+        self.probs = np.empty((vocab, branching))
+        for t in range(vocab):
+            c = tok_cls[t]
+            self.succ[t] = cls_succ[c] + classes * reps[c]
+            self.probs[t] = cls_probs[c]
+        self.succ = np.clip(self.succ, 0, vocab - 1)
+
+
+def lift_to_embeddings(batch, table: jax.Array):
+    """Frontend stub: replace int tokens with precomputed embeddings."""
+    emb = jnp.take(table, batch["tokens"], axis=0)
+    return {"inputs_embeds": emb, "labels": batch["labels"]}
+
+
+def shard_batch(batch, mesh=None):
+    """Place a host batch onto the mesh (batch dim over pod+data axes)."""
+    mesh = mesh or get_mesh()
+    if mesh is None:
+        return batch
+
+    def put(x):
+        names = ["batch"] + [None] * (x.ndim - 1)
+        s = jax.sharding.NamedSharding(mesh, logical_spec(names, mesh))
+        return jax.device_put(x, s)
+
+    return jax.tree_util.tree_map(put, batch)
+
+
+class Prefetcher:
+    """Background-thread prefetch of `make(step)` batches (depth-bounded)."""
+
+    def __init__(self, make, start_step: int = 0, depth: int = 2):
+        self._make = make
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._step = start_step
+
+        def worker():
+            s = start_step
+            while not self._stop.is_set():
+                try:
+                    self._q.put((s, make(s)), timeout=0.5)
+                    s += 1
+                except queue.Full:
+                    continue
+
+        self._t = threading.Thread(target=worker, daemon=True)
+        self._t.start()
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        while True:
+            try:
+                return self._q.get(timeout=1.0)
+            except queue.Empty:
+                if self._stop.is_set():
+                    raise StopIteration
+
+    def close(self):
+        self._stop.set()

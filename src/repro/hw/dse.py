@@ -1,0 +1,132 @@
+"""Hardware-aware Design Space Exploration (paper §VII).
+
+The co-design loop:
+  1. Model compression sweep (method x word length x rank budget) ->
+     (quality, compression ratio, NOps) Pareto candidates;
+  2. hardware-aware pruning: configurations whose engine working set
+     exceeds platform resources are dropped;
+  3. per candidate, pick the lowest-latency engine/tile per layer and sum
+     -> (quality, latency) design points; return the Pareto front.
+
+Works against either platform model:
+  platform="zcu111" -> hw/engine_model (faithful paper reproduction)
+  platform="tpu"    -> hw/tpu_model (deployed system; bandwidth scaling
+                       models the paper's memory-bound regime)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+from repro.hw import engine_model as em
+from repro.hw import tpu_model as tm
+
+
+@dataclasses.dataclass
+class LayerShape:
+    name: str
+    k: int
+    n: int
+    rank: int | None = None     # None -> dense/quant-only
+
+
+@dataclasses.dataclass
+class DesignPoint:
+    label: str
+    quality: float
+    latency: float              # seconds (tpu) or cycles (zcu111)
+    compression_ratio: float
+    nops: float
+    per_layer: list
+
+
+def model_layers_from_report(report) -> list:
+    """LayerShape list from a core.compress CompressionReport."""
+    out = []
+    for lr in report.layers:
+        k, n = lr.shape[-2], lr.shape[-1]
+        mult = lr.shape[0] if len(lr.shape) == 3 else 1
+        for i in range(mult):
+            out.append(LayerShape(f"{lr.path}[{i}]" if mult > 1 else lr.path,
+                                  k, n, lr.rank))
+    return out
+
+
+def total_latency_tpu(layers: Sequence[LayerShape], batch_m: int, *,
+                      weight_wl: int, bw_scale: float = 1.0,
+                      engines=("baseline", "single", "cascade")):
+    """Sum of per-layer best-engine latencies on the TPU model."""
+    total = 0.0
+    chosen = []
+    for l in layers:
+        p = tm.best_point(batch_m, l.k, l.n, l.rank, weight_wl=weight_wl,
+                          hbm_bw=tm.HBM_BW * bw_scale, engines=engines)
+        if p is None:
+            return None, []
+        total += p.latency_s
+        chosen.append((l.name, p.kind, p.latency_s, p.config))
+    return total, chosen
+
+
+def total_latency_zcu111(layers: Sequence[LayerShape], batch_m: int, *,
+                         weight_wl: int, bw_bits_per_cycle=None):
+    """Per-layer best engine under ZCU111 resources (paper platform)."""
+    plat = dict(em.ZCU111)
+    if bw_bits_per_cycle is not None:
+        plat["offchip_bits_per_cycle"] = bw_bits_per_cycle
+    total = 0.0
+    chosen = []
+    for l in layers:
+        pts = em.explore(batch_m, l.k, l.n, l.rank, weight_wl=weight_wl)
+        pts = [p for p in pts
+               if p.bandwidth <= plat["offchip_bits_per_cycle"]]
+        if not pts:
+            return None, []
+        best = min(pts, key=lambda p: p.latency_cycles)
+        total += best.latency_cycles
+        chosen.append((l.name, best.kind, best.latency_cycles, best.config))
+    return total, chosen
+
+
+def pareto(points: Sequence[DesignPoint]) -> list:
+    """Upper-left front: max quality, min latency."""
+    pts = sorted(points, key=lambda p: (p.latency, -p.quality))
+    front, best_q = [], -float("inf")
+    for p in pts:
+        if p.quality > best_q:
+            front.append(p)
+            best_q = p.quality
+    return front
+
+
+def co_design(
+    candidates: Sequence[dict],
+    quality_fn: Callable[[dict], float],
+    layers_fn: Callable[[dict], Sequence[LayerShape]],
+    *,
+    batch_m: int = 512,
+    platform: str = "tpu",
+    bw_scale: float = 1.0,
+) -> list:
+    """Full paper-§VII loop. `candidates` are compression configs (dicts
+    with method/wl/rank info); quality_fn evaluates the calibration metric;
+    layers_fn yields the layer shapes+ranks for the latency model."""
+    points = []
+    for cand in candidates:
+        q = quality_fn(cand)
+        layers = list(layers_fn(cand))
+        if platform == "tpu":
+            lat, chosen = total_latency_tpu(
+                layers, batch_m, weight_wl=cand["wl"], bw_scale=bw_scale,
+                engines=cand.get("engines",
+                                 ("baseline", "single", "cascade")))
+        else:
+            lat, chosen = total_latency_zcu111(layers, batch_m,
+                                               weight_wl=cand["wl"])
+        if lat is None:
+            continue
+        points.append(DesignPoint(
+            label=cand.get("label", str(cand)), quality=q, latency=lat,
+            compression_ratio=cand.get("ratio", 0.0),
+            nops=cand.get("nops", 0.0), per_layer=chosen))
+    return pareto(points)

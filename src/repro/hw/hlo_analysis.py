@@ -1,0 +1,318 @@
+"""HLO-text cost analyzer for the dry-run roofline.
+
+Why not `compiled.cost_analysis()`? XLA's aggregate counts each while-loop
+*body once*, but scan-over-layers puts ~all of a model inside a while loop
+with known_trip_count = num_layers — the aggregate under-counts FLOPs and
+collective bytes by that factor. This analyzer walks the post-SPMD HLO
+call graph and multiplies every computation's cost by the product of
+enclosing trip counts (parsed from `backend_config known_trip_count`).
+
+Cost model (per device — post-SPMD HLO is the per-device program):
+  * flops            — dot/convolution only: 2·prod(result)·prod(contract).
+                       Elementwise FLOPs are ignored (≪1% for LLM steps;
+                       DESIGN.md §8). Counted *inside* fusions too.
+  * mem_bytes        — Σ over non-fused ops of (operand + result bytes);
+                       fusions count as single ops (their internals stay
+                       on-chip); slice/gather/dynamic-update-slice ops are
+                       charged at slice size, NOT full-operand size (else
+                       every scan iteration would be billed for the whole
+                       (L, ...) stacked weight tensor it slices from).
+                       This is the HBM-traffic proxy.
+  * collective_bytes — Σ operand bytes of all-reduce / all-gather /
+                       reduce-scatter / all-to-all / collective-permute /
+                       *-start variants (counted once per executed op).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of a type string (handles tuples)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str):
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None, []
+    dims = [int(d) for d in m.group(2).split(",") if d]
+    return m.group(1), dims
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    operands: list
+    attrs: str
+
+
+@dataclasses.dataclass
+class Costs:
+    flops: float = 0.0
+    mem_bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collective_ops: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    mem_by_op: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+
+    def add(self, other, mult=1.0):
+        self.flops += other.flops * mult
+        self.mem_bytes += other.mem_bytes * mult
+        self.collective_bytes += other.collective_bytes * mult
+        for k, v in other.collective_ops.items():
+            self.collective_ops[k] += v * mult
+        for k, v in other.mem_by_op.items():
+            self.mem_by_op[k] += v * mult
+
+    def note_mem(self, op: str, b: float):
+        self.mem_bytes += b
+        self.mem_by_op[op] += b
+
+
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+)$")
+
+
+def _parse_instr(line: str):
+    m = _INSTR_RE.match(line)
+    if not m:
+        return None
+    name, rest = m.group(1), m.group(2)
+    # type is either "(...)" tuple or "dtype[dims]{layout}"
+    if rest.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rest):
+            depth += ch == "("
+            depth -= ch == ")"
+            if depth == 0:
+                break
+        type_str, rest2 = rest[: i + 1], rest[i + 1:].strip()
+    else:
+        sp = rest.find(" ")
+        type_str, rest2 = rest[:sp], rest[sp + 1:].strip()
+    om = re.match(r"([\w\-]+)\(", rest2)
+    if not om:
+        return None
+    opcode = om.group(1)
+    # operands: %names inside the first (...) group
+    depth = 0
+    args_end = len(rest2)
+    for i in range(om.end() - 1, len(rest2)):
+        depth += rest2[i] == "("
+        depth -= rest2[i] == ")"
+        if depth == 0:
+            args_end = i
+            break
+    args = rest2[om.end(): args_end]
+    operands = re.findall(r"%([\w.\-]+)", args)
+    attrs = rest2[args_end:]
+    return Instr(name, type_str, opcode, operands, attrs)
+
+
+class HloModule:
+    def __init__(self, text: str):
+        self.computations: dict[str, list[Instr]] = {}
+        self.entry: str | None = None
+        self._parse(text)
+        # symbol table per computation: instr name -> type string
+        self.symbols = {
+            cname: {i.name: i.type_str for i in instrs}
+            for cname, instrs in self.computations.items()
+        }
+        # computation parameters also have types (from the header), add them
+        self._memo: dict[str, Costs] = {}
+
+    def _parse(self, text: str):
+        cur = None
+        header_re = re.compile(r"^(ENTRY\s+)?%([\w.\-]+)\s*\((.*)\)\s*->")
+        for raw in text.splitlines():
+            if not raw.strip():
+                continue
+            if not raw.startswith(" "):
+                h = header_re.match(raw)
+                if h:
+                    cur = h.group(2)
+                    self.computations[cur] = []
+                    if h.group(1):
+                        self.entry = cur
+                    # parameters: "pname: type" pairs
+                    params = h.group(3)
+                    for pm in re.finditer(
+                            r"([\w.\-]+):\s*((?:\([^)]*\)|[\w\[\]{},]+))",
+                            params):
+                        self.computations[cur].append(
+                            Instr(pm.group(1), pm.group(2), "parameter", [],
+                                  ""))
+                continue
+            if cur is None:
+                continue
+            ins = _parse_instr(raw)
+            if ins:
+                self.computations[cur].append(ins)
+
+    # ------------------------------------------------------------- costs --
+    def _operand_bytes(self, comp: str, ins: Instr) -> int:
+        table = self.symbols[comp]
+        return sum(_shape_bytes(table.get(o, "")) for o in ins.operands)
+
+    def _op_mem(self, comp: str, ins: Instr) -> float:
+        """HBM traffic of one op. Slice-like ops only touch the slice:
+        charging their full operands would bill every scan iteration for
+        the whole (L, ...) stacked weight tensor it slices from."""
+        table = self.symbols[comp]
+        rb = _shape_bytes(ins.type_str)
+        obs = [_shape_bytes(table.get(o, "")) for o in ins.operands]
+        tag = ins.name + "|" + ins.opcode
+        if "dynamic-update-slice" in tag:
+            # in-place region update: traffic = update read + write
+            small = [b for b in obs if b < rb]
+            return 2 * (max(small) if small else rb) + 16
+        if ("dynamic-slice" in tag or "gather" in tag
+                or ins.opcode in ("dynamic-slice", "gather", "slice")):
+            return rb + sum(b for b in obs if b <= 2 * rb)
+        return rb + sum(obs)
+
+    def _dot_flops(self, comp: str, ins: Instr) -> float:
+        _, rdims = _shape_dims(ins.type_str)
+        out = 1.0
+        for d in rdims:
+            out *= d
+        cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.attrs)
+        lhs_type = self.symbols[comp].get(ins.operands[0], "") if ins.operands else ""
+        _, ldims = _shape_dims(lhs_type)
+        contract = 1.0
+        if cm and ldims:
+            for idx in cm.group(1).split(","):
+                if idx and int(idx) < len(ldims):
+                    contract *= ldims[int(idx)]
+        return 2.0 * out * contract
+
+    def _conv_flops(self, comp: str, ins: Instr) -> float:
+        # result elements x 2 x (kernel spatial x in-channels): approximate
+        # via operand1 (kernel) size / out_channels
+        _, rdims = _shape_dims(ins.type_str)
+        out = 1.0
+        for d in rdims:
+            out *= d
+        if len(ins.operands) > 1:
+            _, kdims = _shape_dims(self.symbols[comp].get(ins.operands[1], ""))
+            k = 1.0
+            for d in kdims:
+                k *= d
+            if rdims:
+                k /= max(rdims[-1], 1)
+            return 2.0 * out * k
+        return 2.0 * out
+
+    def _called(self, ins: Instr, key: str):
+        m = re.search(key + r"=%([\w.\-]+)", ins.attrs)
+        return m.group(1) if m else None
+
+    def _trip_count(self, ins: Instr) -> float:
+        m = re.search(r'known_trip_count[^0-9]*"n":"(\d+)"', ins.attrs)
+        return float(m.group(1)) if m else 1.0
+
+    def comp_costs(self, comp: str) -> Costs:
+        """Costs of one execution of `comp` (recursive, memoized)."""
+        if comp in self._memo:
+            return self._memo[comp]
+        c = Costs()
+        self._memo[comp] = c  # break cycles defensively
+        for ins in self.computations.get(comp, []):
+            op = ins.opcode
+            base = op.replace("-start", "")
+            if op == "parameter":
+                continue
+            if base in _COLLECTIVES:
+                b = self._operand_bytes(comp, ins)
+                c.collective_bytes += b
+                c.collective_ops[base] += b
+                c.note_mem(base, b + _shape_bytes(ins.type_str))
+                continue
+            if op == "while":
+                trips = self._trip_count(ins)
+                body = self._called(ins, "body")
+                cond = self._called(ins, "condition")
+                if body:
+                    c.add(self.comp_costs(body), trips)
+                if cond:
+                    c.add(self.comp_costs(cond), trips)
+                continue
+            if op in ("call", "conditional", "async-start"):
+                for key in ("to_apply", "calls", "branch_computations"):
+                    tgt = self._called(ins, key)
+                    if tgt:
+                        c.add(self.comp_costs(tgt))
+                continue
+            if op == "fusion":
+                # single mem op; descend for dot flops only
+                c.note_mem("fusion", self._op_mem(comp, ins))
+                tgt = self._called(ins, "calls")
+                if tgt:
+                    c.flops += self.comp_costs(tgt).flops
+                continue
+            if op == "dot":
+                c.flops += self._dot_flops(comp, ins)
+                c.note_mem("dot", self._operand_bytes(comp, ins)
+                           + _shape_bytes(ins.type_str))
+                continue
+            if op == "convolution":
+                c.flops += self._conv_flops(comp, ins)
+                c.note_mem("convolution", self._operand_bytes(comp, ins)
+                           + _shape_bytes(ins.type_str))
+                continue
+            if op in ("constant", "iota", "parameter", "get-tuple-element",
+                      "tuple", "bitcast", "after-all", "partition-id",
+                      "replica-id"):
+                continue
+            # generic op: memory traffic only
+            c.note_mem(op, self._op_mem(comp, ins))
+        self._memo[comp] = c
+        return c
+
+    def entry_costs(self) -> Costs:
+        assert self.entry, "no ENTRY computation found"
+        return self.comp_costs(self.entry)
+
+
+def analyze(hlo_text: str) -> dict:
+    mod = HloModule(hlo_text)
+    c = mod.entry_costs()
+    top = dict(sorted(c.mem_by_op.items(), key=lambda kv: -kv[1])[:12])
+    return {
+        "flops_per_device": c.flops,
+        "mem_bytes_per_device": c.mem_bytes,
+        "collective_bytes_per_device": c.collective_bytes,
+        "collective_breakdown": dict(c.collective_ops),
+        "mem_top_ops": top,
+    }

@@ -1,0 +1,139 @@
+"""TPU v5e analytical engine model — the deployed-system counterpart of
+engine_model.py (DESIGN.md §2 maps the correspondences).
+
+Latency of one linear layer = max(compute, memory) seconds, exactly the
+paper's "slowest port wins" logic at chip granularity:
+
+  compute = MACs x 2 / (peak_ops x mxu_utilization(block dims))
+  memory  = HBM bytes touched / hbm_bw
+
+Engines:
+  baseline — dense WxA8 matmul (kernels/quant_matmul)
+  single   — unfused low-rank: two matmul launches, T round-trips HBM
+  cascade  — fused low-rank (kernels/lowrank_qmm): T pinned in VMEM
+
+The DSE (hw/dse.py) sweeps block shapes under the VMEM constraint and
+bandwidth scalings (the paper's Fig. 10/11 bandwidth-limited axis).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.kernels.lowrank_qmm import vmem_bytes as lr_vmem
+from repro.kernels.quant_matmul import vmem_bytes as qm_vmem
+from repro.launch.mesh import HBM_BW, PEAK_OPS_INT8, VMEM_BYTES
+
+
+@dataclasses.dataclass(frozen=True)
+class Blocks:
+    bm: int
+    bk: int
+    bn: int
+
+
+@dataclasses.dataclass
+class TpuPoint:
+    kind: str
+    latency_s: float
+    compute_s: float
+    memory_s: float
+    hbm_bytes: float
+    vmem_bytes: int
+    config: dict
+
+
+def _mxu_util(bm: int, bk: int, bn: int) -> float:
+    """Fraction of MXU peak achievable with these block dims: the 128x128
+    systolic array underfills when the M block has fewer than 128 rows
+    (bk/bn in block_space are always >=128)."""
+    return min(bm, 128) / 128.0
+
+
+def _pad(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def dense_engine(m, k, n, b: Blocks, *, weight_wl=8, act_wl=8,
+                 hbm_bw=HBM_BW) -> TpuPoint:
+    mp, kp, np_ = _pad(m, b.bm), _pad(k, b.bk), _pad(n, b.bn)
+    macs = mp * kp * np_
+    compute = 2 * macs / (PEAK_OPS_INT8 * _mxu_util(b.bm, b.bk, b.bn))
+    # HBM: X once per N-panel pass? output-stationary grid: X blocks stream
+    # once per (i,j) row — X re-read N/bn times, W re-read once per i.
+    hbm = (mp * kp * (np_ // b.bn) * _wl_bytes(act_wl)
+           + kp * np_ * (mp // b.bm) * _wl_bytes(weight_wl)
+           + mp * np_ * 4)
+    memory = hbm / hbm_bw
+    return TpuPoint("baseline", max(compute, memory), compute, memory, hbm,
+                    qm_vmem(b.bm, b.bk, b.bn),
+                    {"blocks": dataclasses.asdict(b)})
+
+
+def single_engine(m, k, n, r, b: Blocks, *, weight_wl=8, act_wl=8,
+                  hbm_bw=HBM_BW) -> TpuPoint:
+    """Two dense launches; the (M, R) intermediate round-trips HBM."""
+    p1 = dense_engine(m, k, r, b, weight_wl=weight_wl, act_wl=act_wl,
+                      hbm_bw=hbm_bw)
+    p2 = dense_engine(m, r, n, b, weight_wl=weight_wl, act_wl=act_wl,
+                      hbm_bw=hbm_bw)
+    hbm = p1.hbm_bytes + p2.hbm_bytes + 2 * m * r  # T write + read (int8)
+    compute = p1.compute_s + p2.compute_s
+    memory = hbm / hbm_bw
+    return TpuPoint("single", max(compute, memory), compute, memory, hbm,
+                    max(p1.vmem_bytes, p2.vmem_bytes),
+                    {"blocks": dataclasses.asdict(b), "rank": r})
+
+
+def cascade_engine(m, k, n, r, b: Blocks, *, weight_wl=8, act_wl=8,
+                   hbm_bw=HBM_BW) -> TpuPoint:
+    """Fused kernel: T lives in VMEM; W1 re-read once per M-block row, W2
+    once per M-block; X once."""
+    rp = _pad(r, 128)
+    mp, kp, np_ = _pad(m, b.bm), _pad(k, b.bk), _pad(n, b.bn)
+    macs = mp * kp * rp + mp * rp * np_
+    compute = 2 * macs / (PEAK_OPS_INT8 * _mxu_util(b.bm, b.bk, b.bn))
+    hbm = (mp * kp * _wl_bytes(act_wl)             # X once
+           + kp * rp * (mp // b.bm) * _wl_bytes(weight_wl)   # W1 per row
+           + rp * np_ * (mp // b.bm) * _wl_bytes(weight_wl)  # W2 per row
+           + mp * np_ * 4)                         # Y out f32
+    memory = hbm / hbm_bw
+    return TpuPoint("cascade", max(compute, memory), compute, memory, hbm,
+                    lr_vmem(b.bm, b.bk, b.bn, rp),
+                    {"blocks": dataclasses.asdict(b), "rank": r})
+
+
+def _wl_bytes(wl: int) -> float:
+    return wl / 8.0
+
+
+def block_space(max_bm=512):
+    for bm in (8, 16, 32, 64, 128, 256, 512):
+        if bm > max_bm:
+            continue
+        for bk in (128, 256, 512, 1024):
+            for bn in (128, 256, 512, 1024):
+                yield Blocks(bm, bk, bn)
+
+
+def best_point(m, k, n, r=None, *, weight_wl=8, act_wl=8, hbm_bw=HBM_BW,
+               engines=("baseline", "single", "cascade"),
+               vmem_budget=VMEM_BYTES):
+    """Lowest-latency feasible engine+blocks for one layer."""
+    best = None
+    for b in block_space(max_bm=max(8, min(512, _pad(m, 8)))):
+        cands = []
+        if "baseline" in engines:
+            cands.append(dense_engine(m, k, n, b, weight_wl=weight_wl,
+                                      act_wl=act_wl, hbm_bw=hbm_bw))
+        if r is not None and "single" in engines:
+            cands.append(single_engine(m, k, n, r, b, weight_wl=weight_wl,
+                                       act_wl=act_wl, hbm_bw=hbm_bw))
+        if r is not None and "cascade" in engines:
+            cands.append(cascade_engine(m, k, n, r, b, weight_wl=weight_wl,
+                                        act_wl=act_wl, hbm_bw=hbm_bw))
+        for c in cands:
+            if c.vmem_bytes > vmem_budget:
+                continue
+            if best is None or c.latency_s < best.latency_s:
+                best = c
+    return best

@@ -1,0 +1,152 @@
+"""Fused cascade low-rank quantized matmul — TPU analog of the paper's
+*Cascade SVD MatMul Engine* (§V-B, Fig. 6 right).
+
+Computes Y = ((Xq @ W1q) @ W2q) with the (bm x R) intermediate tile held in
+VMEM for its whole lifetime — the paper's constraint that "the entire
+M_t x R tile of intermediate results [is buffered] on-chip", which is the
+source of the cascade engine's bandwidth advantage (no HBM round-trip for
+X·W1).
+
+Mechanically this is a two-phase sequential grid: for each M-row-block i the
+inner grid axis s runs K/bk accumulation steps (phase 1: T += Xq_blk @ W1_blk)
+followed by N/bn emission steps (phase 2: Y_blk = Tq @ W2_blk). The
+intermediate is re-quantized to int8 once, at the phase boundary — exactly
+the paper's A8 intermediate quantization between the two engines — with the
+per-R scales of W2 (s2) folded into T before requantization so phase 2 needs
+only a per-row scale.
+
+dimension_semantics = ("parallel", "arbitrary"): M-blocks are independent;
+the s axis is order-dependent (accumulate -> requant -> emit).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(
+    xq_ref, sx_ref, w1_ref, s1_ref, w2_ref, s2_ref,  # inputs
+    o_ref,                                           # output
+    tacc_ref, tq_ref, st_ref,                        # scratch
+    *, k_blocks, n_blocks,
+):
+    s = pl.program_id(1)
+
+    # ---- phase 1: accumulate T = Xq @ W1q over K blocks -------------------
+    @pl.when(s == 0)
+    def _init():
+        tacc_ref[...] = jnp.zeros_like(tacc_ref)
+
+    @pl.when(s < k_blocks)
+    def _accum():
+        tacc_ref[...] += jax.lax.dot_general(
+            xq_ref[...], w1_ref[...],
+            dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        )
+
+    # ---- phase boundary: dequant, fold s2, requantize per row to int8 -----
+    @pl.when(s == k_blocks)
+    def _requant():
+        t = tacc_ref[...].astype(jnp.float32)
+        t = t * sx_ref[...] * s1_ref[...] * s2_ref[...].reshape(1, -1)
+        absmax = jnp.max(jnp.abs(t), axis=-1, keepdims=True)
+        st = jnp.where(absmax > 0, absmax / 127.0, 1.0)
+        tq_ref[...] = jnp.clip(jnp.round(t / st), -127, 127).astype(jnp.int8)
+        st_ref[...] = st.astype(jnp.float32)
+
+    # ---- phase 2: emit Y n-block = Tq @ W2q ------------------------------
+    @pl.when(s >= k_blocks)
+    def _emit():
+        acc = jax.lax.dot_general(
+            tq_ref[...], w2_ref[...],
+            dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        )
+        o_ref[...] = (acc.astype(jnp.float32) * st_ref[...]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bk", "bn", "interpret", "out_dtype")
+)
+def lowrank_qmm(
+    xq: jax.Array,
+    sx: jax.Array,
+    w1q: jax.Array,
+    s1: jax.Array,
+    w2q: jax.Array,
+    s2: jax.Array,
+    *,
+    bm: int = 256,
+    bk: int = 512,
+    bn: int = 512,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+) -> jax.Array:
+    """Y[M,N] = dequant-cascade((Xq @ W1q) @ W2q).
+
+    xq: (M, K) int8, sx: (M, 1) f32      — quantized activations
+    w1q: (K, R) int8, s1: (1, R) f32     — ITERA factor 1 (R kept whole in VMEM)
+    w2q: (R, N) int8, s2: (R, 1) f32     — ITERA factor 2
+    Dims must divide by blocks; R is not tiled (ranks are ≤ ~1k by design —
+    that is the whole point of the decomposition).
+    """
+    m, k = xq.shape
+    k2, r = w1q.shape
+    r2, n = w2q.shape
+    assert k == k2 and r == r2, (xq.shape, w1q.shape, w2q.shape)
+    assert m % bm == 0 and k % bk == 0 and n % bn == 0, (
+        (m, k, n), (bm, bk, bn))
+
+    k_blocks, n_blocks = k // bk, n // bn
+    grid = (m // bm, k_blocks + n_blocks)
+
+    def nmap(i, s):
+        # during phase 1 park on block 0; phase 2 walks the N blocks
+        return jnp.maximum(s - k_blocks, 0)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, k_blocks=k_blocks, n_blocks=n_blocks),
+        grid=grid,
+        in_specs=[
+            # phase-1 operands: clamp to the last K block during phase 2
+            pl.BlockSpec((bm, bk),
+                         lambda i, s: (i, jnp.minimum(s, k_blocks - 1))),
+            pl.BlockSpec((bm, 1), lambda i, s: (i, 0)),
+            pl.BlockSpec((bk, r),
+                         lambda i, s: (jnp.minimum(s, k_blocks - 1), 0)),
+            pl.BlockSpec((1, r), lambda i, s: (0, 0)),
+            # phase-2 operands: park on block 0 during phase 1
+            pl.BlockSpec((r, bn), lambda i, s: (0, nmap(i, s))),
+            pl.BlockSpec((r, 1), lambda i, s: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, s: (i, nmap(i, s))),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bm, r), jnp.int32),   # T accumulator
+            pltpu.VMEM((bm, r), jnp.int8),    # requantized T
+            pltpu.VMEM((bm, 1), jnp.float32), # per-row T scale
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(xq, sx, w1q, s1, w2q, s2)
+
+
+def vmem_bytes(bm: int, bk: int, bn: int, r: int) -> int:
+    """VMEM working set of one grid step (constraint for the DSE)."""
+    return (
+        bm * bk          # x block int8
+        + bk * r         # w1 block int8
+        + r * bn         # w2 block int8
+        + bm * r * 4     # T accumulator int32
+        + bm * r         # Tq int8
+        + bm * 4 * 2     # sx, st
+        + r * 4 * 2      # s1, s2
+        + bm * bn * 4    # out f32
+    )

@@ -1,0 +1,174 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Handles: activation quantization (A8 per-row), padding to block multiples,
+automatic block-shape selection under a VMEM budget (the DSE's per-layer
+choice — see hw/dse.py for the global search), and backend dispatch:
+
+  * on TPU           -> compiled Pallas kernels
+  * on CPU (tests)   -> interpret=True Pallas (bit-faithful emulation)
+  * use_kernel=False -> pure-jnp reference path (used inside big jitted
+                        models / dry-runs, where interpret-mode Pallas would
+                        bloat the HLO; numerically identical to ref.py)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.itera import LowRankQ
+from repro.core.quant import QuantizedTensor
+from repro.kernels import lowrank_qmm as _lr
+from repro.kernels import quant_matmul as _qm
+from repro.kernels import ref as _ref
+
+VMEM_BUDGET = 12 * 1024 * 1024  # leave headroom below the 16 MiB/core VMEM
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def quantize_acts(x: jax.Array, qm: int = 127):
+    """Per-row symmetric A8 activation quantization."""
+    absmax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    sx = jnp.where(absmax > 0, absmax / qm, 1.0).astype(jnp.float32)
+    xq = jnp.clip(jnp.round(x / sx), -qm, qm).astype(jnp.int8)
+    return xq, sx
+
+
+def choose_blocks(m: int, k: int, n: int, r: int | None = None,
+                  budget: int = VMEM_BUDGET):
+    """Pick (bm, bk, bn) aligned to the MXU that fit the VMEM budget.
+
+    Mirrors the paper's hardware-aware tile selection: prefer large bm/bn
+    (amortize weight streaming), shrink until the working set fits.
+    """
+    bm = min(_round_up(m, 8), 256)
+    bk = min(_round_up(k, 128), 512)
+    bn = min(_round_up(n, 128), 512)
+    fits = (lambda: _lr.vmem_bytes(bm, bk, bn, r)) if r is not None else (
+        lambda: _qm.vmem_bytes(bm, bk, bn))
+    while fits() > budget and bm > 8:
+        bm //= 2
+    while fits() > budget and bn > 128:
+        bn //= 2
+    while fits() > budget and bk > 128:
+        bk //= 2
+    return bm, bk, bn
+
+
+def _pad2(x, m0, m1):
+    p0, p1 = m0 - x.shape[0], m1 - x.shape[1]
+    if p0 == 0 and p1 == 0:
+        return x
+    return jnp.pad(x, ((0, p0), (0, p1)))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("use_kernel", "interpret", "blocks", "out_dtype"),
+)
+def qmm(
+    x: jax.Array,
+    w: QuantizedTensor,
+    *,
+    use_kernel: bool = True,
+    interpret: bool | None = None,
+    blocks: tuple | None = None,
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    """y = dequant(quant(x)) @ dequant(w) — WxA8 dense linear.
+
+    x: (..., K) float; w: QuantizedTensor (K, N) with per-column scales.
+    """
+    if interpret is None:
+        interpret = not on_tpu()
+    lead = x.shape[:-1]
+    k, n = w.shape
+    x2 = x.reshape(-1, k)
+    m = x2.shape[0]
+    xq, sx = quantize_acts(x2)
+    sw = w.scale.reshape(1, n)
+
+    if not use_kernel:
+        y = _ref.quant_matmul_ref(xq, sx, w.values, sw)
+        return y.astype(out_dtype).reshape(*lead, n)
+
+    bm, bk, bn = blocks or choose_blocks(m, k, n)
+    mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
+    y = _qm.quant_matmul(
+        _pad2(xq, mp, kp), _pad2(sx, mp, 1),
+        _pad2(w.values, kp, np_), _pad2(sw, 1, np_),
+        bm=bm, bk=bk, bn=bn, out_dtype=out_dtype, interpret=interpret,
+    )[:m, :n]
+    return y.reshape(*lead, n)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("use_kernel", "interpret", "blocks", "out_dtype", "fused"),
+)
+def lrmm(
+    x: jax.Array,
+    lr: LowRankQ,
+    *,
+    use_kernel: bool = True,
+    interpret: bool | None = None,
+    blocks: tuple | None = None,
+    out_dtype=jnp.float32,
+    fused: bool = True,
+) -> jax.Array:
+    """y = ((quant(x) @ W1') @ W2') — the ITERA low-rank linear.
+
+    fused=True  -> Cascade engine analog (single kernel, T pinned in VMEM)
+    fused=False -> Single engine analog (two quant_matmul launches; T makes
+                   an HBM round-trip — kept for the engine comparison bench)
+    """
+    if interpret is None:
+        interpret = not on_tpu()
+    lead = x.shape[:-1]
+    k, r = lr.w1.shape
+    _, n = lr.w2.shape
+    x2 = x.reshape(-1, k)
+    m = x2.shape[0]
+    xq, sx = quantize_acts(x2)
+    s1 = lr.w1.scale.reshape(1, r)
+    s2 = lr.w2.scale.reshape(r, 1)
+
+    if not use_kernel:
+        y = _ref.lowrank_qmm_ref(xq, sx, lr.w1.values, s1, lr.w2.values, s2)
+        return y.astype(out_dtype).reshape(*lead, n)
+
+    if not fused:
+        # Single-engine schedule: T leaves the chip between the two matmuls.
+        t = _ref.quant_matmul_ref(xq, sx, lr.w1.values, s1)
+        t = t * s2.reshape(1, -1)
+        tq, st = quantize_acts(t)
+        bm, bk, bn = blocks or choose_blocks(m, r, n)
+        mp, rp, np_ = _round_up(m, bm), _round_up(r, bk), _round_up(n, bn)
+        y = _qm.quant_matmul(
+            _pad2(tq, mp, rp), _pad2(st, mp, 1),
+            _pad2(lr.w2.values, rp, np_),
+            jnp.ones((1, np_), jnp.float32),
+            bm=bm, bk=bk, bn=bn, out_dtype=out_dtype, interpret=interpret,
+        )[:m, :n]
+        return y.reshape(*lead, n)
+
+    rp = _round_up(r, 128)
+    bm, bk, bn = blocks or choose_blocks(m, k, n, rp)
+    mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
+    y = _lr.lowrank_qmm(
+        _pad2(xq, mp, kp), _pad2(sx, mp, 1),
+        _pad2(lr.w1.values, kp, rp),
+        _pad2(jnp.pad(s1, ((0, 0), (0, rp - r)), constant_values=1.0), 1, rp),
+        _pad2(lr.w2.values, rp, np_),
+        _pad2(jnp.pad(s2, ((0, rp - r), (0, 0)), constant_values=1.0), rp, 1),
+        bm=bm, bk=bk, bn=bn, out_dtype=out_dtype, interpret=interpret,
+    )[:m, :n]
+    return y.reshape(*lead, n)

@@ -1,0 +1,99 @@
+"""Dense quantized matmul Pallas kernel — TPU analog of the paper's baseline
+MatMul engine (§V-A).
+
+The paper's engine tiles (M_t, N_t) spatially with K_f-parallel dot products;
+on TPU the MXU is the inner 128x128 tile and the BlockSpec factors
+(bm, bk, bn) play the role of (M_t, K_f, N_t). The grid accumulates over the
+K dimension in an int32 VMEM scratch (output-stationary, exactly like the
+paper's output-stationary PE array).
+
+Inputs are pre-quantized int8 codes with per-row activation scales and
+per-column weight scales (symmetric, matching core/quant.py). Sub-8-bit
+weights (W4/W6) arrive as int8 carriers whose values are range-limited; the
+MXU computes int8xint8->int32 regardless (see DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(xq_ref, sx_ref, wq_ref, sw_ref, o_ref, acc_ref, *, k_blocks):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        xq_ref[...], wq_ref[...],
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+    @pl.when(k == k_blocks - 1)
+    def _finish():
+        o_ref[...] = (
+            acc_ref[...].astype(jnp.float32) * sx_ref[...] * sw_ref[...]
+        ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bk", "bn", "interpret", "out_dtype")
+)
+def quant_matmul(
+    xq: jax.Array,
+    sx: jax.Array,
+    wq: jax.Array,
+    sw: jax.Array,
+    *,
+    bm: int = 256,
+    bk: int = 512,
+    bn: int = 512,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+) -> jax.Array:
+    """Y[M,N] = (Xq·sx) @ (Wq·sw) with int8 MXU arithmetic.
+
+    Shapes must be divisible by the block factors — `ops.py` handles padding.
+    """
+    m, k = xq.shape
+    k2, n = wq.shape
+    assert k == k2, (xq.shape, wq.shape)
+    assert m % bm == 0 and k % bk == 0 and n % bn == 0, (
+        (m, k, n), (bm, bk, bn))
+
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        functools.partial(_kernel, k_blocks=k // bk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bm, 1), lambda i, j, kk: (i, 0)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(xq, sx, wq, sw)
+
+
+def vmem_bytes(bm: int, bk: int, bn: int) -> int:
+    """VMEM working set of one grid step (the BRAM analog, DESIGN.md §2)."""
+    return (
+        bm * bk            # x block int8
+        + bk * bn          # w block int8
+        + bm * 4           # sx
+        + bn * 4           # sw
+        + bm * bn * 4      # out f32
+        + bm * bn * 4      # acc int32
+    )

@@ -1,0 +1,61 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Two kinds of references:
+  * *_ref       — bit-faithful mirror of the kernel's arithmetic (including
+                  the intermediate requantization of the cascade) used for
+                  assert_allclose in tests;
+  * *_exact     — full-precision math, used for error-bound style checks.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def quant_matmul_ref(xq, sx, wq, sw):
+    """Y = dequant(Xq) @ dequant(Wq).
+
+    xq: (M, K) int8 codes; sx: (M, 1) fp32 row scales
+    wq: (K, N) int8 codes; sw: (1, N) fp32 column scales
+    """
+    acc = jnp.dot(
+        xq.astype(jnp.int32), wq.astype(jnp.int32),
+        preferred_element_type=jnp.int32,
+    )
+    return acc.astype(jnp.float32) * sx * sw
+
+
+def requant_rows(t: jnp.ndarray, qm: int = 127):
+    """Symmetric per-row requantization of an fp intermediate to int8."""
+    absmax = jnp.max(jnp.abs(t), axis=-1, keepdims=True)
+    st = jnp.where(absmax > 0, absmax / qm, 1.0)
+    tq = jnp.clip(jnp.round(t / st), -qm, qm).astype(jnp.int8)
+    return tq, st.astype(jnp.float32)
+
+
+def lowrank_qmm_ref(xq, sx, w1q, s1, w2q, s2):
+    """Cascade low-rank quantized matmul, mirroring the fused kernel:
+
+    phase 1: T̃ = (Xq @ W1q) · sx · s1 · s2ᵀ     (s2 folded into T)
+    requant: Tq, sT = rowquant(T̃)
+    phase 2: Y = (Tq @ W2q) · sT
+
+    xq: (M, K) int8; sx: (M, 1) f32
+    w1q: (K, R) int8; s1: (1, R) f32
+    w2q: (R, N) int8; s2: (R, 1) f32
+    """
+    t = jnp.dot(
+        xq.astype(jnp.int32), w1q.astype(jnp.int32),
+        preferred_element_type=jnp.int32,
+    ).astype(jnp.float32)
+    t = t * sx * s1 * s2.reshape(1, -1)
+    tq, st = requant_rows(t)
+    y = jnp.dot(
+        tq.astype(jnp.int32), w2q.astype(jnp.int32),
+        preferred_element_type=jnp.int32,
+    ).astype(jnp.float32)
+    return y * st
+
+
+def lowrank_qmm_exact(x, w1f, w2f):
+    """Full-precision (X @ W1) @ W2 for error-bound checks."""
+    return (x @ w1f) @ w2f

@@ -1,0 +1,42 @@
+"""Production mesh definitions.
+
+Single pod : (data=16, model=16)            = 256 chips (TPU v5e pod)
+Multi-pod  : (pod=2, data=16, model=16)     = 512 chips
+
+`make_production_mesh` is a function (never a module-level constant) so
+importing this module touches no jax device state — device counts are
+locked on first backend init, and only launch/dryrun.py (which sets
+XLA_FLAGS before any import) may build the 512-way host-platform mesh.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_test_mesh(data: int = 2, model: int = 4, *, pod: int = 0):
+    """Small mesh for subprocess sharding tests (host-platform devices)."""
+    if pod:
+        return jax.make_mesh(
+            (pod, data, model), ("pod", "data", "model"),
+            axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+# TPU v5e hardware constants (per chip) for the roofline.
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s
+PEAK_OPS_INT8 = 394e12        # OP/s
+HBM_BW = 819e9                # B/s
+ICI_BW_PER_LINK = 50e9        # B/s per link
+ICI_LINKS = 4                 # v5e: 4 ICI links per chip (2D torus x2 dirs)
+VMEM_BYTES = 16 * 2 ** 20     # ~16 MiB/core wired scratchpad
+HBM_BYTES = 16 * 2 ** 30      # 16 GiB HBM per v5e chip

@@ -1,0 +1,167 @@
+"""Step builders + abstract input specs for every (arch x shape) cell.
+
+Everything here is allocation-free: params/opt-state/caches are
+jax.eval_shape ShapeDtypeStructs, batches are ShapeDtypeStructs, and the
+builders return (fn, args, in_shardings, out_shardings) ready for
+jax.jit(...).lower(...).compile().
+
+Step kinds map to the shape kinds:
+  train    -> train_step(params, opt_state, batch)  [value_and_grad + AdamW]
+  prefill  -> prefill_step(params, batch)           [forward + cache build]
+  decode   -> serve_step(params, cache, tok, pos)   [1 token w/ KV cache]
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, get_config
+from repro.launch import sharding as shd
+from repro.models import transformer as tfm
+from repro.optim import adamw
+
+
+def model_inputs(cfg, batch: int, seq: int, *, with_labels: bool):
+    """ShapeDtypeStructs for the model inputs of one batch."""
+    if cfg.frontend in ("audio", "vision"):
+        inp = {"inputs_embeds": jax.ShapeDtypeStruct(
+            (batch, seq, cfg.d_model), jnp.dtype(cfg.dtype))}
+    else:
+        inp = {"tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32)}
+    if with_labels:
+        inp["labels"] = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    return inp
+
+
+def abstract_params(cfg):
+    return jax.eval_shape(
+        functools.partial(tfm.init_params, cfg=cfg), jax.random.PRNGKey(0))
+
+
+def abstract_opt_state(params, opt_cfg):
+    return jax.eval_shape(functools.partial(adamw.init, cfg=opt_cfg), params)
+
+
+def abstract_cache(cfg, batch, max_len):
+    return jax.eval_shape(
+        lambda: tfm.init_cache(cfg, batch, max_len))
+
+
+# ------------------------------------------------------------------ steps --
+def make_train_step(cfg, opt_cfg, *, ssm_engine="sequential"):
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            tfm.loss_fn, has_aux=True)(params, batch, cfg,
+                                       ssm_engine=ssm_engine)
+        new_params, new_opt, om = adamw.update(grads, opt_state, params,
+                                               opt_cfg)
+        return new_params, new_opt, {
+            "loss": loss, "ce": metrics["ce"], **om}
+
+    return train_step
+
+
+def make_prefill_step(cfg, *, ssm_engine="sequential"):
+    def prefill_step(params, batch):
+        inputs = batch.get("inputs_embeds", batch.get("tokens"))
+        return tfm.prefill(params, inputs, cfg, ssm_engine=ssm_engine)
+
+    return prefill_step
+
+
+def make_serve_step(cfg):
+    def serve_step(params, cache, tok, pos):
+        return tfm.decode_step(params, cache, tok, pos, cfg)
+
+    return serve_step
+
+
+# ------------------------------------------------------------- cell build --
+def build_cell(arch: str, shape_name: str, mesh, *,
+               opt_cfg: adamw.AdamWConfig | None = None,
+               compression=None, ssm_engine="sequential",
+               zero1: bool = True, cfg_overrides: dict | None = None):
+    """Returns dict(fn, args, in_shardings, out_shardings, donate) for one
+    dry-run cell. `compression` optionally swaps inference params for the
+    ITERA / quant-only compressed layout (CompressionConfig);
+    `cfg_overrides` patches ModelConfig fields (perf variants: remat_policy,
+    kv_cache_bits, attn_chunk, ...)."""
+    import dataclasses as _dc
+
+    cfg = get_config(arch)
+    if cfg_overrides:
+        ov = dict(cfg_overrides)
+        ssm_chunk = ov.pop("ssm_chunk", None)
+        if ssm_chunk and cfg.ssm is not None:
+            cfg = _dc.replace(cfg, ssm=_dc.replace(cfg.ssm, chunk=ssm_chunk))
+        if ov:
+            cfg = _dc.replace(cfg, **ov)
+    spec = SHAPES[shape_name]
+    params = abstract_params(cfg)
+    if compression is not None:
+        from repro.core.compress import compress_params
+        params = jax.eval_shape(
+            lambda p: compress_params(p, compression)[0], params)
+    pshard = shd.param_shardings(params, mesh, cfg)
+
+    if spec.kind == "train":
+        opt_cfg = opt_cfg or adamw.AdamWConfig()
+        opt = abstract_opt_state(params, opt_cfg)
+        oshard = shd.opt_shardings(opt, params, mesh, cfg, zero1=zero1)
+        batch = model_inputs(cfg, spec.global_batch, spec.seq_len,
+                             with_labels=True)
+        bshard = shd.batch_shardings(batch, mesh)
+        fn = make_train_step(cfg, opt_cfg, ssm_engine=ssm_engine)
+        metr = NamedSharding(mesh, P())
+        return dict(
+            fn=fn, args=(params, opt, batch),
+            in_shardings=(pshard, oshard, bshard),
+            out_shardings=(pshard, oshard,
+                           jax.tree_util.tree_map(lambda _: metr,
+                                                  {"loss": 0, "ce": 0,
+                                                   "grad_norm": 0, "lr": 0})),
+            donate_argnums=(0, 1), cfg=cfg)
+
+    if spec.kind == "prefill":
+        batch = model_inputs(cfg, spec.global_batch, spec.seq_len,
+                             with_labels=False)
+        bshard = shd.batch_shardings(batch, mesh)
+        fn = make_prefill_step(cfg, ssm_engine=ssm_engine)
+        logits, cache = jax.eval_shape(fn, params, batch)
+        cshard = shd.cache_shardings(cache, mesh, batch=spec.global_batch)
+        lshard = NamedSharding(mesh, P(
+            shd.resolve_axis("batch", mesh), None, "model"))
+        return dict(
+            fn=fn, args=(params, batch),
+            in_shardings=(pshard, bshard),
+            out_shardings=(lshard, cshard),
+            donate_argnums=(), cfg=cfg)
+
+    # decode
+    cache = abstract_cache(cfg, spec.global_batch, spec.seq_len)
+    cshard = shd.cache_shardings(cache, mesh, batch=spec.global_batch)
+    tok = {"tokens": jax.ShapeDtypeStruct((spec.global_batch, 1), jnp.int32)}
+    tshard = shd.batch_shardings(
+        tok, mesh, shard_batch_dim=spec.global_batch > 1)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    fn = make_serve_step(cfg)
+    b_ax = shd.resolve_axis("batch", mesh) \
+        if spec.global_batch % _batch_size(mesh) == 0 else None
+    lshard = NamedSharding(mesh, P(b_ax, None, "model"))
+    return dict(
+        fn=lambda params, cache, tok, pos: fn(params, cache, tok["tokens"],
+                                              pos),
+        args=(params, cache, tok, pos),
+        in_shardings=(pshard, cshard, tshard, NamedSharding(mesh, P())),
+        out_shardings=(lshard, cshard),
+        donate_argnums=(1,), cfg=cfg)
+
+
+def _batch_size(mesh):
+    n = mesh.shape["data"]
+    if "pod" in mesh.axis_names:
+        n *= mesh.shape["pod"]
+    return n

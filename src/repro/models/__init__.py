@@ -1,0 +1,16 @@
+"""Model zoo: one decoder-only assembly covering dense / MoE / SSM / hybrid
+layouts, with compression-aware linear dispatch (dense | quantized | ITERA
+low-rank) throughout."""
+from repro.models.layers import (
+    apply_linear, set_linear_mode, get_linear_mode, weight_shape,
+)
+from repro.models.transformer import (
+    init_params, forward, loss_fn, prefill, decode_step, init_cache,
+    logits_for,
+)
+
+__all__ = [
+    "apply_linear", "set_linear_mode", "get_linear_mode", "weight_shape",
+    "init_params", "forward", "loss_fn", "prefill", "decode_step",
+    "init_cache", "logits_for",
+]

@@ -1,0 +1,140 @@
+"""Shared building blocks: norms, MLP flavors, RoPE, linear dispatch.
+
+`apply_linear` is the single matmul entry point for the whole zoo — it
+dispatches on the weight node type, so a model runs dense (Array),
+quantized (QuantizedTensor) or ITERA low-rank (LowRankQ) without any model
+code changes. Kernel usage is controlled by `repro.models.linear_mode`:
+
+  "auto"     — Pallas kernels on TPU, jnp reference math elsewhere
+  "kernel"   — force Pallas (interpret=True off-TPU; used by kernel tests)
+  "ref"      — force the pure-jnp path (used inside dry-runs: identical
+               numerics, SPMD-friendly HLO)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.itera import LowRankQ
+from repro.core.quant import QuantizedTensor
+from repro.kernels import ops as kops
+
+_LINEAR_MODE = "auto"
+
+
+def set_linear_mode(mode: str) -> None:
+    global _LINEAR_MODE
+    assert mode in ("auto", "kernel", "ref")
+    _LINEAR_MODE = mode
+
+
+def get_linear_mode() -> str:
+    return _LINEAR_MODE
+
+
+def apply_linear(x: jax.Array, w, out_dtype=None) -> jax.Array:
+    """y = x @ w for w: Array | QuantizedTensor | LowRankQ."""
+    out_dtype = out_dtype or x.dtype
+    if isinstance(w, LowRankQ):
+        if _LINEAR_MODE == "ref" or (_LINEAR_MODE == "auto" and not kops.on_tpu()):
+            return kops.lrmm(x, w, use_kernel=False, out_dtype=out_dtype)
+        return kops.lrmm(x, w, use_kernel=True, out_dtype=out_dtype)
+    if isinstance(w, QuantizedTensor):
+        if _LINEAR_MODE == "ref" or (_LINEAR_MODE == "auto" and not kops.on_tpu()):
+            return kops.qmm(x, w, use_kernel=False, out_dtype=out_dtype)
+        return kops.qmm(x, w, use_kernel=True, out_dtype=out_dtype)
+    return jnp.asarray(x @ w.astype(x.dtype), out_dtype)
+
+
+def weight_shape(w) -> tuple:
+    """(K, N) of a linear node regardless of representation."""
+    if isinstance(w, LowRankQ):
+        return (w.w1.shape[0], w.w2.shape[1])
+    if isinstance(w, QuantizedTensor):
+        return tuple(w.values.shape)
+    return tuple(w.shape)
+
+
+# ----------------------------------------------------------------- norms --
+def rmsnorm(x, gamma, eps=1e-5):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)).astype(x.dtype) * (
+        1.0 + gamma.astype(x.dtype)
+    )
+
+
+def layernorm(x, gamma, beta, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(x.dtype) * gamma.astype(x.dtype) + beta.astype(x.dtype)
+
+
+def apply_norm(x, p, kind: str, eps: float):
+    if kind == "layernorm":
+        return layernorm(x, p["gamma"], p["beta"], eps)
+    return rmsnorm(x, p["gamma"], eps)
+
+
+def init_norm(kind: str, d: int, dtype):
+    if kind == "layernorm":
+        return {"gamma": jnp.ones((d,), dtype), "beta": jnp.zeros((d,), dtype)}
+    return {"gamma": jnp.zeros((d,), dtype)}   # rmsnorm stores gamma-1
+
+
+# ------------------------------------------------------------------ MLPs --
+def mlp_apply(x, p, act: str):
+    if act in ("swiglu", "geglu"):
+        g = apply_linear(x, p["gate"])
+        u = apply_linear(x, p["up"])
+        h = (jax.nn.silu(g) if act == "swiglu" else jax.nn.gelu(g)) * u
+    elif act == "relu2":  # squared ReLU (Nemotron-4)
+        h = jnp.square(jax.nn.relu(apply_linear(x, p["up"])))
+    else:  # gelu
+        h = jax.nn.gelu(apply_linear(x, p["up"]))
+    return apply_linear(h, p["down"])
+
+
+def mlp_init(key, d: int, d_ff: int, act: str, dtype):
+    ks = jax.random.split(key, 3)
+    std_in, std_out = d ** -0.5, d_ff ** -0.5
+    p = {
+        "up": jax.random.normal(ks[0], (d, d_ff), dtype) * std_in,
+        "down": jax.random.normal(ks[1], (d_ff, d), dtype) * std_out,
+    }
+    if act in ("swiglu", "geglu"):
+        p["gate"] = jax.random.normal(ks[2], (d, d_ff), dtype) * std_in
+    return p
+
+
+# ------------------------------------------------------------------ RoPE --
+def rope_freqs(head_dim: int, theta: float, rotary_pct: float = 1.0):
+    rot = int(head_dim * rotary_pct) // 2 * 2
+    inv = 1.0 / (theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+    return inv, rot
+
+
+def apply_rope(x, positions, theta: float, rotary_pct: float = 1.0):
+    """x: (..., S, H, Dh); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    inv, rot = rope_freqs(hd, theta, rotary_pct)
+    ang = positions[..., :, None].astype(jnp.float32) * inv  # (..., S, rot/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    yr = jnp.stack([y1, y2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([yr.astype(x.dtype), xp], axis=-1)
+
+
+def sinusoidal_emb(positions, d_model: int, dtype):
+    half = d_model // 2
+    inv = 1.0 / (10000.0 ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+def softcap(x, cap: float):
+    return (cap * jnp.tanh(x / cap)) if cap > 0 else x

@@ -1,0 +1,289 @@
+"""Mamba blocks: Mamba1 selective scan (falcon-mamba) and a multi-head
+Mamba2-style SSD block (zamba2). Both provide
+
+  * mambaN_apply  — full-sequence form for training / prefill, with two scan
+    engines: "sequential" (lax.scan over time; tiny memory) and "chunked"
+    (intra-chunk associative scan + inter-chunk carry; the TPU-friendly
+    parallel form — a perf option exercised in §Perf);
+  * mambaN_step   — O(1) single-token decode carrying (ssm state, conv tail),
+    which is what makes the long_500k cells sub-quadratic.
+
+Simplifications vs the reference CUDA implementations (DESIGN.md §2): the
+short causal conv is applied to x only (Mamba2 also convolves B/C), and
+Mamba2 uses a single B/C group. Neither changes the systems behaviour
+(state shapes, FLOPs structure, scan data flow).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_linear
+
+Array = jax.Array
+
+
+# ----------------------------------------------------------------- common --
+def _causal_conv(x: Array, w: Array, tail: Array | None = None):
+    """Depthwise causal conv. x: (B, S, C), w: (C, K). Returns (y, new_tail)."""
+    k = w.shape[1]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)
+    # sum of K shifted views: y[t] = sum_j w[:, j] * xp[t + j]
+    y = sum(xp[:, j:j + x.shape[1], :] * w[:, j][None, None, :]
+            for j in range(k))
+    return y, xp[:, -(k - 1):, :] if k > 1 else tail
+
+
+def _ssm_scan(make_ab, emit, xs, h0: Array, engine: str, chunk: int,
+              seq_len: int):
+    """h_t = dA_t * h_{t-1} + dBx_t along time.
+
+    `make_ab(slice_of_xs) -> (dA, dBx)` builds the transition terms *inside*
+    the scan body, so the (B, S, d_inner, d_state)-sized tensors are never
+    materialized for the full sequence — only one step (sequential) or one
+    chunk (chunked) exists at a time. This is what keeps the 4k-train SSM
+    cells inside HBM (EXPERIMENTS.md §Perf: 805 GiB -> per-chunk).
+
+    xs: pytree of (B, S, ...) per-step inputs.
+    `emit(h, x) -> y` contracts the state against C *inside* the body (the
+    (…, d_inner, d_state) hidden states are never stacked over time).
+    Returns (ys (B, S, ...), hT).
+    """
+    if engine == "sequential":
+        def step(h, x_t):
+            a, b = make_ab(x_t)
+            h = a * h + b
+            return h, emit(h, x_t)
+
+        xs_t = jax.tree_util.tree_map(lambda x: x.swapaxes(0, 1), xs)
+        hT, ys = jax.lax.scan(step, h0, xs_t)
+        return ys.swapaxes(0, 1), hT
+
+    # chunked: associative scan inside fixed-size chunks, carry across them
+    q = min(chunk, seq_len)
+    while seq_len % q:
+        q -= 1
+    nc = seq_len // q
+
+    def combine(l, r):
+        (al, bl), (ar, br) = l, r
+        return al * ar, bl * ar + br
+
+    xs_c = jax.tree_util.tree_map(
+        lambda x: x.reshape(x.shape[0], nc, q, *x.shape[2:]).swapaxes(0, 1),
+        xs)
+
+    @jax.checkpoint
+    def chunk_step(h, x_c):
+        # checkpointed: the backward pass recomputes the intra-chunk
+        # associative scan instead of saving its (B, Q, d_inner, d_state)
+        # internals — the standard chunked-SSD memory/compute trade.
+        a_c, b_c = make_ab(x_c)                         # (B, Q, ...)
+        cumA, hin = jax.lax.associative_scan(combine, (a_c, b_c), axis=1)
+        h_all = hin + cumA * h[:, None]
+        return h_all[:, -1], emit(h_all, x_c)
+
+    hT, ys = jax.lax.scan(chunk_step, h0, xs_c)
+    ys = ys.swapaxes(0, 1)
+    return ys.reshape(ys.shape[0], seq_len, *ys.shape[3:]), hT
+
+
+# ----------------------------------------------------------------- mamba1 --
+def mamba1_init(key, cfg, dtype):
+    d = cfg.d_model
+    c = cfg.ssm
+    di = d * c.expand
+    dtr = c.dt_rank or d // 16
+    ks = jax.random.split(key, 6)
+    # dt_in/bc_proj are the two halves of the reference x_proj, split so
+    # each output dim shards cleanly (DESIGN.md §4).
+    return {
+        "in_proj": jax.random.normal(ks[0], (d, 2 * di), dtype) * d ** -0.5,
+        "conv_w": jax.random.normal(ks[1], (di, c.d_conv), dtype) * 0.2,
+        "dt_in": jax.random.normal(ks[2], (di, dtr), dtype) * di ** -0.5,
+        "bc_proj": jax.random.normal(ks[5], (di, 2 * c.d_state), dtype)
+        * di ** -0.5,
+        "dt_proj": jax.random.normal(ks[3], (dtr, di), dtype) * dtr ** -0.5,
+        "dt_bias": jnp.zeros((di,), jnp.float32),
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, c.d_state + 1, dtype=jnp.float32),
+                                  (di, 1))),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": jax.random.normal(ks[4], (di, d), dtype) * di ** -0.5,
+    }
+
+
+def _mamba1_core(p, x, z, cfg, h0, engine):
+    """x, z: (B, S, Di) post-conv and gate. Returns (y, hT)."""
+    c = cfg.ssm
+    dt = apply_linear(x, p["dt_in"], out_dtype=jnp.float32)
+    bc = apply_linear(x, p["bc_proj"], out_dtype=jnp.float32)
+    bmat, cmat = jnp.split(bc, 2, axis=-1)
+    dt = jax.nn.softplus(apply_linear(dt, p["dt_proj"],
+                                      out_dtype=jnp.float32)
+                         + p["dt_bias"])                       # (B,S,Di)
+    a = -jnp.exp(p["A_log"])                                   # (Di, N)
+    xf = x.astype(jnp.float32)
+
+    def make_ab(xs):
+        # works on per-step (B, Di)/(B, N) and per-chunk (B, Q, ...) slices
+        dA = jnp.exp(xs["dt"][..., None] * a)                  # (...,Di,N)
+        dBx = (xs["dt"] * xs["x"])[..., None] * xs["b"][..., None, :]
+        return dA, dBx
+
+    def emit(h, xs):
+        return jnp.einsum("...dn,...n->...d", h, xs["c"])
+
+    ys, hT = _ssm_scan(make_ab, emit,
+                       {"dt": dt, "x": xf, "b": bmat, "c": cmat},
+                       h0, engine, c.chunk, x.shape[1])
+    y = ys + p["D"] * xf
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    return apply_linear(y, p["out_proj"]), hT
+
+
+def mamba1_apply(p, xin, cfg, *, engine="sequential"):
+    b = xin.shape[0]
+    di = cfg.d_model * cfg.ssm.expand
+    xz = apply_linear(xin, p["in_proj"])
+    x, z = jnp.split(xz, 2, axis=-1)
+    x, _ = _causal_conv(x, p["conv_w"])
+    x = jax.nn.silu(x)
+    h0 = jnp.zeros((b, di, cfg.ssm.d_state), jnp.float32)
+    y, _ = _mamba1_core(p, x, z, cfg, h0, engine)
+    return y
+
+
+def mamba1_prefill(p, xin, cfg, *, engine="sequential"):
+    """Full-sequence pass that also returns the decode cache."""
+    b = xin.shape[0]
+    di = cfg.d_model * cfg.ssm.expand
+    xz = apply_linear(xin, p["in_proj"])
+    x, z = jnp.split(xz, 2, axis=-1)
+    xc, tail = _causal_conv(x, p["conv_w"])
+    xc = jax.nn.silu(xc)
+    h0 = jnp.zeros((b, di, cfg.ssm.d_state), jnp.float32)
+    y, hT = _mamba1_core(p, xc, z, cfg, h0, engine)
+    return y, {"h": hT, "conv": tail}
+
+
+def mamba1_init_cache(cfg, batch, dtype):
+    di = cfg.d_model * cfg.ssm.expand
+    return {
+        "h": jnp.zeros((batch, di, cfg.ssm.d_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm.d_conv - 1, di), dtype),
+    }
+
+
+def mamba1_step(p, x1, cache, cfg):
+    """Single-token decode. x1: (B, 1, D)."""
+    xz = apply_linear(x1, p["in_proj"])
+    x, z = jnp.split(xz, 2, axis=-1)
+    x, tail = _causal_conv(x, p["conv_w"], cache["conv"])
+    x = jax.nn.silu(x)
+    y, hT = _mamba1_core(p, x, z, cfg, cache["h"], "sequential")
+    return y, {"h": hT, "conv": tail}
+
+
+# ----------------------------------------------------------------- mamba2 --
+def mamba2_init(key, cfg, dtype):
+    d = cfg.d_model
+    c = cfg.ssm
+    di = d * c.expand
+    nh = di // c.head_dim
+    ks = jax.random.split(key, 5)
+    # zx_proj / bc_in / dt_lin are the reference in_proj split by output
+    # segment so each dim shards cleanly (DESIGN.md §4).
+    return {
+        "zx_proj": jax.random.normal(ks[0], (d, 2 * di), dtype) * d ** -0.5,
+        "bc_in": jax.random.normal(ks[3], (d, 2 * c.d_state), dtype)
+        * d ** -0.5,
+        "dt_lin": jax.random.normal(ks[4], (d, nh), dtype) * d ** -0.5,
+        "conv_w": jax.random.normal(ks[1], (di, c.d_conv), dtype) * 0.2,
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "A_log": jnp.zeros((nh,), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "out_proj": jax.random.normal(ks[2], (di, d), dtype) * di ** -0.5,
+    }
+
+
+def _m2_split(p, xin, cfg):
+    c = cfg.ssm
+    di = cfg.d_model * c.expand
+    nh = di // c.head_dim
+    zx = apply_linear(xin, p["zx_proj"])
+    z, x = jnp.split(zx, 2, axis=-1)
+    bc = apply_linear(xin, p["bc_in"])
+    bmat, cmat = jnp.split(bc, 2, axis=-1)
+    dt = apply_linear(xin, p["dt_lin"], out_dtype=jnp.float32)
+    return z, x, bmat, cmat, dt, nh
+
+
+def _m2_core(p, x, z, bmat, cmat, dt, cfg, h0, engine, nh):
+    c = cfg.ssm
+    b, s = x.shape[:2]
+    hd = c.head_dim
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    a = -jnp.exp(p["A_log"])                                     # (H,)
+    xh = x.astype(jnp.float32).reshape(b, s, nh, hd)
+    bf = bmat.astype(jnp.float32)
+    cf = cmat.astype(jnp.float32)
+
+    def make_ab(xs):
+        dA = jnp.exp(xs["dt"] * a)[..., None, None]     # (...,H,1,1)
+        dBx = (xs["dt"][..., None] * xs["x"])[..., None] * \
+            xs["b"][..., None, None, :]                 # (...,H,hd,N)
+        return dA, dBx
+
+    def emit(h, xs):
+        return jnp.einsum("...hdn,...n->...hd", h, xs["c"])
+
+    ys, hT = _ssm_scan(make_ab, emit,
+                       {"dt": dt, "x": xh, "b": bf, "c": cf},
+                       h0, engine, c.chunk, s)
+    y = ys + p["D"][..., None] * xh
+    y = y.reshape(b, s, nh * hd)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    return apply_linear(y, p["out_proj"]), hT
+
+
+def mamba2_apply(p, xin, cfg, *, engine="sequential"):
+    b = xin.shape[0]
+    c = cfg.ssm
+    z, x, bmat, cmat, dt, nh = _m2_split(p, xin, cfg)
+    x, _ = _causal_conv(x, p["conv_w"])
+    x = jax.nn.silu(x)
+    h0 = jnp.zeros((b, nh, c.head_dim, c.d_state), jnp.float32)
+    y, _ = _m2_core(p, x, z, bmat, cmat, dt, cfg, h0, engine, nh)
+    return y
+
+
+def mamba2_prefill(p, xin, cfg, *, engine="sequential"):
+    b = xin.shape[0]
+    c = cfg.ssm
+    z, x, bmat, cmat, dt, nh = _m2_split(p, xin, cfg)
+    xc, tail = _causal_conv(x, p["conv_w"])
+    xc = jax.nn.silu(xc)
+    h0 = jnp.zeros((b, nh, c.head_dim, c.d_state), jnp.float32)
+    y, hT = _m2_core(p, xc, z, bmat, cmat, dt, cfg, h0, engine, nh)
+    return y, {"h": hT, "conv": tail}
+
+
+def mamba2_init_cache(cfg, batch, dtype):
+    c = cfg.ssm
+    di = cfg.d_model * c.expand
+    nh = di // c.head_dim
+    return {
+        "h": jnp.zeros((batch, nh, c.head_dim, c.d_state), jnp.float32),
+        "conv": jnp.zeros((batch, c.d_conv - 1, di), dtype),
+    }
+
+
+def mamba2_step(p, x1, cache, cfg):
+    z, x, bmat, cmat, dt, nh = _m2_split(p, x1, cfg)
+    x, tail = _causal_conv(x, p["conv_w"], cache["conv"])
+    x = jax.nn.silu(x)
+    y, hT = _m2_core(p, x, z, bmat, cmat, dt, cfg, cache["h"], "sequential",
+                     nh)
+    return y, {"h": hT, "conv": tail}

@@ -1,0 +1,105 @@
+"""Mixture-of-Experts block: top-k routing with capacity-bounded
+scatter/gather dispatch (collective-friendly under GSPMD), shared
+(always-on) experts (DeepSeek-MoE), and an auxiliary load-balance loss.
+
+Dispatch strategy (see DESIGN.md §4): tokens are scattered into per-expert
+buffers (E, C, D) whose positions come from a cumsum over the routing mask —
+no (T, E, C) one-hot tensor is ever materialized, so the memory footprint is
+O(T·E + E·C·D), and under a sharded T the scatter/gather lowers to the
+all-to-all-style collectives real expert parallelism uses. Expert FLOPs are
+the *active* FLOPs (E·C·D·F with C ≈ T·k·cf/E), not the dense E× blow-up.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_linear, mlp_apply, mlp_init
+from repro.runtime.shardctx import get_mesh, maybe_shard
+
+
+def moe_init(key, cfg, dtype):
+    d, f, m = cfg.d_model, cfg.d_ff, cfg.moe
+    ks = jax.random.split(key, 4)
+    e = m.num_experts
+    mats = 3 if cfg.mlp_act in ("swiglu", "geglu") else 2
+    names = ["up", "down", "gate"][:mats]
+    shapes = {"up": (d, f), "down": (f, d), "gate": (d, f)}
+    experts = {
+        n: jax.random.normal(ks[0], (e, *shapes[n]), dtype)
+        * (shapes[n][0] ** -0.5)
+        for n in names
+    }
+    p = {"router": jax.random.normal(ks[1], (d, e), jnp.float32) * d ** -0.5,
+         "experts": experts}
+    if m.num_shared:
+        p["shared"] = mlp_init(ks[2], d, f * m.num_shared, cfg.mlp_act, dtype)
+    return p
+
+
+def _expert_ffn(xb, experts, act):
+    """xb: (E, C, D); experts: dict of (E, K, N) stacks."""
+    def one(x, up, down, gate=None):
+        p = {"up": up, "down": down}
+        if gate is not None:
+            p["gate"] = gate
+        return mlp_apply(x, p, act)
+
+    if "gate" in experts:
+        return jax.vmap(one)(xb, experts["up"], experts["down"], experts["gate"])
+    return jax.vmap(lambda x, u, dn: one(x, u, dn))(
+        xb, experts["up"], experts["down"])
+
+
+def moe_apply(params, x, cfg, *, capacity: int | None = None):
+    """x: (B, S, D) -> (B, S, D), aux load-balance loss."""
+    m = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    e, k = m.num_experts, m.top_k
+    if capacity is None:
+        capacity = max(1, int(t * k * m.capacity_factor / e))
+        if capacity > 512:  # round for clean sharding of the C dim
+            capacity = -(-capacity // 512) * 512
+
+    xt = maybe_shard(x.reshape(t, d), "tokens", None)
+    logits = apply_linear(xt.astype(jnp.float32), params["router"],
+                          out_dtype=jnp.float32)          # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, k)                    # (T, k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # positions within each expert buffer via cumsum over the routing mask
+    mask = jax.nn.one_hot(idx, e, dtype=jnp.int32).sum(1)  # (T, E) in {0..k}
+    pos_in_e = jnp.cumsum(mask, axis=0) - mask             # (T, E) 0-based
+    pos = jnp.take_along_axis(pos_in_e, idx, axis=1)       # (T, k)
+    ok = pos < capacity
+
+    # scatter token copies into (E*C [+1 dump row], D)
+    tgt = jnp.where(ok, idx * capacity + pos, e * capacity)
+    buf = jnp.zeros((e * capacity + 1, d), x.dtype)
+    x_rep = maybe_shard(jnp.repeat(xt, k, axis=0), "tokens", None)
+    buf = buf.at[tgt.reshape(-1)].add(x_rep)
+    buf3 = buf[:-1].reshape(e, capacity, d)
+    # expert-parallel when E divides the model axis, else C over batch only
+    mesh = get_mesh()
+    ep = mesh is not None and e % mesh.shape["model"] == 0
+    buf3 = maybe_shard(buf3, "model" if ep else None, "batch", None)
+    yb = _expert_ffn(buf3, params["experts"], cfg.mlp_act)  # (E, C, D)
+
+    # gather back with gates
+    flat = yb.reshape(e * capacity, d)
+    flat = jnp.concatenate([flat, jnp.zeros((1, d), flat.dtype)], 0)
+    picked = maybe_shard(flat[tgt.reshape(-1)].reshape(t, k, d),
+                         "tokens", None, None)
+    y = maybe_shard(jnp.einsum("tk,tkd->td", gate.astype(x.dtype), picked),
+                    "tokens", None)
+
+    if "shared" in params:
+        y = y + mlp_apply(xt, params["shared"], cfg.mlp_act)
+
+    # Switch-style load-balance aux loss
+    frac_tokens = mask.astype(jnp.float32).mean(0) * e / k
+    frac_prob = probs.mean(0) * e
+    aux = jnp.mean(frac_tokens * frac_prob)
+    return y.reshape(b, s, d), aux

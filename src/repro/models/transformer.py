@@ -1,0 +1,450 @@
+"""Decoder-only LM assembly for every assigned architecture.
+
+Layouts
+  dense  — scan over L identical (attn + MLP) blocks; local/global
+           alternating archs (Gemma2) scan over *pairs* so each member of
+           the pair keeps a static window;
+  moe    — scan over L (attn + MoE) blocks;
+  ssm    — scan over L Mamba1 blocks (attention-free);
+  hybrid — Zamba2: scan over groups of `hybrid_period` Mamba2 blocks, with
+           one *shared-weight* transformer block invoked after each group
+           (fresh KV cache per invocation, shared parameters).
+
+All layer stacks are scan-stacked (leading L dim) so the dry-run compiles
+one body regardless of depth. `forward` returns hidden states; the loss is
+sequence-chunked so (T, vocab) logits never materialize at once.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import mamba
+from repro.models import moe as moe_mod
+from repro.models.layers import (
+    apply_linear, apply_norm, init_norm, mlp_apply, mlp_init, softcap,
+    sinusoidal_emb,
+)
+from repro.runtime.shardctx import maybe_shard
+
+
+# ------------------------------------------------------------------ init --
+def _stack_init(fn, key, n):
+    """vmap a per-layer init over n layer keys -> scan-stacked params."""
+    return jax.vmap(fn)(jax.random.split(key, n))
+
+
+def init_params(key, cfg):
+    dtype = jnp.dtype(cfg.dtype)
+    d = cfg.d_model
+    keys = jax.random.split(key, 8)
+    p = {"embed": jax.random.normal(keys[0], (cfg.vocab_size, d), dtype) * 0.02,
+         "final_norm": init_norm(cfg.norm, d, dtype)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = jax.random.normal(keys[1], (d, cfg.vocab_size),
+                                         dtype) * d ** -0.5
+
+    def dense_block(k):
+        ks = jax.random.split(k, 2)
+        return {
+            "ln1": init_norm(cfg.norm, d, dtype),
+            "attn": attn.attn_init(ks[0], cfg, dtype),
+            "ln2": init_norm(cfg.norm, d, dtype),
+            "mlp": mlp_init(ks[1], d, cfg.d_ff, cfg.mlp_act, dtype),
+        }
+
+    def moe_block(k):
+        ks = jax.random.split(k, 2)
+        return {
+            "ln1": init_norm(cfg.norm, d, dtype),
+            "attn": attn.attn_init(ks[0], cfg, dtype),
+            "ln2": init_norm(cfg.norm, d, dtype),
+            "moe": moe_mod.moe_init(ks[1], cfg, dtype),
+        }
+
+    def mamba_block(k, version):
+        init = mamba.mamba1_init if version == 1 else mamba.mamba2_init
+        return {"ln": init_norm(cfg.norm, d, dtype),
+                "mixer": init(k, cfg, dtype)}
+
+    L = cfg.num_layers
+    if cfg.layout == "dense":
+        if cfg.local_global_period:
+            assert L % 2 == 0
+            p["layers"] = _stack_init(dense_block, keys[2], L)
+        else:
+            p["layers"] = _stack_init(dense_block, keys[2], L)
+    elif cfg.layout == "moe":
+        p["layers"] = _stack_init(moe_block, keys[2], L)
+    elif cfg.layout == "ssm":
+        p["layers"] = _stack_init(
+            functools.partial(mamba_block, version=cfg.ssm.version), keys[2], L)
+    elif cfg.layout == "hybrid":
+        assert L % cfg.hybrid_period == 0
+        p["layers"] = _stack_init(
+            functools.partial(mamba_block, version=cfg.ssm.version), keys[2], L)
+        p["shared_block"] = dense_block(keys[3])
+    else:
+        raise ValueError(cfg.layout)
+    return p
+
+
+# --------------------------------------------------------------- forward --
+def embed(params, inputs, cfg, pos0=0):
+    """inputs: int tokens (B, S) or precomputed embeddings (B, S, D).
+    pos0: absolute position of inputs[:, 0] (decode passes the step)."""
+    dtype = jnp.dtype(cfg.dtype)
+    if inputs.ndim == 3:  # modality-frontend stub: embeddings arrive directly
+        h = inputs.astype(dtype)
+    else:
+        h = jnp.take(params["embed"], inputs, axis=0)
+        if cfg.layout != "ssm":
+            h = h * jnp.asarray(cfg.d_model ** 0.5, dtype)
+    if cfg.pos_emb == "sinusoidal":
+        pos = pos0 + jnp.arange(h.shape[1])
+        h = h + sinusoidal_emb(pos, cfg.d_model, dtype)[None]
+    return maybe_shard(h, "batch", "seq", None)
+
+
+def _window_for_layer(cfg, which):
+    if cfg.local_global_period:
+        return cfg.local_window if which == "local" else None
+    return cfg.attn_window
+
+
+def _dense_body(cfg, h, lp, *, window, return_kv=False):
+    hn = apply_norm(h, lp["ln1"], cfg.norm, cfg.norm_eps)
+    if return_kv:
+        a, kv = attn.attention(lp["attn"], hn, cfg, window=window,
+                               return_kv=True)
+    else:
+        a = attn.attention(lp["attn"], hn, cfg, window=window)
+        kv = None
+    h = maybe_shard(h + a, "batch", "seq", None)
+    hn = apply_norm(h, lp["ln2"], cfg.norm, cfg.norm_eps)
+    if "moe" in lp:
+        y, aux = moe_mod.moe_apply(lp["moe"], hn, cfg)
+    else:
+        y, aux = mlp_apply(hn, lp["mlp"], cfg.mlp_act), 0.0
+    h = maybe_shard(h + y, "batch", "seq", None)
+    return (h, aux, kv) if return_kv else (h, aux)
+
+
+def _mamba_body(cfg, h, lp, *, engine, return_state=False):
+    hn = apply_norm(h, lp["ln"], cfg.norm, cfg.norm_eps)
+    apply = mamba.mamba1_apply if cfg.ssm.version == 1 else mamba.mamba2_apply
+    y = apply(lp["mixer"], hn, cfg, engine=engine)
+    return maybe_shard(h + y, "batch", "seq", None)
+
+
+def _maybe_remat(cfg, fn):
+    if not cfg.remat:
+        return fn
+    if cfg.remat_policy == "dots":
+        # save matmul outputs; recompute only cheap elementwise ops in the
+        # backward pass — trades activation memory for ~25% less recompute
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+def forward(params, inputs, cfg, *, ssm_engine="sequential"):
+    """Returns (final hidden (B,S,D), aux_loss)."""
+    h = embed(params, inputs, cfg)
+    L = cfg.num_layers
+
+    if cfg.layout in ("dense", "moe"):
+        if cfg.local_global_period:
+            pair = jax.tree_util.tree_map(
+                lambda x: x.reshape(L // 2, 2, *x.shape[1:]), params["layers"])
+
+            def body(carry, lp):
+                h, aux = carry
+                lp0 = jax.tree_util.tree_map(lambda x: x[0], lp)
+                lp1 = jax.tree_util.tree_map(lambda x: x[1], lp)
+                h, a0 = _dense_body(cfg, h, lp0, window=cfg.local_window)
+                h, a1 = _dense_body(cfg, h, lp1, window=None)
+                return (h, aux + a0 + a1), None
+
+            (h, aux), _ = jax.lax.scan(_maybe_remat(cfg, body), (h, 0.0), pair)
+        else:
+            def body(carry, lp):
+                h, aux = carry
+                h, a = _dense_body(cfg, h, lp, window=cfg.attn_window)
+                return (h, aux + a), None
+
+            (h, aux), _ = jax.lax.scan(_maybe_remat(cfg, body), (h, 0.0),
+                                       params["layers"])
+    elif cfg.layout == "ssm":
+        def body(h, lp):
+            return _mamba_body(cfg, h, lp, engine=ssm_engine), None
+
+        h, _ = jax.lax.scan(_maybe_remat(cfg, body), h, params["layers"])
+        aux = 0.0
+    elif cfg.layout == "hybrid":
+        p_per = cfg.hybrid_period
+        groups = jax.tree_util.tree_map(
+            lambda x: x.reshape(L // p_per, p_per, *x.shape[1:]),
+            params["layers"])
+        shared = params["shared_block"]
+
+        def group_body(h, gp):
+            def inner(h, lp):
+                return _mamba_body(cfg, h, lp, engine=ssm_engine), None
+            h, _ = jax.lax.scan(inner, h, gp)
+            h, _ = _dense_body(cfg, h, shared, window=cfg.attn_window)
+            return h, None
+
+        h, _ = jax.lax.scan(_maybe_remat(cfg, group_body), h, groups)
+        aux = 0.0
+    else:
+        raise ValueError(cfg.layout)
+
+    return apply_norm(h, params["final_norm"], cfg.norm, cfg.norm_eps), aux
+
+
+def lm_head_weight(params, cfg):
+    return (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+
+
+def logits_for(params, h, cfg):
+    w = lm_head_weight(params, cfg)
+    out = apply_linear(h, w, out_dtype=jnp.float32)
+    return softcap(out, cfg.final_softcap)
+
+
+# ------------------------------------------------------------------ loss --
+def chunked_loss(params, h, labels, cfg):
+    """Mean token cross-entropy, scanning over sequence chunks so the
+    (B, S, V) logits tensor never exists whole."""
+    b, s, d = h.shape
+    c = min(cfg.loss_chunk, s)
+    while s % c:
+        c -= 1
+    nc = s // c
+    w = lm_head_weight(params, cfg)
+
+    def body(acc, xs):
+        hc, yc = xs                                   # (nc axis) (B,c,D),(B,c)
+        logits = softcap(
+            apply_linear(hc, w, out_dtype=jnp.float32), cfg.final_softcap)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, yc[..., None], axis=-1)[..., 0]
+        return acc + jnp.sum(lse - gold), None
+
+    hs = h.reshape(b, nc, c, d).swapaxes(0, 1)
+    ys = labels.reshape(b, nc, c).swapaxes(0, 1)
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hs, ys))
+    return total / (b * s)
+
+
+def loss_fn(params, batch, cfg, *, aux_weight=0.01, ssm_engine="sequential"):
+    inputs = batch.get("inputs_embeds", batch.get("tokens"))
+    h, aux = forward(params, inputs, cfg, ssm_engine=ssm_engine)
+    ce = chunked_loss(params, h, batch["labels"], cfg)
+    return ce + aux_weight * aux, {"ce": ce, "aux": aux}
+
+
+# ----------------------------------------------------------------- cache --
+def init_cache(cfg, batch, max_len, dtype=None):
+    """Decode cache pytree. Shapes are static given (cfg, batch, max_len)."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    L = cfg.num_layers
+
+    def stack(tree, n):
+        return jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x[None], (n, *x.shape)), tree)
+
+    if cfg.layout in ("dense", "moe"):
+        if cfg.local_global_period:
+            loc = attn.init_kv_cache(cfg, batch, max_len,
+                                     window=cfg.local_window, dtype=dtype)
+            glo = attn.init_kv_cache(cfg, batch, max_len, dtype=dtype)
+            return {"local": stack(loc, L // 2), "global": stack(glo, L // 2)}
+        kv = attn.init_kv_cache(cfg, batch, max_len, window=cfg.attn_window,
+                                dtype=dtype)
+        return {"kv": stack(kv, L)}
+    if cfg.layout == "ssm":
+        mc = (mamba.mamba1_init_cache if cfg.ssm.version == 1
+              else mamba.mamba2_init_cache)(cfg, batch, dtype)
+        return {"ssm": stack(mc, L)}
+    if cfg.layout == "hybrid":
+        g = L // cfg.hybrid_period
+        mc = (mamba.mamba1_init_cache if cfg.ssm.version == 1
+              else mamba.mamba2_init_cache)(cfg, batch, dtype)
+        kv = attn.init_kv_cache(cfg, batch, max_len, window=cfg.attn_window,
+                                dtype=dtype)
+        return {"ssm": stack(mc, L), "shared_kv": stack(kv, g)}
+    raise ValueError(cfg.layout)
+
+
+def prefill(params, inputs, cfg, *, max_len=None, cache_dtype=None,
+            ssm_engine="sequential"):
+    """Process a prompt; return (last-position logits (B,1,V), decode cache).
+
+    This is the `prefill_32k` serving entry point: one forward pass that
+    also lays out every layer's KV / SSM state for subsequent decode.
+    """
+    h = embed(params, inputs, cfg)
+    L = cfg.num_layers
+    s = h.shape[1]
+    max_len = max_len or s
+    cdt = cache_dtype or jnp.dtype(cfg.dtype)
+
+    def dense_with_kv(h, lp, window):
+        h2, aux, kv = _dense_body(cfg, h, lp, window=window, return_kv=True)
+        kvc = attn.build_cache_from_kv(
+            kv[0], kv[1], window=window, max_len=max_len, dtype=cdt,
+            quantized=cfg.kv_cache_bits == 8)
+        return h2, kvc
+
+    if cfg.layout in ("dense", "moe"):
+        if cfg.local_global_period:
+            pair = jax.tree_util.tree_map(
+                lambda x: x.reshape(L // 2, 2, *x.shape[1:]), params["layers"])
+
+            def body(h, lp):
+                lp0 = jax.tree_util.tree_map(lambda x: x[0], lp)
+                lp1 = jax.tree_util.tree_map(lambda x: x[1], lp)
+                h, cl = dense_with_kv(h, lp0, cfg.local_window)
+                h, cg = dense_with_kv(h, lp1, None)
+                return h, (cl, cg)
+
+            h, (cl, cg) = jax.lax.scan(_maybe_remat(cfg, body), h, pair)
+            cache = {"local": cl, "global": cg}
+        else:
+            def body(h, lp):
+                return dense_with_kv(h, lp, cfg.attn_window)
+
+            h, kv = jax.lax.scan(_maybe_remat(cfg, body), h, params["layers"])
+            cache = {"kv": kv}
+    elif cfg.layout == "ssm":
+        pre = (mamba.mamba1_prefill if cfg.ssm.version == 1
+               else mamba.mamba2_prefill)
+
+        def body(h, lp):
+            hn = apply_norm(h, lp["ln"], cfg.norm, cfg.norm_eps)
+            y, mc = pre(lp["mixer"], hn, cfg, engine=ssm_engine)
+            return maybe_shard(h + y, "batch", "seq", None), mc
+
+        h, mc = jax.lax.scan(_maybe_remat(cfg, body), h, params["layers"])
+        cache = {"ssm": mc}
+    elif cfg.layout == "hybrid":
+        p_per = cfg.hybrid_period
+        groups = jax.tree_util.tree_map(
+            lambda x: x.reshape(L // p_per, p_per, *x.shape[1:]),
+            params["layers"])
+        shared = params["shared_block"]
+        pre = (mamba.mamba1_prefill if cfg.ssm.version == 1
+               else mamba.mamba2_prefill)
+
+        def body(h, gp):
+            def inner(h, lp):
+                hn = apply_norm(h, lp["ln"], cfg.norm, cfg.norm_eps)
+                y, mc = pre(lp["mixer"], hn, cfg, engine=ssm_engine)
+                return maybe_shard(h + y, "batch", "seq", None), mc
+
+            h, mcs = jax.lax.scan(inner, h, gp)
+            h, kvc = dense_with_kv(h, shared, cfg.attn_window)
+            return h, (mcs, kvc)
+
+        h, (mcs, kv) = jax.lax.scan(_maybe_remat(cfg, body), h, groups)
+        cache = {"ssm": jax.tree_util.tree_map(
+            lambda x: x.reshape(L, *x.shape[2:]), mcs), "shared_kv": kv}
+    else:
+        raise ValueError(cfg.layout)
+
+    h = apply_norm(h, params["final_norm"], cfg.norm, cfg.norm_eps)
+    logits = logits_for(params, h[:, -1:], cfg)
+    return logits, cache
+
+
+def decode_step(params, cache, inputs, pos, cfg):
+    """One decode step. inputs: (B, 1) tokens or (B, 1, D) embeds.
+    Returns (logits (B, 1, V) f32, new cache)."""
+    h = embed(params, inputs, cfg, pos0=pos)
+    L = cfg.num_layers
+
+    def dense_step(h, lp, kvc, window):
+        hn = apply_norm(h, lp["ln1"], cfg.norm, cfg.norm_eps)
+        a, kvc = attn.decode_attention(lp["attn"], hn, kvc, pos, cfg,
+                                       window=window)
+        h = h + a
+        hn = apply_norm(h, lp["ln2"], cfg.norm, cfg.norm_eps)
+        if "moe" in lp:
+            y, _ = moe_mod.moe_apply(lp["moe"], hn, cfg)
+        else:
+            y = mlp_apply(hn, lp["mlp"], cfg.mlp_act)
+        return h + y, kvc
+
+    def mamba_step(h, lp, mc):
+        hn = apply_norm(h, lp["ln"], cfg.norm, cfg.norm_eps)
+        step = mamba.mamba1_step if cfg.ssm.version == 1 else mamba.mamba2_step
+        y, mc = step(lp["mixer"], hn, mc, cfg)
+        return h + y, mc
+
+    if cfg.layout in ("dense", "moe"):
+        if cfg.local_global_period:
+            pair = jax.tree_util.tree_map(
+                lambda x: x.reshape(L // 2, 2, *x.shape[1:]), params["layers"])
+
+            def body(h, xs):
+                lp, cl, cg = xs
+                lp0 = jax.tree_util.tree_map(lambda x: x[0], lp)
+                lp1 = jax.tree_util.tree_map(lambda x: x[1], lp)
+                h, cl = dense_step(h, lp0, cl, cfg.local_window)
+                h, cg = dense_step(h, lp1, cg, None)
+                return h, (cl, cg)
+
+            h, (cl, cg) = jax.lax.scan(body, h,
+                                       (pair, cache["local"], cache["global"]))
+            cache = {"local": cl, "global": cg}
+        else:
+            def body(h, xs):
+                lp, kvc = xs
+                h, kvc = dense_step(h, lp, kvc, cfg.attn_window)
+                return h, kvc
+
+            h, kv = jax.lax.scan(body, h, (params["layers"], cache["kv"]))
+            cache = {"kv": kv}
+    elif cfg.layout == "ssm":
+        def body(h, xs):
+            lp, mc = xs
+            h, mc = mamba_step(h, lp, mc)
+            return h, mc
+
+        h, mc = jax.lax.scan(body, h, (params["layers"], cache["ssm"]))
+        cache = {"ssm": mc}
+    elif cfg.layout == "hybrid":
+        p_per = cfg.hybrid_period
+        groups = jax.tree_util.tree_map(
+            lambda x: x.reshape(L // p_per, p_per, *x.shape[1:]),
+            params["layers"])
+        ssm_groups = jax.tree_util.tree_map(
+            lambda x: x.reshape(L // p_per, p_per, *x.shape[1:]), cache["ssm"])
+        shared = params["shared_block"]
+
+        def body(h, xs):
+            gp, mcs, kvc = xs
+
+            def inner(h, ys):
+                lp, mc = ys
+                h, mc = mamba_step(h, lp, mc)
+                return h, mc
+
+            h, mcs = jax.lax.scan(inner, h, (gp, mcs))
+            h, kvc = dense_step(h, shared, kvc, cfg.attn_window)
+            return h, (mcs, kvc)
+
+        h, (mcs, kv) = jax.lax.scan(body, h,
+                                    (groups, ssm_groups, cache["shared_kv"]))
+        cache = {"ssm": jax.tree_util.tree_map(
+            lambda x: x.reshape(L, *x.shape[2:]), mcs), "shared_kv": kv}
+    else:
+        raise ValueError(cfg.layout)
+
+    h = apply_norm(h, params["final_norm"], cfg.norm, cfg.norm_eps)
+    return logits_for(params, h, cfg), cache

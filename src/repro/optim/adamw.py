@@ -1,0 +1,179 @@
+"""Pure-JAX AdamW with schedules, global-norm clipping, ZeRO-1 sharding
+specs, and an 8-bit (blockwise-int8) state variant.
+
+No optax in this environment — this is a complete implementation. The 8-bit
+variant quantizes the first and second moments blockwise (256-element
+blocks, fp32 absmax per block) after every update: a 4x optimizer-memory
+cut that is one of the distributed-memory levers in §Perf (it is what lets
+the 340B train cell fit a 16 GB/chip pod — see EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    schedule: str = "cosine"        # cosine | linear | constant
+    state_bits: int = 32            # 32 | 8
+
+
+def schedule_lr(cfg: AdamWConfig, step):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    frac = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    if cfg.schedule == "cosine":
+        decay = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    elif cfg.schedule == "linear":
+        decay = 1.0 - frac
+    else:
+        decay = 1.0
+    return cfg.lr * warm * decay
+
+
+# --------------------------------------------------- blockwise int8 state --
+_BLK = 256
+
+
+def _q8(x: jax.Array):
+    """Symmetric linear int8 (for the signed first moment m)."""
+    flat = x.reshape(-1)
+    pad = (-flat.size) % _BLK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, _BLK)
+    absmax = jnp.max(jnp.abs(blocks), axis=1, keepdims=True)
+    scale = jnp.where(absmax > 0, absmax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return {"q": q, "scale": scale.astype(jnp.float32)}
+
+
+def _dq8(s, shape):
+    flat = (s["q"].astype(jnp.float32) * s["scale"]).reshape(-1)
+    n = 1
+    for d in shape:
+        n *= int(d)
+    return flat[:n].reshape(shape)
+
+
+_VLOG_FLOOR = 1e-16
+
+
+def _q8log(x: jax.Array):
+    """Log-space int8 (for the non-negative second moment v).
+
+    Linear quantization zero-crushes small v inside blocks that contain
+    large values -> 1/sqrt(0)+eps update spikes and divergence. Log-space
+    codes bound the *relative* error instead (bitsandbytes-style)."""
+    flat = jnp.maximum(x.reshape(-1), 0.0)
+    pad = (-flat.size) % _BLK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = jnp.log(flat.reshape(-1, _BLK) + _VLOG_FLOOR)
+    lo = jnp.min(blocks, axis=1, keepdims=True)
+    hi = jnp.max(blocks, axis=1, keepdims=True)
+    scale = jnp.maximum(hi - lo, 1e-6) / 254.0
+    q = jnp.clip(jnp.round((blocks - lo) / scale) - 127, -127,
+                 127).astype(jnp.int8)
+    return {"q": q, "scale": scale.astype(jnp.float32),
+            "off": lo.astype(jnp.float32)}
+
+
+def _dq8log(s, shape):
+    blocks = jnp.exp((s["q"].astype(jnp.float32) + 127.0) * s["scale"]
+                     + s["off"]) - _VLOG_FLOOR
+    flat = jnp.maximum(blocks, 0.0).reshape(-1)
+    n = 1
+    for d in shape:
+        n *= int(d)
+    return flat[:n].reshape(shape)
+
+
+# ----------------------------------------------------------------- adamw --
+def init(params, cfg: AdamWConfig):
+    def zeros(p, log=False):
+        z = jnp.zeros(p.shape, jnp.float32)
+        if cfg.state_bits == 8:
+            return _q8log(z) if log else _q8(z)
+        return z
+
+    return {
+        "m": jax.tree_util.tree_map(zeros, params),
+        "v": jax.tree_util.tree_map(lambda p: zeros(p, log=True), params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree):
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def update(grads, state, params, cfg: AdamWConfig):
+    """Returns (new_params, new_state, metrics)."""
+    count = state["count"] + 1
+    lr = schedule_lr(cfg, count)
+
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+
+    def leaf(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        if cfg.state_bits == 8:
+            m = _dq8(m, g.shape)
+            v = _dq8log(v, g.shape)
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mh = m / (1 - cfg.b1 ** count.astype(jnp.float32))
+        vh = v / (1 - cfg.b2 ** count.astype(jnp.float32))
+        upd = mh / (jnp.sqrt(vh) + cfg.eps)
+        decay = cfg.weight_decay if p.ndim >= 2 else 0.0
+        newp = (p.astype(jnp.float32) * (1 - lr * decay) - lr * upd)
+        if cfg.state_bits == 8:
+            m, v = _q8(m), _q8log(v)
+        return newp.astype(p.dtype), m, v
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    flat_p = treedef.flatten_up_to(params)
+    out = [leaf(g, m, v, p)
+           for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    new_state = {"m": new_m, "v": new_v, "count": count}
+    return new_p, new_state, {"grad_norm": gnorm, "lr": lr}
+
+
+def zero1_pspec(param_spec, shape, mesh, axis: str = "data"):
+    """ZeRO-1: shard an optimizer-state leaf over `axis` along the first
+    dimension the param spec leaves unsharded and divisible."""
+    if axis not in mesh.axis_names:
+        return param_spec
+    size = mesh.shape[axis]
+    specs = list(param_spec) + [None] * (len(shape) - len(param_spec))
+    used = {a for s in specs if s is not None
+            for a in (s if isinstance(s, tuple) else (s,))}
+    if axis in used:          # param spec already consumes this axis
+        return param_spec
+    for i, (s, d) in enumerate(zip(specs, shape)):
+        if s is None and d % size == 0:
+            specs[i] = axis
+            return jax.sharding.PartitionSpec(*specs)
+    return param_spec

@@ -1,0 +1,81 @@
+"""Elastic scaling: resume a checkpoint on a different mesh.
+
+A checkpoint stores *global* arrays (path-keyed npz). Resuming on a new
+mesh is therefore only a question of (a) rebuilding shardings for the new
+mesh from the same logical rules and (b) device_put-ing each restored
+array with them — checkpoint/ckpt.restore already takes a shardings
+pytree. This module adds the policy layer:
+
+  * `viable_meshes(n_devices)` — the (data, model) factorizations a given
+    surviving-device count supports;
+  * `shrink_mesh(mesh, lost_axis_index)` — the mesh you re-form after
+    excluding a failed/straggling slice (drop the pod, halve data, ...);
+  * `elastic_restore(...)` — end-to-end: new mesh -> new shardings ->
+    restored state, asserting divisibility of every global shape.
+
+Tests exercise save-on-mesh-A / restore-on-mesh-B with different axis
+sizes and check bit-identical global arrays.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+
+from repro.checkpoint import ckpt as ckpt_lib
+
+
+def viable_meshes(n_devices: int):
+    """(data, model) factorizations, largest model-parallel first."""
+    out = []
+    m = 1
+    while m <= n_devices:
+        if n_devices % m == 0:
+            out.append((n_devices // m, m))
+        m *= 2
+    return out
+
+
+def make_mesh(shape, axes):
+    devs = np.array(jax.devices()[: int(np.prod(shape))]).reshape(shape)
+    return Mesh(devs, axes)
+
+
+def shrink_mesh(mesh: Mesh, *, drop_axis: str):
+    """Re-form the mesh without one slice of `drop_axis` (failed pod/host).
+
+    Keeps every other axis; the dropped axis loses one slice (size-1 axes
+    disappear entirely) — the single-process analog of re-forming the ICI
+    mesh around a dead pod.
+    """
+    names = list(mesh.axis_names)
+    sizes = dict(zip(names, mesh.devices.shape))
+    if sizes[drop_axis] <= 1:
+        names.remove(drop_axis)
+        new_shape = [sizes[n] for n in names]
+        devs = mesh.devices.reshape(-1)[: int(np.prod(new_shape))]
+        return Mesh(devs.reshape(new_shape), tuple(names))
+    idx = [slice(None)] * len(names)
+    idx[names.index(drop_axis)] = slice(0, sizes[drop_axis] - 1)
+    return Mesh(mesh.devices[tuple(idx)], tuple(names))
+
+
+def elastic_restore(ckpt_dir: str, like, mesh: Mesh, spec_fn, step=None):
+    """Restore `like`-shaped state onto `mesh` using spec_fn(path, leaf)->
+    PartitionSpec. Raises if any global shape does not divide."""
+    flat = jax.tree_util.tree_flatten_with_path(like)
+    shardings = []
+    for path, leaf in flat[0]:
+        spec = spec_fn(path, leaf)
+        for dim, axis in zip(leaf.shape, spec):
+            if axis is None:
+                continue
+            size = (np.prod([mesh.shape[a] for a in axis])
+                    if isinstance(axis, tuple) else mesh.shape[axis])
+            if dim % size:
+                raise ValueError(
+                    f"{path}: dim {dim} not divisible by axis {axis}={size}"
+                    " on the new mesh")
+        shardings.append(NamedSharding(mesh, spec))
+    shard_tree = jax.tree_util.tree_unflatten(flat[1], shardings)
+    return ckpt_lib.restore(ckpt_dir, like, step, shardings=shard_tree)

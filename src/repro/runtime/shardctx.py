@@ -1,0 +1,85 @@
+"""Logical-axis sharding context.
+
+Model code never mentions meshes: it calls `maybe_shard(x, "batch", None,
+"model")` with *logical* axis names. When a mesh is installed (launcher /
+dry-run) the names resolve to physical mesh axes and become
+with_sharding_constraint; with no mesh installed (unit tests, CPU smoke
+runs) the call is a no-op.
+
+Logical -> physical:
+  batch  -> ("pod", "data") on a multi-pod mesh, ("data",) single-pod
+  model  -> ("model",)
+  data   -> ("data",)
+  None   -> unsharded
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_MESH: jax.sharding.Mesh | None = None
+
+
+def set_mesh(mesh) -> None:
+    global _MESH
+    _MESH = mesh
+
+
+def get_mesh():
+    return _MESH
+
+
+@contextlib.contextmanager
+def use_mesh(mesh):
+    global _MESH
+    prev = _MESH
+    _MESH = mesh
+    try:
+        with mesh:
+            yield mesh
+    finally:
+        _MESH = prev
+
+
+def resolve_axis(name, mesh):
+    if name is None:
+        return None
+    if name == "batch":
+        return ("pod", "data") if "pod" in mesh.axis_names else "data"
+    if name == "seq":        # sequence parallelism rides the model axis
+        return "model"
+    if name == "tokens":     # flattened (batch*seq) dim: all axes merged
+        return tuple(a for a in ("pod", "data", "model")
+                     if a in mesh.axis_names)
+    if name in mesh.axis_names:
+        return name
+    return None
+
+
+def logical_spec(names, mesh) -> P:
+    return P(*(resolve_axis(n, mesh) for n in names))
+
+
+def _axis_size(axis, mesh):
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        n = 1
+        for a in axis:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axis]
+
+
+def maybe_shard(x, *names):
+    """Logical sharding constraint; axes that don't divide the dim are
+    dropped (no silent GSPMD padding on activations)."""
+    if _MESH is None:
+        return x
+    axes = [resolve_axis(n, _MESH) for n in names]
+    axes = [a if a is not None and d % _axis_size(a, _MESH) == 0 else None
+            for a, d in zip(axes, x.shape)]
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_MESH, P(*axes)))

@@ -1,0 +1,124 @@
+"""Per-kernel validation: shape/dtype sweeps against the pure-jnp oracles,
+in interpret mode (the kernel body executes on CPU exactly as written)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.itera import itera_decompose, svd_decompose
+from repro.core.quant import quantize
+from repro.kernels import ops, ref
+from repro.kernels.lowrank_qmm import lowrank_qmm, vmem_bytes as lr_vmem
+from repro.kernels.quant_matmul import quant_matmul, vmem_bytes as qm_vmem
+
+SHAPES_QMM = [
+    (8, 128, 128),       # minimal aligned
+    (48, 192, 320),      # nothing divides the defaults -> padding path
+    (256, 512, 512),     # the paper's workload (M=K=N=512 with batch 256)
+    (1, 96, 640),        # decode-like M=1
+    (130, 1024, 256),    # M just over a block
+]
+
+
+@pytest.mark.parametrize("m,k,n", SHAPES_QMM)
+@pytest.mark.parametrize("wl", [4, 8])
+def test_quant_matmul_vs_oracle(m, k, n, wl):
+    key = jax.random.PRNGKey(m * 7 + k + n + wl)
+    kx, kw = jax.random.split(key)
+    x = jax.random.normal(kx, (m, k), jnp.float32)
+    w = jax.random.normal(kw, (k, n), jnp.float32) / np.sqrt(k)
+    wq = quantize(w, wl, axis=0)
+    y_kernel = ops.qmm(x, wq, use_kernel=True, interpret=True)
+    y_oracle = ops.qmm(x, wq, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(y_kernel), np.asarray(y_oracle),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_quant_matmul_out_dtypes(dtype):
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (16, 256), jnp.float32)
+    wq = quantize(jax.random.normal(key, (256, 128)) * 0.1, 8, axis=0)
+    y = ops.qmm(x, wq, use_kernel=True, interpret=True, out_dtype=dtype)
+    assert y.dtype == dtype
+
+
+SHAPES_LR = [
+    (8, 128, 128, 16),
+    (48, 192, 320, 96),     # all-padding path
+    (256, 512, 512, 128),   # paper Fig. 10 workload (rank 128)
+    (1, 256, 512, 32),      # decode-like
+    (64, 1024, 768, 200),   # rank not 128-aligned
+]
+
+
+@pytest.mark.parametrize("m,k,n,r", SHAPES_LR)
+@pytest.mark.parametrize("wl", [4, 6, 8])
+def test_lowrank_qmm_vs_oracle(m, k, n, r, wl):
+    key = jax.random.PRNGKey(m + k + n + r + wl)
+    kx, kw = jax.random.split(key)
+    x = jax.random.normal(kx, (m, k), jnp.float32)
+    w = jax.random.normal(kw, (k, n), jnp.float32) / np.sqrt(k)
+    lr = svd_decompose(w, r, wl)
+    y_kernel = ops.lrmm(x, lr, use_kernel=True, interpret=True, fused=True)
+    y_oracle = ops.lrmm(x, lr, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(y_kernel), np.asarray(y_oracle),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("fused", [True, False])
+def test_cascade_vs_single_engine_same_math(fused):
+    """Single (unfused) and Cascade (fused) schedules agree bit-for-bit."""
+    key = jax.random.PRNGKey(5)
+    x = jax.random.normal(key, (32, 256), jnp.float32)
+    w = jax.random.normal(key, (256, 384), jnp.float32) * 0.05
+    lr = itera_decompose(w, 64, 6)
+    y = ops.lrmm(x, lr, use_kernel=True, interpret=True, fused=fused)
+    y_ref = ops.lrmm(x, lr, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_lowrank_error_vs_exact_small():
+    """End-to-end quantized cascade stays close to the fp product."""
+    key = jax.random.PRNGKey(9)
+    x = jax.random.normal(key, (64, 512), jnp.float32)
+    w = jax.random.normal(key, (512, 512), jnp.float32) / 22.6
+    lr = itera_decompose(w, 256, 8)
+    y = ops.lrmm(x, lr, use_kernel=True, interpret=True)
+    y_exact = x @ (lr.w1.dequant() @ lr.w2.dequant())
+    rel = float(jnp.linalg.norm(y - y_exact) / jnp.linalg.norm(y_exact))
+    assert rel < 0.03
+
+
+def test_batched_leading_dims():
+    """ops wrappers accept (..., K) activations."""
+    key = jax.random.PRNGKey(2)
+    x = jax.random.normal(key, (2, 5, 96), jnp.float32)
+    wq = quantize(jax.random.normal(key, (96, 64)) * 0.1, 8, axis=0)
+    y = ops.qmm(x, wq, use_kernel=True, interpret=True)
+    assert y.shape == (2, 5, 64)
+    lr = svd_decompose(jax.random.normal(key, (96, 64)) * 0.1, 16, 8)
+    y2 = ops.lrmm(x, lr, use_kernel=True, interpret=True)
+    assert y2.shape == (2, 5, 64)
+
+
+def test_vmem_budget_respected():
+    """Auto-chosen blocks keep the working set under the VMEM budget."""
+    for (m, k, n, r) in [(4096, 18432, 73728, 512), (256, 512, 512, 128),
+                         (1, 8192, 1024, 64)]:
+        bm, bk, bn = ops.choose_blocks(m, k, n, r)
+        assert lr_vmem(bm, bk, bn, r) <= ops.VMEM_BUDGET
+        bm2, bk2, bn2 = ops.choose_blocks(m, k, n)
+        assert qm_vmem(bm2, bk2, bn2) <= ops.VMEM_BUDGET
+        for b, d in ((bk, 128), (bn, 128)):
+            assert b % d == 0
+
+
+def test_requant_rows_matches_kernel_phase_boundary():
+    t = jnp.array([[0.5, -3.0, 2.0], [0.0, 0.0, 0.0]])
+    tq, st = ref.requant_rows(t)
+    assert tq.dtype == jnp.int8
+    np.testing.assert_allclose(np.asarray(tq[1]), 0)
+    np.testing.assert_allclose(np.asarray(tq.astype(np.float32) * st),
+                               np.asarray(t), atol=3e-2)

@@ -1,0 +1,95 @@
+"""Property tests for the fixed-point quantization layer (paper §III)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quant import (
+    fake_quant, pack_int4, qmax, quant_linear_ref, quantize, unpack_int4,
+)
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def arrays(draw, shape):
+    data = draw(st.lists(
+        st.floats(-100, 100, allow_nan=False, width=32),
+        min_size=int(np.prod(shape)), max_size=int(np.prod(shape))))
+    return np.asarray(data, np.float32).reshape(shape)
+
+
+@st.composite
+def matrix(draw):
+    k = draw(st.integers(2, 24))
+    n = draw(st.integers(2, 24))
+    return arrays(draw, (k, n))
+
+
+@given(matrix(), st.sampled_from([4, 6, 8]))
+def test_roundtrip_error_bound(w, wl):
+    """|dequant(quant(x)) - x| <= scale/2 elementwise."""
+    q = quantize(jnp.asarray(w), wl, axis=0)
+    err = np.abs(np.asarray(q.dequant()) - w)
+    bound = np.asarray(q.scale) / 2 + 1e-6
+    assert (err <= bound + 1e-4 * np.abs(w)).all()
+
+
+@given(matrix(), st.sampled_from([4, 6, 8]))
+def test_codes_in_range(w, wl):
+    q = quantize(jnp.asarray(w), wl, axis=0)
+    m = qmax(wl)
+    assert int(jnp.max(jnp.abs(q.values.astype(jnp.int32)))) <= m
+
+
+@given(matrix())
+def test_idempotent(w):
+    """fake_quant(fake_quant(x)) == fake_quant(x)."""
+    a = fake_quant(jnp.asarray(w), 6, axis=0)
+    b = fake_quant(a, 6, axis=0)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                               atol=1e-5)
+
+
+@given(matrix(), st.sampled_from([4, 6, 8]))
+def test_monotone_in_bits(w, wl):
+    """More bits never increases the Frobenius reconstruction error."""
+    wj = jnp.asarray(w)
+    errs = [float(jnp.linalg.norm(wj - quantize(wj, b, 0).dequant()))
+            for b in (4, 6, 8)]
+    assert errs[0] >= errs[1] >= errs[2] - 1e-5
+
+
+def test_error_decreases_with_bits_realistic():
+    key = jax.random.PRNGKey(0)
+    w = jax.random.normal(key, (128, 128))
+    errs = {b: float(jnp.linalg.norm(w - quantize(w, b, 0).dequant())
+                     / jnp.linalg.norm(w)) for b in (4, 6, 8)}
+    assert errs[4] > 2 * errs[6] > 3 * errs[8]
+
+
+def test_quant_linear_ref_shapes():
+    key = jax.random.PRNGKey(1)
+    x = jax.random.normal(key, (5, 16))
+    w = jax.random.normal(key, (16, 8))
+    y = quant_linear_ref(x, w, 8, 8)
+    assert y.shape == (5, 8)
+    rel = float(jnp.linalg.norm(y - x @ w) / jnp.linalg.norm(x @ w))
+    assert rel < 0.05
+
+
+@given(st.integers(1, 12), st.integers(1, 12))
+def test_pack_unpack_int4(r, c):
+    rng = np.random.default_rng(0)
+    codes = rng.integers(-8, 8, size=(r, 2 * c)).astype(np.int8)
+    packed = pack_int4(jnp.asarray(codes))
+    assert packed.shape == (r, c)
+    out = unpack_int4(packed)
+    np.testing.assert_array_equal(np.asarray(out), codes)
+
+
+def test_storage_bits_accounting():
+    w = jnp.ones((64, 32))
+    q = quantize(w, 4, axis=0)
+    assert q.storage_bits() == 64 * 32 * 4 + 32 * 32

@@ -1,0 +1,89 @@
+"""Print before/after roofline comparisons for the §Perf hillclimbs."""
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                "benchmarks"))
+from roofline import roofline_row  # noqa: E402
+
+
+def load(cell, out="results/dryrun"):
+    for d in (out, "results/dryrun_perf"):
+        p = os.path.join(d, cell + ".json")
+        if os.path.exists(p):
+            rec = json.load(open(p))
+            if rec.get("status") == "ok":
+                return roofline_row(rec)
+    return None
+
+
+def row(label, cell):
+    r = load(cell)
+    if r is None:
+        print(f"| {label} | - | - | - | - | - | - |")
+        return None
+    dom = max(("compute", "memory", "collective"),
+              key=lambda k: r[f"t_{k}_s" if k != "collective" else
+                             "t_collective_s"])
+    print(f"| {label} | {r['t_compute_s']:.4g} | {r['t_memory_s']:.4g} "
+          f"| {r['t_collective_s']:.4g} | {r['dominant']} "
+          f"| {r['roofline_mfu']:.4f} | {r['peak_gib']:.2f} |")
+    return r
+
+
+GROUPS = [
+    ("H1: mixtral-8x22b long_500k (single) — paper technique on weight-bound decode", [
+        ("baseline (dense bf16)", "mixtral-8x22b__long_500k__single"),
+        ("quant-only W4 (paper baseline)", "mixtral-8x22b__long_500k__single__quant"),
+        ("ITERA W4 r=0.35 (paper method)", "mixtral-8x22b__long_500k__single__itera"),
+        ("+ int8 KV cache (beyond-paper)", "mixtral-8x22b__long_500k__single__kv8"),
+    ]),
+    ("H2: decode_32k — cache-bound serving", [
+        ("stablelm baseline", "stablelm-12b__decode_32k__single"),
+        ("stablelm int8 KV", "stablelm-12b__decode_32k__single__kv8"),
+        ("stablelm ITERA W4", "stablelm-12b__decode_32k__single__itera"),
+        ("stablelm quant W4", "stablelm-12b__decode_32k__single__quant"),
+        ("nemotron baseline", "nemotron-4-340b__decode_32k__single"),
+        ("nemotron int8 KV", "nemotron-4-340b__decode_32k__single__kv8"),
+        ("nemotron int8 KV multi-pod", "nemotron-4-340b__decode_32k__multi__kv8"),
+    ]),
+    ("H3: zamba2-2.7b train_4k (single) — SSM scan engine", [
+        ("baseline (sequential scan)", "zamba2-2.7b__train_4k__single"),
+        ("falcon-mamba baseline (sequential)", "falcon-mamba-7b__train_4k__single"),
+    ]),
+    ("H4: stablelm-12b train_4k variants", [
+        ("baseline (full remat)", "stablelm-12b__train_4k__single"),
+        ("dots remat policy", "stablelm-12b__train_4k__single__dots"),
+        ("loss chunk 4096", "stablelm-12b__train_4k__single__lchunk4k"),
+    ]),
+]
+
+
+def main():
+    for title, rows in GROUPS:
+        print(f"\n#### {title}\n")
+        print("| config | compute s | memory s | collective s | dominant "
+              "| roofline-MFU | peak GiB/dev |")
+        print("|---|--:|--:|--:|---|--:|--:|")
+        for label, cell in rows:
+            row(label, cell)
+    # perf-dir cells (chunked engines)
+    print("\n#### H3 chunked-scan measurements (results/dryrun_perf)\n")
+    print("| config | compute s | memory s | collective s | dominant "
+          "| roofline-MFU | peak GiB/dev |")
+    print("|---|--:|--:|--:|---|--:|--:|")
+    for f in sorted(glob.glob("results/dryrun_perf/*.json")):
+        rec = json.load(open(f))
+        if rec.get("status") != "ok":
+            continue
+        r = roofline_row(rec)
+        print(f"| {r['cell']} | {r['t_compute_s']:.4g} "
+              f"| {r['t_memory_s']:.4g} | {r['t_collective_s']:.4g} "
+              f"| {r['dominant']} | {r['roofline_mfu']:.4f} "
+              f"| {r['peak_gib']:.2f} |")
+
+
+if __name__ == "__main__":
+    main()
