@@ -6,44 +6,61 @@ memory-bound). Claims checked:
   * bandwidth-limited: W4A8 ITERA(+SRA) dominates (higher compression);
   * in both regimes, ITERA beats quant-only at comparable accuracy
     (paper: 12.1%..41.1% linear-layer latency reduction).
+
+Candidates are `CompressionPlan`s; each regime's best design point is
+serialized to results/fig11_best_plan_<regime>.json, directly consumable
+by `python -m repro.launch.serve --plan <file>` — the DSE→deployment loop.
 """
-from common import BLOCK_LINEARS, DecompCache, train_proxy, token_accuracy, csv_row
+import os
+
+from common import (
+    BLOCK_LINEARS, RESULTS, DecompCache, train_proxy, token_accuracy, csv_row,
+)
+from repro.api import CompressionPlan, LayerPlan
 from repro.core.compress import CompressionConfig
-from repro.core.sra import uniform_allocation
 from repro.hw import dse
 from repro.hw.dse import LayerShape
 
 
 def candidate_points(params, cfg, task):
-    """(label, wl, method, acc, per-layer shapes+ranks) candidates."""
+    """(plan, acc, per-layer shapes+ranks) candidates. The LayerShape list
+    keeps DecompCache's per-slice ranks for the latency model; the plan is
+    the deployable per-layer (method, wl, rank) record."""
     out = []
     for wl in (8, 6, 4):
-        dcq = DecompCache(params, CompressionConfig(method="quant",
-                                                    weight_wl=wl, exclude=BLOCK_LINEARS))
+        qcfg = CompressionConfig(method="quant", weight_wl=wl,
+                                 exclude=BLOCK_LINEARS)
+        dcq = DecompCache(params, qcfg)
         acc = token_accuracy(dcq.compressed_params(params, 0, "quant"),
                              cfg, task)
-        layers = [LayerShape(f"{p}#{i}", w.shape[0], w.shape[1], None)
+        layers = [LayerShape(f"{p}#{i}", w.shape[0], w.shape[1], None, wl=wl)
                   for (p, i), w in dcq.mats.items()]
-        out.append({"label": f"quant_W{wl}", "wl": wl, "acc": acc,
-                    "layers": layers})
+        out.append({"plan": CompressionPlan.from_config(params, qcfg),
+                    "acc": acc, "layers": layers})
 
-        dc = DecompCache(params, CompressionConfig(method="itera",
-                                                   weight_wl=wl, exclude=BLOCK_LINEARS))
+        icfg = CompressionConfig(method="itera", weight_wl=wl,
+                                 exclude=BLOCK_LINEARS)
+        dc = DecompCache(params, icfg)
         L = dc.num_layers
         full = max(dc.max_rank(p) for p in dc.targets)
         for frac in (0.7, 0.5, 0.35):
-            ranks = uniform_allocation(L, max(L, int(L * full * frac)),
-                                       [full] * L)
+            # a plan-expressible allocation: one rank per path, identical
+            # across the scan stack, so the serialized plan encodes EXACTLY
+            # the ranks this candidate is scored at (no rank_for rounding).
+            r = max(1, int(round(full * frac)))
             acc = token_accuracy(
-                dc.compressed_params(params, ranks, "itera"), cfg, task,
+                dc.compressed_params(params, [r] * L, "itera"), cfg, task,
                 batches=3)
             layers = [
                 LayerShape(f"{p}#{i}", w.shape[0], w.shape[1],
-                           min(ranks[i if i is not None else 0],
-                               min(w.shape)))
+                           min(r, min(w.shape)), wl=wl)
                 for (p, i), w in dc.mats.items()]
-            out.append({"label": f"itera_W{wl}_f{frac}", "wl": wl,
-                        "acc": acc, "layers": layers})
+            plan = CompressionPlan(
+                layers=tuple(LayerPlan(p, "itera", wl,
+                                       min(r, dc.max_rank(p)))
+                             for p in dc.targets),
+                label=f"itera_W{wl}_f{frac}").validate(params)
+            out.append({"plan": plan, "acc": acc, "layers": layers})
     return out
 
 
@@ -55,11 +72,18 @@ def main():
     for bw_scale, regime in ((1.0, "compute_bound"),
                              (0.25, "bandwidth_limited")):
         pts = []
+        points = []
         for c in cands:
             lat, chosen = dse.total_latency_tpu(
-                c["layers"], batch_m, weight_wl=c["wl"], bw_scale=bw_scale)
-            pts.append((c["label"], c["acc"], lat))
-            csv_row(f"fig11_{regime}_{c['label']}", lat * 1e6,
+                c["layers"], batch_m, bw_scale=bw_scale)
+            if lat is None:
+                continue
+            pts.append((c["plan"].label, c["acc"], lat))
+            points.append(dse.DesignPoint(
+                label=c["plan"].label, quality=c["acc"], latency=lat,
+                compression_ratio=0.0, nops=0.0, per_layer=chosen,
+                plan=c["plan"]))
+            csv_row(f"fig11_{regime}_{c['plan'].label}", lat * 1e6,
                     f"acc={c['acc']:.4f}")
         # latency reduction vs quant baseline at comparable accuracy
         quant_pts = {l: (a, t) for l, a, t in pts if l.startswith("quant")}
@@ -74,6 +98,17 @@ def main():
             csv_row(f"fig11_{regime}_latency_reduction", 0.0,
                     f"vs={ql};using={il};reduction_pct={red:.1f};"
                     f"paper_claims=12.1..41.1")
+
+        # Pareto front over the already-evaluated design points; serialize
+        # the highest-accuracy one for direct deployment via serve --plan.
+        front = dse.pareto(points)
+        if front:
+            best = front[-1]
+            os.makedirs(RESULTS, exist_ok=True)
+            out = os.path.join(RESULTS, f"fig11_best_plan_{regime}.json")
+            CompressionPlan.from_design_point(best).save(out)
+            csv_row(f"fig11_{regime}_best_plan", best.latency * 1e6,
+                    f"label={best.label};acc={best.quality:.4f};plan={out}")
 
 
 if __name__ == "__main__":

@@ -1,6 +1,15 @@
 """Kernel microbenchmarks: Pallas kernels (interpret mode — CPU wall time
 is NOT TPU latency; reported for relative sanity only) plus the analytical
-TPU latencies the DSE actually uses (modeled compute/memory terms)."""
+TPU latencies the DSE actually uses (modeled compute/memory terms).
+
+Besides the csv rows on stdout, writes a machine-readable summary to
+BENCH_kernels.json (path override: --out / $BENCH_KERNELS_OUT) that
+`tools/perf_compare.py --kernels` diffs across runs.
+"""
+import argparse
+import json
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -12,7 +21,20 @@ from repro.hw import tpu_model as tm
 from repro.kernels import ops
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out",
+                    default=os.environ.get("BENCH_KERNELS_OUT",
+                                           "BENCH_kernels.json"))
+    args = ap.parse_args(argv)
+
+    rows = []
+
+    def record(name, us_per_call, derived=""):
+        csv_row(name, us_per_call, derived)
+        rows.append({"name": name, "us_per_call": round(us_per_call, 3),
+                     "derived": derived})
+
     key = jax.random.PRNGKey(0)
     cases = [
         ("paper512", 512, 512, 512, 128),
@@ -27,24 +49,32 @@ def main():
 
         dt, _ = timed(lambda: ops.qmm(x, wq, use_kernel=True,
                                       interpret=True), iters=1)
-        csv_row(f"kernel_qmm_interp_{name}", dt * 1e6,
-                f"M={m};K={k};N={n}")
+        record(f"kernel_qmm_interp_{name}", dt * 1e6,
+               f"M={m};K={k};N={n}")
         dt, _ = timed(lambda: ops.lrmm(x, lr, use_kernel=True,
                                        interpret=True), iters=1)
-        csv_row(f"kernel_lrmm_interp_{name}", dt * 1e6,
-                f"M={m};K={k};N={n};R={r}")
+        record(f"kernel_lrmm_interp_{name}", dt * 1e6,
+               f"M={m};K={k};N={n};R={r}")
         dt, _ = timed(lambda: ops.qmm(x, wq, use_kernel=False), iters=3)
-        csv_row(f"kernel_qmm_ref_{name}", dt * 1e6, "jnp-reference")
+        record(f"kernel_qmm_ref_{name}", dt * 1e6, "jnp-reference")
 
         # modeled TPU latencies (what the roofline/DSE uses)
         bp = tm.best_point(m, k, n, None, weight_wl=8)
         cp = tm.best_point(m, k, n, r, weight_wl=8,
                            engines=("cascade",))
-        csv_row(f"kernel_qmm_tpu_model_{name}", bp.latency_s * 1e6,
-                f"bound={'compute' if bp.compute_s >= bp.memory_s else 'memory'}")
-        csv_row(f"kernel_lrmm_tpu_model_{name}", cp.latency_s * 1e6,
-                f"bound={'compute' if cp.compute_s >= cp.memory_s else 'memory'};"
-                f"speedup_vs_dense={bp.latency_s / cp.latency_s:.2f}x")
+        record(f"kernel_qmm_tpu_model_{name}", bp.latency_s * 1e6,
+               f"bound={'compute' if bp.compute_s >= bp.memory_s else 'memory'}")
+        record(f"kernel_lrmm_tpu_model_{name}", cp.latency_s * 1e6,
+               f"bound={'compute' if cp.compute_s >= cp.memory_s else 'memory'};"
+               f"speedup_vs_dense={bp.latency_s / cp.latency_s:.2f}x")
+
+    with open(args.out, "w") as f:
+        json.dump({"schema": "kernels_bench/v1",
+                   "backend": jax.default_backend(),
+                   "jax_version": jax.__version__,
+                   "rows": rows}, f, indent=2)
+        f.write("\n")
+    print(f"# wrote {len(rows)} rows to {args.out}", flush=True)
 
 
 if __name__ == "__main__":

@@ -1,7 +1,7 @@
 """The full ITERA-LLM post-training pipeline on one screen:
 
-  train (or load) -> compress (quant | svd | itera, + SRA ranks) ->
-  serve (prefill + batched greedy decode) -> compare quality & cost.
+  train (or load) -> compress (uniform plan | SRA per-layer ranks) ->
+  serve through the InferenceEngine facade -> compare quality & cost.
 
     PYTHONPATH=src python examples/compress_and_serve.py
 """
@@ -12,13 +12,14 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
                                 "benchmarks"))
 
-import jax                                                    # noqa: E402
 import numpy as np                                            # noqa: E402
 
 from common import DecompCache, token_accuracy, train_proxy   # noqa: E402
+from repro.api import (                                       # noqa: E402
+    CompressionPlan, InferenceEngine, SamplingParams,
+)
 from repro.core.compress import CompressionConfig             # noqa: E402
 from repro.core.sra import sra_allocate, uniform_allocation   # noqa: E402
-from repro.launch.serve import generate                       # noqa: E402
 
 
 def main():
@@ -32,12 +33,16 @@ def main():
     full = max(dc.max_rank(p) for p in dc.targets)
     budget = int(L * full * 0.5)
 
-    # uniform-rank ITERA
+    # uniform-rank ITERA as a serializable plan (JSON round-trip included)
     uni = uniform_allocation(L, budget, [full] * L)
+    plan = CompressionPlan.uniform(params, method="itera", weight_wl=wl,
+                                   rank_fraction=uni[0] / full,
+                                   label=f"itera_W{wl}_uniform")
+    plan = CompressionPlan.loads(plan.dumps())   # what serve --plan consumes
     acc_uni = token_accuracy(dc.compressed_params(params, uni, "itera"),
                              cfg, task)
     ratio, nops, dense = dc.accounting(uni, "itera")
-    print(f"[pipeline] itera W{wl} uniform ranks {uni}: acc {acc_uni:.4f} "
+    print(f"[pipeline] {plan.summary()}: acc {acc_uni:.4f} "
           f"ratio {ratio:.1f}x NOps -{100*(1-nops/dense):.0f}%")
 
     # SRA-allocated ranks (paper §IV)
@@ -52,15 +57,19 @@ def main():
     print(f"[pipeline] itera W{wl} SRA ranks {res.ranks}: acc {acc_sra:.4f} "
           f"({res.evals} calibration evals)")
 
-    # serve with the SRA-compressed model
+    # serve both models through the engine facade
     cp = dc.compressed_params(params, res.ranks, "itera")
+    dense_eng = InferenceEngine(cfg, params)
+    comp_eng = InferenceEngine(cfg, cp)
     prompts = task.batch(99_999, 4, 32)["tokens"]
-    dense_toks = generate(params, cfg, prompts, 16)
-    comp_toks = generate(cp, cfg, prompts, 16)
-    agree = float(np.mean(np.asarray(dense_toks) == np.asarray(comp_toks)))
-    print(f"[pipeline] greedy decode agreement vs fp32: {agree:.2%}")
+    sampling = SamplingParams(max_tokens=16)
+    dense_toks = dense_eng.generate(prompts, sampling).tokens
+    comp_res = comp_eng.generate(prompts, sampling)
+    agree = float(np.mean(dense_toks == comp_res.tokens))
+    print(f"[pipeline] greedy decode agreement vs fp32: {agree:.2%} "
+          f"({comp_res.tokens_per_second:.1f} tok/s compressed)")
     print("[pipeline] sample (compressed):",
-          np.asarray(comp_toks[0][:12]).tolist())
+          comp_res.tokens[0][:12].tolist())
 
 
 if __name__ == "__main__":

@@ -1,18 +1,29 @@
-"""Hardware-aware DSE walkthrough (paper §VII) on both platform models.
-
-Explores engine/tile configurations for the paper's 512x512x512 workload
-on the faithful ZCU111 model, then runs the TPU-model co-design loop over
-compression candidates and prints the accuracy-latency Pareto points.
+"""Hardware-aware DSE walkthrough (paper §VII) on both platform models,
+ending at deployment: explore engine/tile configurations, run the co-design
+loop over CompressionPlan candidates, pick a Pareto design point, and serve
+it through the InferenceEngine — the full plan→engine seam in one script.
 
     PYTHONPATH=src python examples/dse_explore.py
 """
 import os
 import sys
+import tempfile
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+import jax                                                    # noqa: E402
+import jax.numpy as jnp                                       # noqa: E402
+
+from repro.api import (                                       # noqa: E402
+    CompressionPlan, InferenceEngine, SamplingParams,
+)
+from repro.configs import get_config                          # noqa: E402
+from repro.core.compress import compress_params               # noqa: E402
+from repro.hw import dse                                      # noqa: E402
 from repro.hw import engine_model as em                       # noqa: E402
 from repro.hw import tpu_model as tm                          # noqa: E402
+from repro.models import init_params                          # noqa: E402
+from repro.models.transformer import forward                  # noqa: E402
 
 
 def main():
@@ -41,13 +52,48 @@ def main():
                        f"[{'C' if p.compute_s >= p.memory_s else 'M'}]")
         print(f"  {regime:18s}: " + "  ".join(row))
 
-    print("== per-layer engine choice for an OPUS-MT-like stack ==")
-    layers = [("qkv", 512, 512, 128), ("ffn_up", 512, 2048, 192),
-              ("ffn_dn", 2048, 512, 192)]
-    for name, kk, nn, rr in layers:
-        best = tm.best_point(512, kk, nn, rr, weight_wl=4)
-        print(f"  {name:8s}: {best.kind:8s} {best.latency_s*1e6:8.2f} us  "
-              f"blocks {best.config['blocks']}")
+    print("== co-design over CompressionPlan candidates (opus-mt smoke) ==")
+    cfg = get_config("opus-mt", smoke=True)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0,
+                              cfg.vocab_size)
+    h_ref, _ = forward(params, toks, cfg)
+
+    candidates = [
+        CompressionPlan.uniform(params, method="quant", weight_wl=wl)
+        for wl in (8, 4)
+    ] + [
+        CompressionPlan.uniform(params, method="itera", weight_wl=wl,
+                                rank_fraction=frac,
+                                label=f"itera_W{wl}_f{frac}")
+        for wl in (8, 4) for frac in (0.5, 0.35)
+    ]
+
+    def quality(plan):
+        cp, rep = compress_params(params, plan)
+        h, _ = forward(cp, toks, cfg)
+        plan.meta["ratio"] = rep.compression_ratio
+        plan.meta["nops"] = rep.nops_per_row
+        return -float(jnp.linalg.norm(h - h_ref) / jnp.linalg.norm(h_ref))
+
+    front = dse.co_design(candidates, quality, params=params, batch_m=512,
+                          bw_scale=0.25)
+    for dp in front:
+        print(f"  pareto: {dp.label:14s} quality {dp.quality:+.4f} "
+              f"latency {dp.latency*1e6:8.2f} us "
+              f"ratio {dp.compression_ratio:.1f}x")
+
+    print("== deploy the best design point through the engine ==")
+    best = front[-1]                       # highest quality on the front
+    plan = CompressionPlan.from_design_point(best)
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "plan.json")
+        plan.save(path)                    # what serve --plan consumes
+        engine = InferenceEngine.build(cfg, CompressionPlan.load(path),
+                                       params=params)
+    res = engine.generate(toks[:, :16], SamplingParams(max_tokens=8))
+    print(f"  {plan.summary()}")
+    print(f"  generated {res.tokens.shape}: {res.tokens[0].tolist()}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,19 @@
+"""Public plan→engine API: explore offline, serialize the plan, serve it.
+
+    from repro.api import CompressionPlan, InferenceEngine, SamplingParams
+"""
+from repro.api.plan import (
+    CompressionPlan,
+    LayerPlan,
+    merge_plans,
+)
+from repro.api.engine import (
+    GenerationResult,
+    InferenceEngine,
+    SamplingParams,
+)
+
+__all__ = [
+    "CompressionPlan", "LayerPlan", "merge_plans",
+    "GenerationResult", "InferenceEngine", "SamplingParams",
+]

@@ -1,0 +1,177 @@
+"""`InferenceEngine` — the online half of the plan→engine seam.
+
+Build compiles a serving engine from (architecture, CompressionPlan):
+compress the weights per the plan, optionally place them on a device mesh,
+and jit the prefill / decode-step callables once. Generation then runs any
+number of batched requests against the same compiled engine:
+
+    plan = CompressionPlan.load("plan.json")          # e.g. a DSE winner
+    eng = InferenceEngine.build("opus-mt", plan, smoke=True)
+    out = eng.generate(prompts, SamplingParams(max_tokens=32, top_k=40))
+
+`launch.serve` is a thin CLI over this class; every future serving feature
+(continuous batching, KV paging, multi-host decode) lands behind this
+facade rather than in loose scripts.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.plan import CompressionPlan
+from repro.configs import get_config
+from repro.configs.base import ModelConfig
+from repro.core.compress import CompressionConfig, compress_params
+from repro.models import transformer as tfm
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-generate sampling controls. temperature <= 0 means greedy;
+    top_k == 0 samples the full vocabulary."""
+
+    max_tokens: int = 32
+    temperature: float = 0.0
+    top_k: int = 0
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.max_tokens < 1:
+            raise ValueError(f"max_tokens must be >= 1, got {self.max_tokens}")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0, got {self.top_k}")
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    tokens: np.ndarray          # (B, max_tokens) int32
+    prompt_len: int
+    seconds: float
+
+    @property
+    def tokens_per_second(self) -> float:
+        b, g = self.tokens.shape
+        return b * g / max(self.seconds, 1e-9)
+
+
+def _as_token_batch(requests) -> jnp.ndarray:
+    """(B, S) int32 from an array or a list of equal-length token lists."""
+    if isinstance(requests, (list, tuple)):
+        if not requests:
+            raise ValueError("empty request batch")
+        lens = {len(r) for r in requests}
+        if len(lens) != 1:
+            raise ValueError(
+                f"ragged request lengths {sorted(lens)}: pad requests to a "
+                f"common length (continuous batching is a future engine "
+                f"feature, not a caller concern)")
+        requests = np.asarray(requests)
+    toks = jnp.asarray(requests, jnp.int32)
+    if toks.ndim != 2:
+        raise ValueError(f"requests must be (batch, seq), got {toks.shape}")
+    return toks
+
+
+class InferenceEngine:
+    """Compiled compress→shard→serve pipeline for one model + plan."""
+
+    def __init__(self, cfg: ModelConfig, params, *, plan=None, report=None,
+                 mesh=None):
+        self.cfg = cfg
+        self.params = params
+        self.plan = plan
+        self.report = report
+        self.mesh = mesh
+        # jit once; XLA re-specializes per (batch, seq, max_len) shape.
+        self._prefill = jax.jit(
+            lambda p, toks, max_len: tfm.prefill(p, toks, cfg,
+                                                 max_len=max_len),
+            static_argnums=2)
+        self._decode = jax.jit(
+            lambda p, cache, tok, pos: tfm.decode_step(p, cache, tok, pos,
+                                                       cfg))
+
+    # ------------------------------------------------------------- build --
+    @classmethod
+    def build(cls, arch, plan=None, *, mesh=None, params=None,
+              smoke: bool = False, seed: int = 0,
+              verbose: bool = False) -> "InferenceEngine":
+        """arch: config name (see repro.configs) or a ModelConfig.
+        plan: CompressionPlan | legacy CompressionConfig | None (dense).
+        params: pre-trained weights; freshly initialized when omitted.
+        mesh: optional jax Mesh — weights are placed per launch.sharding."""
+        cfg = get_config(arch, smoke=smoke) if isinstance(arch, str) else arch
+        if params is None:
+            params = tfm.init_params(jax.random.PRNGKey(seed), cfg)
+
+        report = None
+        if isinstance(plan, CompressionConfig):
+            plan = (None if plan.method == "none"
+                    else CompressionPlan.from_config(params, plan))
+        if plan is not None:
+            t0 = time.time()
+            params, report = compress_params(params, plan)
+            plan = report.plan
+            if verbose:
+                print(f"[engine] compressed in {time.time()-t0:.1f}s: "
+                      f"{report.summary()}")
+
+        if mesh is not None:
+            from repro.launch import sharding as shd
+
+            params = jax.device_put(params,
+                                    shd.param_shardings(params, mesh, cfg))
+        return cls(cfg, params, plan=plan, report=report, mesh=mesh)
+
+    # ---------------------------------------------------------- generate --
+    def generate(self, requests, sampling: SamplingParams | None = None
+                 ) -> GenerationResult:
+        """Prefill + batched decode for a rectangular batch of requests.
+
+        requests: (B, S) int tokens (array or list of equal-length lists).
+        Returns the generated continuation only, shape (B, max_tokens).
+        """
+        sampling = sampling or SamplingParams()
+        toks = _as_token_batch(requests)
+        s = toks.shape[1]
+        max_len = s + sampling.max_tokens
+
+        from repro.runtime import shardctx
+
+        ctx = (shardctx.use_mesh(self.mesh) if self.mesh is not None
+               else contextlib.nullcontext())
+        t0 = time.time()
+        with ctx:
+            logits, cache = self._prefill(self.params, toks, max_len)
+            key = jax.random.PRNGKey(sampling.seed)
+            out = []
+            key, k = jax.random.split(key)
+            tok = self._pick(logits, k, sampling)
+            for i in range(sampling.max_tokens):
+                out.append(tok)
+                if i + 1 == sampling.max_tokens:
+                    break
+                logits, cache = self._decode(self.params, cache, tok,
+                                             jnp.asarray(s + i))
+                key, k = jax.random.split(key)
+                tok = self._pick(logits, k, sampling)
+            gen = jax.block_until_ready(jnp.concatenate(out, axis=1))
+        return GenerationResult(tokens=np.asarray(gen), prompt_len=s,
+                                seconds=time.time() - t0)
+
+    @staticmethod
+    def _pick(logits, key, sampling: SamplingParams) -> jnp.ndarray:
+        """(B, 1) next tokens from (B, ..., V) last-position logits."""
+        last = logits[:, -1]
+        if sampling.temperature <= 0.0:
+            return jnp.argmax(last, axis=-1)[:, None].astype(jnp.int32)
+        scaled = last / sampling.temperature
+        if sampling.top_k > 0 and sampling.top_k < scaled.shape[-1]:
+            kth = jax.lax.top_k(scaled, sampling.top_k)[0][..., -1:]
+            scaled = jnp.where(scaled < kth, -jnp.inf, scaled)
+        return jax.random.categorical(key, scaled)[:, None].astype(jnp.int32)

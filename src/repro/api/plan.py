@@ -1,0 +1,248 @@
+"""Per-layer compression plans — the offline half of the plan→engine seam.
+
+A `CompressionPlan` is an ordered list of `LayerPlan(path, method, wl, rank)`
+entries, one per eligible linear weight in the parameter pytree. It is the
+serializable artifact that carries a DSE result (paper §VII) into
+deployment: explore offline, `plan.save("plan.json")`, then
+`InferenceEngine.build(arch, CompressionPlan.load("plan.json"))` online.
+
+Unlike the legacy `core.compress.CompressionConfig` (one global method/wl,
+per-layer rank override only), a plan expresses *mixed precision across
+layers* — e.g. W4 attention / W8 MLP with differing ranks — which is
+exactly the shape of the per-layer configurations the co-design loop
+produces. `CompressionConfig` remains as a thin shim that lowers to a
+uniform plan (`CompressionPlan.uniform`).
+
+Constructors:
+  CompressionPlan.uniform(params, method=..., weight_wl=..., ...)
+      — same selection semantics as CompressionConfig (back-compat);
+  CompressionPlan.from_design_point(dp)
+      — consumes a `hw.dse.DesignPoint`, closing the DSE→deployment loop;
+  CompressionPlan.load(path) / loads(text)
+      — JSON deserialization (inverse of save / dumps).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Iterable
+
+METHODS = ("none", "quant", "svd", "itera")
+_LOWRANK = ("svd", "itera")
+PLAN_FORMAT_VERSION = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerPlan:
+    """Compression decision for one pytree weight (a stacked (L, K, N)
+    scan-layer leaf counts as one path; rank/wl apply to every slice)."""
+
+    path: str
+    method: str = "quant"       # none | quant | svd | itera
+    wl: int = 8                 # weight word length in bits
+    rank: int | None = None     # decomposition rank; None for none/quant
+
+    def to_dict(self) -> dict:
+        d = {"path": self.path, "method": self.method, "wl": self.wl}
+        if self.rank is not None:
+            d["rank"] = int(self.rank)
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "LayerPlan":
+        return cls(path=str(d["path"]), method=str(d.get("method", "quant")),
+                   wl=int(d.get("wl", 8)),
+                   rank=None if d.get("rank") is None else int(d["rank"]))
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionPlan:
+    """Ordered per-layer compression decisions + activation-side settings.
+
+    `meta` carries free-form provenance (DSE label, predicted latency,
+    calibration accuracy, chosen engines) — serialized but never consulted
+    by `compress_params`.
+    """
+
+    layers: tuple = ()
+    act_wl: int = 8
+    power_iters: int = 24
+    label: str = ""
+    meta: dict = dataclasses.field(default_factory=dict)
+
+    # ------------------------------------------------------------ access --
+    def __iter__(self):
+        return iter(self.layers)
+
+    def __len__(self) -> int:
+        return len(self.layers)
+
+    def by_path(self) -> dict:
+        return {lp.path: lp for lp in self.layers}
+
+    def active_layers(self) -> tuple:
+        return tuple(lp for lp in self.layers if lp.method != "none")
+
+    def replace(self, **kwargs) -> "CompressionPlan":
+        return dataclasses.replace(self, **kwargs)
+
+    # ----------------------------------------------------- serialization --
+    def to_dict(self) -> dict:
+        return {
+            "format_version": PLAN_FORMAT_VERSION,
+            "label": self.label,
+            "act_wl": self.act_wl,
+            "power_iters": self.power_iters,
+            "layers": [lp.to_dict() for lp in self.layers],
+            "meta": self.meta,
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "CompressionPlan":
+        v = int(d.get("format_version", PLAN_FORMAT_VERSION))
+        if v > PLAN_FORMAT_VERSION:
+            raise ValueError(f"plan format_version {v} is newer than "
+                             f"supported {PLAN_FORMAT_VERSION}")
+        return cls(
+            layers=tuple(LayerPlan.from_dict(l) for l in d.get("layers", ())),
+            act_wl=int(d.get("act_wl", 8)),
+            power_iters=int(d.get("power_iters", 24)),
+            label=str(d.get("label", "")),
+            meta=dict(d.get("meta", {})),
+        )
+
+    def dumps(self, *, indent: int | None = 2) -> str:
+        return json.dumps(self.to_dict(), indent=indent, sort_keys=False)
+
+    @classmethod
+    def loads(cls, text: str) -> "CompressionPlan":
+        return cls.from_dict(json.loads(text))
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            f.write(self.dumps() + "\n")
+
+    @classmethod
+    def load(cls, path: str) -> "CompressionPlan":
+        with open(path) as f:
+            return cls.loads(f.read())
+
+    # -------------------------------------------------------- validation --
+    def validate(self, params=None) -> "CompressionPlan":
+        """Check internal consistency, and — given a param tree — that every
+        path resolves to a 2-D+ weight with rank <= min(K, N). Returns self
+        so calls chain; raises ValueError on the first violation."""
+        seen = set()
+        for lp in self.layers:
+            if lp.method not in METHODS:
+                raise ValueError(f"{lp.path}: unknown method {lp.method!r} "
+                                 f"(expected one of {METHODS})")
+            if not 2 <= lp.wl <= 8:
+                raise ValueError(f"{lp.path}: wl={lp.wl} outside [2, 8]")
+            if lp.method in _LOWRANK and (lp.rank is None or lp.rank < 1):
+                raise ValueError(f"{lp.path}: method {lp.method!r} needs a "
+                                 f"positive rank, got {lp.rank}")
+            if lp.method not in _LOWRANK and lp.rank is not None:
+                raise ValueError(f"{lp.path}: rank={lp.rank} is meaningless "
+                                 f"for method {lp.method!r}")
+            if lp.path in seen:
+                raise ValueError(f"duplicate plan entry for {lp.path}")
+            seen.add(lp.path)
+        if not 2 <= self.act_wl <= 8:
+            raise ValueError(f"act_wl={self.act_wl} outside [2, 8]")
+        if params is not None:
+            self._validate_against(params)
+        return self
+
+    def _validate_against(self, params) -> None:
+        from repro.core.compress import param_leaves_by_path
+
+        leaves = param_leaves_by_path(params)
+        for lp in self.layers:
+            if lp.path not in leaves:
+                raise ValueError(f"plan path {lp.path!r} not found in the "
+                                 f"parameter tree")
+            leaf = leaves[lp.path]
+            if getattr(leaf, "ndim", 0) < 2:
+                raise ValueError(f"{lp.path}: not a 2-D+ weight "
+                                 f"(ndim={getattr(leaf, 'ndim', 0)})")
+            full = int(min(leaf.shape[-2:]))
+            if lp.rank is not None and lp.rank > full:
+                raise ValueError(f"{lp.path}: rank {lp.rank} exceeds "
+                                 f"min(K, N) = {full}")
+
+    # ------------------------------------------------------ constructors --
+    @classmethod
+    def uniform(cls, params, *, method: str = "quant", weight_wl: int = 8,
+                act_wl: int = 8, rank_fraction: float = 0.5,
+                ranks: dict | None = None, label: str = "",
+                power_iters: int = 24, **selection) -> "CompressionPlan":
+        """One plan entry per eligible linear, all with the same method/wl —
+        the exact semantics of the legacy CompressionConfig (whose selection
+        knobs include/exclude/min_dim/rank_multiple pass through)."""
+        from repro.core.compress import CompressionConfig
+
+        cfg = CompressionConfig(method=method, weight_wl=weight_wl,
+                                act_wl=act_wl, rank_fraction=rank_fraction,
+                                ranks=ranks, power_iters=power_iters,
+                                **selection)
+        return cls.from_config(params, cfg, label=label)
+
+    @classmethod
+    def from_config(cls, params, cfg, label: str = "") -> "CompressionPlan":
+        """Lower a CompressionConfig against a param tree (the shim path)."""
+        from repro.core.compress import eligible_linears
+
+        entries = []
+        for path, leaf in eligible_linears(params, cfg):
+            kn = (int(leaf.shape[-2]), int(leaf.shape[-1]))
+            rank = (cfg.rank_for(path, kn)
+                    if cfg.method in _LOWRANK else None)
+            entries.append(LayerPlan(path=path, method=cfg.method,
+                                     wl=cfg.weight_wl, rank=rank))
+        label = label or (f"{cfg.method}_W{cfg.weight_wl}"
+                          if cfg.method != "none" else "none")
+        return cls(layers=tuple(entries), act_wl=cfg.act_wl,
+                   power_iters=cfg.power_iters, label=label).validate()
+
+    @classmethod
+    def from_design_point(cls, dp) -> "CompressionPlan":
+        """Extract the deployable plan from a `hw.dse.DesignPoint`.
+
+        The DSE attaches the candidate plan it evaluated to every design
+        point; this re-labels it with the point's provenance (quality,
+        latency, per-layer engine choices) so the serialized artifact is
+        self-describing."""
+        plan = getattr(dp, "plan", None)
+        if plan is None:
+            raise ValueError(
+                "DesignPoint carries no plan — run hw.dse.co_design with "
+                "CompressionPlan candidates (dict candidates are legacy)")
+        meta = dict(plan.meta)
+        meta.update({
+            "design_point": dp.label,
+            "quality": float(dp.quality),
+            "latency": float(dp.latency),
+            "engines": [[name, kind] for name, kind, _, _ in dp.per_layer],
+        })
+        return plan.replace(label=dp.label or plan.label,
+                            meta=meta).validate()
+
+    # ---------------------------------------------------------- summary --
+    def summary(self) -> str:
+        from collections import Counter
+
+        groups = Counter(f"{lp.method}_W{lp.wl}" for lp in self.layers)
+        body = " ".join(f"{k}x{v}" for k, v in sorted(groups.items()))
+        return f"plan[{self.label or 'unlabeled'}] {len(self.layers)} " \
+               f"layers: {body} (A{self.act_wl})"
+
+
+def merge_plans(base: CompressionPlan,
+                overrides: Iterable[LayerPlan]) -> CompressionPlan:
+    """New plan with `overrides` replacing matching-path entries of `base`
+    (order preserved; non-matching overrides are appended)."""
+    by_path = {lp.path: lp for lp in overrides}
+    out = [by_path.pop(lp.path, lp) for lp in base.layers]
+    out.extend(by_path.values())
+    return base.replace(layers=tuple(out))

@@ -13,8 +13,14 @@ Methods (paper §VIII-C):
   itera  — Algorithm 1 iterative quantized decomposition       (ours)
   itera + per-layer ranks from SRA                              (ours, best)
 
+`compress_params` executes an `api.plan.CompressionPlan` — per-layer
+method / word length / rank, mixed precision across layers. The legacy
+`CompressionConfig` (one global method/wl) is kept as a thin shim that
+lowers to a uniform plan, so every existing call site keeps working; the
+returned `CompressionReport` records the executed plan as provenance.
+
 The compressed pytree stores `QuantizedTensor` / `LowRankQ` nodes in place
-of raw arrays; `repro.models.linear.apply_linear` dispatches on the node
+of raw arrays; `repro.models.layers.apply_linear` dispatches on the node
 type, so any model in the zoo runs compressed without code changes.
 """
 from __future__ import annotations
@@ -26,14 +32,18 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
-from repro.core.itera import LowRankQ, itera_decompose, svd_decompose
-from repro.core.quant import QuantizedTensor, quantize
+from repro.core.itera import itera_decompose, svd_decompose
+from repro.core.quant import quantize
 
 Array = jax.Array
 
 
 @dataclasses.dataclass(frozen=True)
 class CompressionConfig:
+    """Uniform-compression shim: one global method/wl, per-layer rank
+    override. Lowered to a per-layer `CompressionPlan` by `compress_params`
+    (see `to_plan`); new code should build plans directly."""
+
     method: str = "quant"              # none | quant | svd | itera
     weight_wl: int = 8
     act_wl: int = 8
@@ -58,6 +68,11 @@ class CompressionConfig:
                     (r // self.rank_multiple) * self.rank_multiple)
         return max(self.min_rank, min(r, full))
 
+    def to_plan(self, params):
+        from repro.api.plan import CompressionPlan
+
+        return CompressionPlan.from_config(params, self)
+
 
 @dataclasses.dataclass
 class LayerReport:
@@ -69,12 +84,14 @@ class LayerReport:
     fp32_bits: int
     nops_per_row: int
     dense_nops_per_row: int
+    wl: int = 8
 
 
 @dataclasses.dataclass
 class CompressionReport:
     layers: list
     skipped_params: int
+    plan: Any = None          # the executed api.plan.CompressionPlan
 
     @property
     def total_bits(self) -> int:
@@ -120,6 +137,12 @@ def path_str(path) -> str:
     return "/".join(parts)
 
 
+def param_leaves_by_path(params) -> dict:
+    """{path: leaf} for every leaf in the tree (plan validation helper)."""
+    return {path_str(p): leaf
+            for p, leaf in jax.tree_util.tree_flatten_with_path(params)[0]}
+
+
 def eligible_linears(
     params, cfg: CompressionConfig
 ) -> list[tuple[str, Array]]:
@@ -138,53 +161,68 @@ def eligible_linears(
     return out
 
 
-def _compress_matrix(w: Array, path: str, cfg: CompressionConfig):
-    """Compress one (..., K, N) weight -> (node, LayerReport). Leading
-    stack dims (scan-stacked layers, expert stacks, layers x experts) are
-    handled by vmapping once per leading dim."""
+def _compress_matrix(w: Array, lp, power_iters: int):
+    """Compress one (..., K, N) weight per its LayerPlan -> (node,
+    LayerReport). Leading stack dims (scan-stacked layers, expert stacks,
+    layers x experts) are handled by vmapping once per leading dim."""
     k, n = int(w.shape[-2]), int(w.shape[-1])
-    rank = cfg.rank_for(path, (k, n))
-    if cfg.method == "quant":
-        fn = lambda m: quantize(m, cfg.weight_wl, axis=0)       # noqa: E731
-    elif cfg.method == "svd":
-        fn = lambda m: svd_decompose(m, rank, cfg.weight_wl)    # noqa: E731
-    elif cfg.method == "itera":
+    rank = min(int(lp.rank), min(k, n)) if lp.rank is not None else None
+    if lp.method == "quant":
+        fn = lambda m: quantize(m, lp.wl, axis=0)               # noqa: E731
+    elif lp.method == "svd":
+        fn = lambda m: svd_decompose(m, rank, lp.wl)            # noqa: E731
+    elif lp.method == "itera":
         fn = lambda m: itera_decompose(                         # noqa: E731
-            m, rank, cfg.weight_wl, power_iters=cfg.power_iters)
+            m, rank, lp.wl, power_iters=power_iters)
     else:
-        raise ValueError(cfg.method)
+        raise ValueError(lp.method)
     mult = 1
     for _ in range(w.ndim - 2):
         fn = jax.vmap(fn)
     for d in w.shape[:-2]:
         mult *= int(d)
     node = fn(w)
-    return node, _report_for(path, (k, n), cfg, rank, mult=mult)
+    return node, _report_for(lp.path, (k, n), lp.method, lp.wl, rank,
+                             mult=mult)
 
 
-def _report_for(path, kn, cfg, rank, mult):
+def _report_for(path, kn, method, wl, rank, mult):
     k, n = kn
     fp32 = 32 * k * n * mult
-    if cfg.method == "quant":
-        bits = (cfg.weight_wl * k * n + 32 * n) * mult
+    if method == "quant":
+        bits = (wl * k * n + 32 * n) * mult
         nops, rank_out = k * n * mult, None
     else:
-        bits = (cfg.weight_wl * (k + n) * rank + 32 * 2 * rank) * mult
+        bits = (wl * (k + n) * rank + 32 * 2 * rank) * mult
         nops, rank_out = rank * (k + n) * mult, rank
     return LayerReport(
         path=path, shape=(mult, k, n) if mult > 1 else (k, n),
-        method=cfg.method, rank=rank_out, bits=bits, fp32_bits=fp32,
-        nops_per_row=nops, dense_nops_per_row=k * n * mult,
+        method=method, rank=rank_out, bits=bits, fp32_bits=fp32,
+        nops_per_row=nops, dense_nops_per_row=k * n * mult, wl=wl,
     )
 
 
-def compress_params(params, cfg: CompressionConfig):
-    """Returns (compressed pytree, CompressionReport)."""
-    if cfg.method == "none":
-        leaves = jax.tree_util.tree_leaves(params)
-        return params, CompressionReport([], sum(int(l.size) for l in leaves))
+def compress_params(params, spec):
+    """Execute a compression spec over a parameter pytree.
 
-    targets = dict(eligible_linears(params, cfg))
+    spec: an `api.plan.CompressionPlan` (per-layer method/wl/rank, mixed
+    precision across layers) or a legacy `CompressionConfig` (lowered to a
+    uniform plan first). Returns (compressed pytree, CompressionReport);
+    the report's `.plan` is the executed plan.
+    """
+    from repro.api.plan import CompressionPlan
+
+    if not isinstance(spec, CompressionPlan):
+        if spec.method == "none":
+            leaves = jax.tree_util.tree_leaves(params)
+            return params, CompressionReport(
+                [], sum(int(l.size) for l in leaves),
+                plan=CompressionPlan(label="none", act_wl=spec.act_wl))
+        plan = spec.to_plan(params)
+    else:
+        plan = spec.validate(params)
+
+    targets = {lp.path: lp for lp in plan.active_layers()}
     reports: list[LayerReport] = []
     skipped = 0
 
@@ -192,7 +230,7 @@ def compress_params(params, cfg: CompressionConfig):
         nonlocal skipped
         p = path_str(path)
         if p in targets:
-            node, rep = _compress_matrix(leaf, p, cfg)
+            node, rep = _compress_matrix(leaf, targets[p], plan.power_iters)
             reports.append(rep)
             return node
         if hasattr(leaf, "size"):
@@ -200,7 +238,7 @@ def compress_params(params, cfg: CompressionConfig):
         return leaf
 
     new_params = jax.tree_util.tree_map_with_path(visit, params)
-    return new_params, CompressionReport(reports, skipped)
+    return new_params, CompressionReport(reports, skipped, plan=plan)
 
 
 def sra_eval_closure(

@@ -38,6 +38,12 @@ class LowRankQ:
 
     w1: (K, r) codes, scale (1, r)   — one scale per left singular vector
     w2: (r, N) codes, scale (r, 1)   — one scale per right singular vector
+
+    This is a storage node, not an operator: the single matmul entry point
+    is `repro.models.layers.apply_linear`, which dispatches LowRankQ nodes
+    to `repro.kernels.ops.lrmm` (fused cascade kernel on TPU, reference
+    math elsewhere) — y = (x @ W1') @ W2' without reconstructing W
+    (paper eq. 3).
     """
 
     w1: QuantizedTensor
@@ -49,10 +55,6 @@ class LowRankQ:
 
     def dequant_product(self) -> Array:
         return self.w1.dequant() @ self.w2.dequant()
-
-    def apply(self, x: Array) -> Array:
-        """y = (x @ W1) @ W2 without reconstructing W (paper eq. 3)."""
-        return (x @ self.w1.dequant()) @ self.w2.dequant()
 
     def storage_bits(self) -> int:
         return self.w1.storage_bits() + self.w2.storage_bits()

@@ -1,12 +1,17 @@
 """Hardware-aware Design Space Exploration (paper §VII).
 
 The co-design loop:
-  1. Model compression sweep (method x word length x rank budget) ->
-     (quality, compression ratio, NOps) Pareto candidates;
+  1. Model compression sweep -> candidate `CompressionPlan`s (per-layer
+     method x word length x rank) with (quality, ratio, NOps) accounting;
   2. hardware-aware pruning: configurations whose engine working set
      exceeds platform resources are dropped;
   3. per candidate, pick the lowest-latency engine/tile per layer and sum
      -> (quality, latency) design points; return the Pareto front.
+
+Candidates ARE plans: every returned `DesignPoint` carries the plan it was
+scored from, so a Pareto winner deploys directly via
+`api.plan.CompressionPlan.from_design_point(dp)` -> `InferenceEngine.build`
+— the DSE output is never dead on arrival.
 
 Works against either platform model:
   platform="zcu111" -> hw/engine_model (faithful paper reproduction)
@@ -16,7 +21,7 @@ Works against either platform model:
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Sequence
+from typing import Any, Callable, Sequence
 
 from repro.hw import engine_model as em
 from repro.hw import tpu_model as tm
@@ -28,6 +33,7 @@ class LayerShape:
     k: int
     n: int
     rank: int | None = None     # None -> dense/quant-only
+    wl: int | None = None       # per-layer weight word length override
 
 
 @dataclasses.dataclass
@@ -38,6 +44,7 @@ class DesignPoint:
     compression_ratio: float
     nops: float
     per_layer: list
+    plan: Any = None            # the api.plan.CompressionPlan evaluated
 
 
 def model_layers_from_report(report) -> list:
@@ -48,18 +55,40 @@ def model_layers_from_report(report) -> list:
         mult = lr.shape[0] if len(lr.shape) == 3 else 1
         for i in range(mult):
             out.append(LayerShape(f"{lr.path}[{i}]" if mult > 1 else lr.path,
-                                  k, n, lr.rank))
+                                  k, n, lr.rank, wl=lr.wl))
+    return out
+
+
+def layer_shapes_from_plan(plan, params) -> list:
+    """LayerShape list (stacks expanded) for a plan's active layers."""
+    from repro.core.compress import param_leaves_by_path
+
+    leaves = param_leaves_by_path(params)
+    out = []
+    for lp in plan.active_layers():
+        leaf = leaves[lp.path]
+        k, n = int(leaf.shape[-2]), int(leaf.shape[-1])
+        mult = 1
+        for d in leaf.shape[:-2]:
+            mult *= int(d)
+        rank = None if lp.rank is None else min(int(lp.rank), min(k, n))
+        for i in range(mult):
+            out.append(LayerShape(
+                f"{lp.path}[{i}]" if mult > 1 else lp.path,
+                k, n, rank, wl=lp.wl))
     return out
 
 
 def total_latency_tpu(layers: Sequence[LayerShape], batch_m: int, *,
-                      weight_wl: int, bw_scale: float = 1.0,
+                      weight_wl: int = 8, bw_scale: float = 1.0,
                       engines=("baseline", "single", "cascade")):
-    """Sum of per-layer best-engine latencies on the TPU model."""
+    """Sum of per-layer best-engine latencies on the TPU model. A layer's
+    own wl (mixed-precision plans) overrides the global `weight_wl`."""
     total = 0.0
     chosen = []
     for l in layers:
-        p = tm.best_point(batch_m, l.k, l.n, l.rank, weight_wl=weight_wl,
+        p = tm.best_point(batch_m, l.k, l.n, l.rank,
+                          weight_wl=l.wl or weight_wl,
                           hbm_bw=tm.HBM_BW * bw_scale, engines=engines)
         if p is None:
             return None, []
@@ -69,7 +98,7 @@ def total_latency_tpu(layers: Sequence[LayerShape], batch_m: int, *,
 
 
 def total_latency_zcu111(layers: Sequence[LayerShape], batch_m: int, *,
-                         weight_wl: int, bw_bits_per_cycle=None):
+                         weight_wl: int = 8, bw_bits_per_cycle=None):
     """Per-layer best engine under ZCU111 resources (paper platform)."""
     plat = dict(em.ZCU111)
     if bw_bits_per_cycle is not None:
@@ -77,7 +106,8 @@ def total_latency_zcu111(layers: Sequence[LayerShape], batch_m: int, *,
     total = 0.0
     chosen = []
     for l in layers:
-        pts = em.explore(batch_m, l.k, l.n, l.rank, weight_wl=weight_wl)
+        pts = em.explore(batch_m, l.k, l.n, l.rank,
+                         weight_wl=l.wl or weight_wl)
         pts = [p for p in pts
                if p.bandwidth <= plat["offchip_bits_per_cycle"]]
         if not pts:
@@ -100,33 +130,55 @@ def pareto(points: Sequence[DesignPoint]) -> list:
 
 
 def co_design(
-    candidates: Sequence[dict],
-    quality_fn: Callable[[dict], float],
-    layers_fn: Callable[[dict], Sequence[LayerShape]],
+    candidates: Sequence,
+    quality_fn: Callable[[Any], float],
+    layers_fn: Callable[[Any], Sequence[LayerShape]] | None = None,
     *,
+    params=None,
     batch_m: int = 512,
     platform: str = "tpu",
     bw_scale: float = 1.0,
 ) -> list:
-    """Full paper-§VII loop. `candidates` are compression configs (dicts
-    with method/wl/rank info); quality_fn evaluates the calibration metric;
-    layers_fn yields the layer shapes+ranks for the latency model."""
+    """Full paper-§VII loop over `CompressionPlan` candidates.
+
+    quality_fn(plan) evaluates the calibration metric; layers_fn(plan)
+    yields the layer shapes+ranks+wls for the latency model (defaults to
+    `layer_shapes_from_plan` against `params`). Plans may stash accounting
+    in plan.meta: "ratio" / "nops" flow into the DesignPoint, and
+    "engines_allowed" restricts the TPU engine search. Returns the Pareto
+    front; each point carries its plan for deployment.
+    """
+    from repro.api.plan import CompressionPlan
+
+    if layers_fn is None:
+        if params is None:
+            raise ValueError("co_design needs layers_fn or params")
+        layers_fn = lambda plan: layer_shapes_from_plan(plan, params)  # noqa: E731
+
     points = []
-    for cand in candidates:
-        q = quality_fn(cand)
-        layers = list(layers_fn(cand))
+    for plan in candidates:
+        if not isinstance(plan, CompressionPlan):
+            raise TypeError(
+                f"co_design candidates must be CompressionPlans, got "
+                f"{type(plan).__name__} — dict candidates are no longer "
+                f"supported (build one with CompressionPlan.uniform / "
+                f"from_config)")
+        q = quality_fn(plan)
+        layers = list(layers_fn(plan))
+        meta = getattr(plan, "meta", {}) or {}
         if platform == "tpu":
             lat, chosen = total_latency_tpu(
-                layers, batch_m, weight_wl=cand["wl"], bw_scale=bw_scale,
-                engines=cand.get("engines",
-                                 ("baseline", "single", "cascade")))
+                layers, batch_m, bw_scale=bw_scale,
+                engines=tuple(meta.get("engines_allowed",
+                                       ("baseline", "single", "cascade"))))
         else:
-            lat, chosen = total_latency_zcu111(layers, batch_m,
-                                               weight_wl=cand["wl"])
+            lat, chosen = total_latency_zcu111(layers, batch_m)
         if lat is None:
             continue
         points.append(DesignPoint(
-            label=cand.get("label", str(cand)), quality=q, latency=lat,
-            compression_ratio=cand.get("ratio", 0.0),
-            nops=cand.get("nops", 0.0), per_layer=chosen))
+            label=getattr(plan, "label", "") or str(plan),
+            quality=q, latency=lat,
+            compression_ratio=float(meta.get("ratio", 0.0)),
+            nops=float(meta.get("nops", 0.0)),
+            per_layer=chosen, plan=plan))
     return pareto(points)

@@ -27,6 +27,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax >= 0.6 renamed TPUCompilerParams -> CompilerParams; support both.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 
 def _kernel(
     xq_ref, sx_ref, w1_ref, s1_ref, w2_ref, s2_ref,  # inputs
@@ -131,7 +134,7 @@ def lowrank_qmm(
             pltpu.VMEM((bm, r), jnp.int8),    # requantized T
             pltpu.VMEM((bm, 1), jnp.float32), # per-row T scale
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -1,9 +1,14 @@
-"""Serving driver: compress (optional) -> prefill -> batched decode.
+"""Serving CLI — a thin front-end over `repro.api.InferenceEngine`.
 
-This is the inference face of ITERA-LLM: weights are compressed
-post-training (quant-only baseline or ITERA low-rank + SRA ranks), then a
-batch of requests is prefilled and decoded with jit'd steps.
+The inference face of ITERA-LLM: weights are compressed post-training per
+a `CompressionPlan` (a DSE artifact, or a uniform plan built from the
+legacy flags), then batched requests are prefilled and decoded by the
+compiled engine.
 
+  # deploy a DSE result (per-layer method x wl x rank):
+  python -m repro.launch.serve --arch opus-mt --smoke --plan plan.json
+
+  # or a uniform plan from flags (legacy CompressionConfig semantics):
   python -m repro.launch.serve --arch opus-mt --smoke --compression itera \
       --rank-fraction 0.4 --wl 4 --prompt-len 64 --gen 32 --batch 4
 
@@ -13,46 +18,36 @@ dispatches the Pallas cascade kernels (models.set_linear_mode("auto")).
 from __future__ import annotations
 
 import argparse
-import time
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import CompressionPlan, InferenceEngine, SamplingParams
 from repro.configs import get_config
-from repro.core.compress import CompressionConfig, compress_params
+from repro.core.compress import CompressionConfig
 from repro.data import pipeline
-from repro.models import transformer as tfm
 
 
 def generate(params, cfg, prompts, gen_len: int, *, greedy=True, seed=0):
-    """prompts: (B, S) int tokens. Returns (B, gen_len) generated ids."""
-    b, s = prompts.shape
-    max_len = s + gen_len
+    """Back-compat helper: decode `prompts` with already-built params.
 
-    prefill = jax.jit(lambda p, x: tfm.prefill(p, x, cfg, max_len=max_len))
-    step = jax.jit(lambda p, c, t, pos: tfm.decode_step(p, c, t, pos, cfg))
-
-    logits, cache = prefill(params, prompts)
-    out = []
-    key = jax.random.PRNGKey(seed)
-    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
-    for i in range(gen_len):
-        out.append(tok)
-        logits, cache = step(params, cache, tok, jnp.asarray(s + i))
-        if greedy:
-            tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
-        else:
-            key, k2 = jax.random.split(key)
-            tok = jax.random.categorical(k2, logits[:, -1])[:, None].astype(
-                jnp.int32)
-    return jnp.concatenate(out, axis=1)
+    New code should hold an `InferenceEngine` and call `.generate` — this
+    wrapper rebuilds the jitted callables on every call.
+    """
+    eng = InferenceEngine(cfg, params)
+    res = eng.generate(prompts, SamplingParams(
+        max_tokens=gen_len, temperature=0.0 if greedy else 1.0, seed=seed))
+    return jnp.asarray(res.tokens)
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="opus-mt")
     ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--plan", default=None,
+                    help="CompressionPlan JSON (e.g. a serialized DSE "
+                         "design point); overrides --compression/--wl/"
+                         "--rank-fraction")
     ap.add_argument("--compression", default="none",
                     choices=["none", "quant", "svd", "itera"])
     ap.add_argument("--wl", type=int, default=8)
@@ -60,31 +55,34 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="<= 0 -> greedy decode")
+    ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke)
-    key = jax.random.PRNGKey(args.seed)
-    params = tfm.init_params(key, cfg)
-
-    if args.compression != "none":
-        ccfg = CompressionConfig(method=args.compression, weight_wl=args.wl,
+    if args.plan is not None:
+        plan = CompressionPlan.load(args.plan)
+        print(f"[serve] {plan.summary()}")
+    elif args.compression != "none":
+        plan = CompressionConfig(method=args.compression, weight_wl=args.wl,
                                  rank_fraction=args.rank_fraction)
-        t0 = time.time()
-        params, report = compress_params(params, ccfg)
-        print(f"[serve] compressed in {time.time()-t0:.1f}s: "
-              f"{report.summary()}")
+    else:
+        plan = None
+
+    engine = InferenceEngine.build(cfg, plan, seed=args.seed, verbose=True)
 
     task = pipeline.MarkovTask(cfg.vocab_size, seed=args.seed)
     prompts = task.batch(0, args.batch, args.prompt_len)["tokens"]
 
-    t0 = time.time()
-    toks = generate(params, cfg, prompts, args.gen)
-    dt = time.time() - t0
-    print(f"[serve] generated {toks.shape} in {dt:.1f}s "
-          f"({args.batch*args.gen/dt:.1f} tok/s)")
-    print("[serve] sample:", np.asarray(toks[0][:16]).tolist())
-    return toks
+    res = engine.generate(prompts, SamplingParams(
+        max_tokens=args.gen, temperature=args.temperature,
+        top_k=args.top_k, seed=args.seed))
+    print(f"[serve] generated {res.tokens.shape} in {res.seconds:.1f}s "
+          f"({res.tokens_per_second:.1f} tok/s)")
+    print("[serve] sample:", np.asarray(res.tokens[0][:16]).tolist())
+    return res.tokens
 
 
 if __name__ == "__main__":

@@ -24,6 +24,7 @@ import numpy as np
 from repro.checkpoint import ckpt as ckpt_lib
 from repro.configs import get_config
 from repro.data import pipeline
+from repro.launch import mesh as mesh_lib
 from repro.launch import sharding as shd
 from repro.launch import steps as steps_lib
 from repro.models import transformer as tfm
@@ -94,15 +95,10 @@ def main(argv=None):
 
     n_dev = jax.device_count()
     if args.mesh == "auto":
-        model_par = 1
-        mesh = jax.make_mesh(
-            (n_dev, model_par), ("data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = mesh_lib.make_mesh((n_dev, 1), ("data", "model"))
     else:
         d, m = map(int, args.mesh.split("x"))
-        mesh = jax.make_mesh(
-            (d, m), ("data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = mesh_lib.make_mesh((d, m), ("data", "model"))
 
     with shardctx.use_mesh(mesh):
         key = jax.random.PRNGKey(args.seed)

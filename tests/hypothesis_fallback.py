@@ -1,0 +1,98 @@
+"""Minimal stand-in for `hypothesis` when it is not installed.
+
+Implements only the surface this suite uses — `given`, `settings`, and the
+`strategies` functions integers / floats / lists / sampled_from / composite —
+with seeded pseudo-random example generation. Property tests then still run
+(with less adversarial inputs than real hypothesis shrinking would find)
+instead of failing at collection. Usage in a test module:
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from hypothesis_fallback import given, settings, strategies as st
+"""
+from __future__ import annotations
+
+import functools
+import random
+import types
+
+
+class settings:  # noqa: N801 — mirrors hypothesis' class name
+    _profiles = {"default": {"max_examples": 20}}
+    _current = "default"
+
+    @classmethod
+    def register_profile(cls, name, **kwargs):
+        cls._profiles[name] = kwargs
+
+    @classmethod
+    def load_profile(cls, name):
+        cls._current = name
+
+    @classmethod
+    def _max_examples(cls):
+        return int(cls._profiles.get(cls._current, {}).get("max_examples", 20))
+
+
+class _Strategy:
+    def __init__(self, gen):
+        self._gen = gen
+
+    def example(self, rng: random.Random):
+        return self._gen(rng)
+
+
+def _integers(lo, hi):
+    return _Strategy(lambda rng: rng.randint(lo, hi))
+
+
+def _floats(lo, hi, **_kwargs):
+    return _Strategy(lambda rng: rng.uniform(lo, hi))
+
+
+def _sampled_from(seq):
+    items = list(seq)
+    return _Strategy(lambda rng: items[rng.randrange(len(items))])
+
+
+def _lists(elem, min_size=0, max_size=None):
+    hi = min_size + 10 if max_size is None else max_size
+
+    def gen(rng):
+        return [elem.example(rng) for _ in range(rng.randint(min_size, hi))]
+
+    return _Strategy(gen)
+
+
+def _composite(fn):
+    @functools.wraps(fn)
+    def builder(*args, **kwargs):
+        def gen(rng):
+            return fn(lambda s: s.example(rng), *args, **kwargs)
+
+        return _Strategy(gen)
+
+    return builder
+
+
+strategies = types.SimpleNamespace(
+    integers=_integers, floats=_floats, sampled_from=_sampled_from,
+    lists=_lists, composite=_composite,
+)
+
+
+def given(*strats):
+    def deco(fn):
+        # No functools.wraps here: pytest must see a zero-arg signature,
+        # not the strategy-filled parameters (it would demand fixtures).
+        def wrapper(*args, **kwargs):
+            for i in range(settings._max_examples()):
+                rng = random.Random(0xC0FFEE + 7919 * i)
+                fn(*args, *[s.example(rng) for s in strats], **kwargs)
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+
+    return deco

@@ -3,7 +3,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from hypothesis_fallback import given, settings, strategies as st
 
 from repro.core.itera import (
     itera_decompose, reconstruction_error, svd_decompose,
@@ -75,13 +78,15 @@ def test_full_rank_high_bits_near_exact():
 
 
 def test_factor_shapes_and_dtypes():
+    from repro.models.layers import apply_linear
+
     w = lowrankish(jax.random.PRNGKey(4), 40, 56)
     lr = itera_decompose(w, 12, 6)
     assert lr.w1.shape == (40, 12) and lr.w2.shape == (12, 56)
     assert lr.w1.values.dtype == jnp.int8
     assert lr.w1.scale.shape == (1, 12) and lr.w2.scale.shape == (12, 1)
     assert lr.rank == 12
-    y = lr.apply(jnp.ones((3, 40)))
+    y = apply_linear(jnp.ones((3, 40)), lr)
     assert y.shape == (3, 56)
 
 

@@ -158,7 +158,8 @@ def test_error_feedback_unbiased_longrun():
 
 def test_compressed_bytes_accounting():
     params = {"a": jnp.zeros((10, 10)), "b": jnp.zeros((5,))}
-    assert compression.compressed_bytes(params) == 105
+    # per leaf: size int8 codes + one 4-byte fp32 scale on the wire
+    assert compression.compressed_bytes(params) == (100 + 4) + (5 + 4)
 
 
 # ------------------------------------------------------------ fault loop --

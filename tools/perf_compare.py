@@ -1,4 +1,11 @@
-"""Print before/after roofline comparisons for the §Perf hillclimbs."""
+"""Print before/after roofline comparisons for the §Perf hillclimbs,
+and diff kernel microbenchmark runs:
+
+    python tools/perf_compare.py                         # roofline tables
+    python tools/perf_compare.py --kernels BENCH_kernels.json
+    python tools/perf_compare.py --kernels old.json new.json   # delta %
+"""
+import argparse
 import glob
 import json
 import os
@@ -61,7 +68,49 @@ GROUPS = [
 ]
 
 
+def load_kernels(path):
+    """{row name: us_per_call} from a kernels_bench BENCH_kernels.json."""
+    rec = json.load(open(path))
+    if rec.get("schema") != "kernels_bench/v1":
+        raise SystemExit(f"{path}: not a kernels_bench/v1 file")
+    return {r["name"]: float(r["us_per_call"]) for r in rec["rows"]}
+
+
+def kernels_table(base_path, new_path=None):
+    base = load_kernels(base_path)
+    new = load_kernels(new_path) if new_path else None
+    if new is None:
+        print("| kernel | us/call |")
+        print("|---|--:|")
+        for name, us in base.items():
+            print(f"| {name} | {us:.3f} |")
+        return
+    print(f"| kernel | {os.path.basename(base_path)} "
+          f"| {os.path.basename(new_path)} | delta |")
+    print("|---|--:|--:|--:|")
+    for name in sorted(set(base) | set(new)):
+        b, n = base.get(name), new.get(name)
+        if b is None or n is None:
+            print(f"| {name} | {b if b is not None else '-'} "
+                  f"| {n if n is not None else '-'} | - |")
+            continue
+        print(f"| {name} | {b:.3f} | {n:.3f} | {100 * (n - b) / b:+.1f}% |")
+
+
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--kernels", nargs="+", metavar="BENCH_kernels.json",
+                    help="one file: print table; two files: before/after")
+    args = ap.parse_args()
+    if args.kernels:
+        if len(args.kernels) > 2:
+            raise SystemExit("--kernels takes one or two files")
+        kernels_table(*args.kernels)
+        return
+    roofline_report()
+
+
+def roofline_report():
     for title, rows in GROUPS:
         print(f"\n#### {title}\n")
         print("| config | compute s | memory s | collective s | dominant "
