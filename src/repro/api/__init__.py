@@ -11,9 +11,12 @@ from repro.api.engine import (
     GenerationResult,
     InferenceEngine,
     SamplingParams,
+    ServeResult,
 )
+from repro.runtime.scheduler import Request
 
 __all__ = [
     "CompressionPlan", "LayerPlan", "merge_plans",
     "GenerationResult", "InferenceEngine", "SamplingParams",
+    "ServeResult", "Request",
 ]

@@ -9,9 +9,19 @@ number of batched requests against the same compiled engine:
     eng = InferenceEngine.build("opus-mt", plan, smoke=True)
     out = eng.generate(prompts, SamplingParams(max_tokens=32, top_k=40))
 
+Two serving paths share the compiled model:
+
+  * `generate` on a rectangular (B, S) batch — prefill once, decode in
+    lockstep; the static-batching baseline.
+  * `serve` (which `generate` uses for ragged prompt lists) — continuous
+    batching: a `runtime.scheduler.Scheduler` admits requests into a
+    fixed-capacity masked decode batch backed by a `runtime.kvblocks`
+    blocked KV pool; rows join after individual prefill and leave the
+    moment they finish, with their blocks returned to the pool.
+
 `launch.serve` is a thin CLI over this class; every future serving feature
-(continuous batching, KV paging, multi-host decode) lands behind this
-facade rather than in loose scripts.
+(KV paging variants, multi-host decode) lands behind this facade rather
+than in loose scripts.
 """
 from __future__ import annotations
 
@@ -28,6 +38,8 @@ from repro.configs import get_config
 from repro.configs.base import ModelConfig
 from repro.core.compress import CompressionConfig, compress_params
 from repro.models import transformer as tfm
+from repro.runtime import kvblocks
+from repro.runtime.scheduler import Request, Scheduler
 
 
 @dataclasses.dataclass(frozen=True)
@@ -50,8 +62,9 @@ class SamplingParams:
 @dataclasses.dataclass
 class GenerationResult:
     tokens: np.ndarray          # (B, max_tokens) int32
-    prompt_len: int
+    prompt_len: int             # ragged batches: the longest prompt
     seconds: float
+    prompt_lens: list[int] | None = None   # set for ragged batches
 
     @property
     def tokens_per_second(self) -> float:
@@ -59,18 +72,47 @@ class GenerationResult:
         return b * g / max(self.seconds, 1e-9)
 
 
-def _as_token_batch(requests) -> jnp.ndarray:
-    """(B, S) int32 from an array or a list of equal-length token lists."""
+@dataclasses.dataclass
+class ServeResult:
+    """Continuous-batching outcome: per-request continuations in
+    submission order, plus the scheduler's step/occupancy accounting."""
+
+    outputs: list[np.ndarray]   # outputs[i]: (requests[i].max_tokens,) int32
+    prompt_lens: list[int]
+    seconds: float
+    steps: int                  # shared decode steps executed
+    prefills: int               # individual prompt prefills
+    max_queue_depth: int        # peak waiting-queue length (overflow proof)
+    max_batch: int
+    block_size: int
+    num_blocks: int
+
+    @property
+    def total_tokens(self) -> int:
+        return int(sum(o.size for o in self.outputs))
+
+    @property
+    def tokens_per_second(self) -> float:
+        return self.total_tokens / max(self.seconds, 1e-9)
+
+
+def _as_token_batch(requests):
+    """Normalize requests: a (B, S) int32 array when rectangular, else a
+    list of 1-D int32 prompts (the caller routes those through the
+    continuous-batching scheduler)."""
     if isinstance(requests, (list, tuple)):
         if not requests:
             raise ValueError("empty request batch")
-        lens = {len(r) for r in requests}
-        if len(lens) != 1:
+        rows = [np.asarray(r, np.int32) for r in requests]
+        if any(r.ndim != 1 for r in rows):
             raise ValueError(
-                f"ragged request lengths {sorted(lens)}: pad requests to a "
-                f"common length (continuous batching is a future engine "
-                f"feature, not a caller concern)")
-        requests = np.asarray(requests)
+                f"each request must be a 1-D token sequence, got shapes "
+                f"{[r.shape for r in rows]}")
+        if any(r.size == 0 for r in rows):
+            raise ValueError("empty prompt in request batch")
+        if len({r.size for r in rows}) != 1:
+            return rows
+        requests = np.stack(rows)
     toks = jnp.asarray(requests, jnp.int32)
     if toks.ndim != 2:
         raise ValueError(f"requests must be (batch, seq), got {toks.shape}")
@@ -81,12 +123,14 @@ class InferenceEngine:
     """Compiled compress→shard→serve pipeline for one model + plan."""
 
     def __init__(self, cfg: ModelConfig, params, *, plan=None, report=None,
-                 mesh=None):
+                 mesh=None, max_batch: int = 8, block_size: int = 16):
         self.cfg = cfg
         self.params = params
         self.plan = plan
         self.report = report
         self.mesh = mesh
+        self.max_batch = max_batch      # serve(): decode-batch capacity
+        self.block_size = block_size    # serve(): KV block size (tokens)
         # jit once; XLA re-specializes per (batch, seq, max_len) shape.
         self._prefill = jax.jit(
             lambda p, toks, max_len: tfm.prefill(p, toks, cfg,
@@ -95,16 +139,23 @@ class InferenceEngine:
         self._decode = jax.jit(
             lambda p, cache, tok, pos: tfm.decode_step(p, cache, tok, pos,
                                                        cfg))
+        # continuous-batching step: static in (capacity, max blocks/seq),
+        # so one compilation serves the whole admit/evict loop.
+        self._decode_paged = jax.jit(
+            lambda p, pool, bt, lens, tok: tfm.decode_step_paged(
+                p, pool, bt, lens, tok, cfg))
+        self._pack = jax.jit(kvblocks.pack_prefill)
 
     # ------------------------------------------------------------- build --
     @classmethod
     def build(cls, arch, plan=None, *, mesh=None, params=None,
-              smoke: bool = False, seed: int = 0,
-              verbose: bool = False) -> "InferenceEngine":
+              smoke: bool = False, seed: int = 0, verbose: bool = False,
+              max_batch: int = 8, block_size: int = 16) -> "InferenceEngine":
         """arch: config name (see repro.configs) or a ModelConfig.
         plan: CompressionPlan | legacy CompressionConfig | None (dense).
         params: pre-trained weights; freshly initialized when omitted.
-        mesh: optional jax Mesh — weights are placed per launch.sharding."""
+        mesh: optional jax Mesh — weights are placed per launch.sharding.
+        max_batch / block_size: continuous-batching defaults for serve()."""
         cfg = get_config(arch, smoke=smoke) if isinstance(arch, str) else arch
         if params is None:
             params = tfm.init_params(jax.random.PRNGKey(seed), cfg)
@@ -126,18 +177,30 @@ class InferenceEngine:
 
             params = jax.device_put(params,
                                     shd.param_shardings(params, mesh, cfg))
-        return cls(cfg, params, plan=plan, report=report, mesh=mesh)
+        return cls(cfg, params, plan=plan, report=report, mesh=mesh,
+                   max_batch=max_batch, block_size=block_size)
 
     # ---------------------------------------------------------- generate --
     def generate(self, requests, sampling: SamplingParams | None = None
                  ) -> GenerationResult:
-        """Prefill + batched decode for a rectangular batch of requests.
+        """Generate continuations for a batch of requests.
 
-        requests: (B, S) int tokens (array or list of equal-length lists).
-        Returns the generated continuation only, shape (B, max_tokens).
+        requests: (B, S) int tokens — array or list of token lists. Equal
+        lengths run the rectangular lockstep path; ragged lengths are
+        served by the continuous-batching scheduler (`serve`), prefilled
+        individually and decoded in a shared masked batch. Either way the
+        result is the generated continuation only, (B, max_tokens), in
+        request order — greedy outputs are token-identical between the
+        two paths and to running each prompt alone.
         """
         sampling = sampling or SamplingParams()
         toks = _as_token_batch(requests)
+        if isinstance(toks, list):          # ragged -> continuous batching
+            res = self.serve(toks, sampling)
+            return GenerationResult(
+                tokens=np.stack(res.outputs).astype(np.int32),
+                prompt_len=max(res.prompt_lens), seconds=res.seconds,
+                prompt_lens=list(res.prompt_lens))
         s = toks.shape[1]
         max_len = s + sampling.max_tokens
 
@@ -163,6 +226,121 @@ class InferenceEngine:
             gen = jax.block_until_ready(jnp.concatenate(out, axis=1))
         return GenerationResult(tokens=np.asarray(gen), prompt_len=s,
                                 seconds=time.time() - t0)
+
+    # ------------------------------------------------------------- serve --
+    def serve(self, requests, sampling: SamplingParams | None = None, *,
+              max_batch: int | None = None, block_size: int | None = None,
+              num_blocks: int | None = None) -> ServeResult:
+        """Continuous batching: ragged prompts, per-request max_tokens.
+
+        requests: list of token sequences or `runtime.scheduler.Request`s
+        (the latter carry their own max_tokens; otherwise
+        `sampling.max_tokens` applies). Requests are admitted FCFS into a
+        fixed-capacity decode batch: each is prefilled individually, its
+        KV packed into pool blocks, and its row decodes alongside whatever
+        else is in flight; finished rows free their blocks immediately and
+        the next waiting request takes the slot mid-flight. Overflow
+        (rows or blocks) queues — it never crashes the batch.
+
+        num_blocks defaults to enough for max_batch worst-case sequences,
+        i.e. admission is then only row-limited. Pass a smaller pool to
+        exercise block-limited admission.
+        """
+        sampling = sampling or SamplingParams()
+        reqs: list[Request] = []
+        for i, r in enumerate(requests):
+            if not isinstance(r, Request):
+                r = Request(tokens=r)
+            if r.max_tokens is None:
+                r = dataclasses.replace(r, max_tokens=sampling.max_tokens)
+            reqs.append(dataclasses.replace(r, rid=i))
+        if not reqs:
+            raise ValueError("empty request batch")
+        kvblocks.check_paged_support(self.cfg)
+
+        bs = block_size or self.block_size
+        cap = min(max_batch or self.max_batch, len(reqs))
+        need = [kvblocks.blocks_needed(r.tokens.size, r.max_tokens, bs)
+                for r in reqs]
+        mb = max(max(need), 1)              # block-table width (static)
+        if num_blocks is None:
+            num_blocks = cap * mb + 1       # +1: reserved trash block
+        pool_alloc = kvblocks.BlockPool(num_blocks, bs)
+        sched = Scheduler(pool_alloc, cap)
+        for r in reqs:
+            sched.submit(r)
+
+        pool = kvblocks.init_paged_cache(self.cfg, num_blocks, bs)
+        tables = np.zeros((cap, mb), np.int32)
+        lengths = np.zeros((cap,), np.int32)
+        cur_tok = np.zeros((cap, 1), np.int32)
+        active = np.zeros((cap,), bool)
+        outputs: list[np.ndarray | None] = [None] * len(reqs)
+        steps = prefills = 0
+        key = jax.random.PRNGKey(sampling.seed)
+
+        from repro.runtime import shardctx
+
+        ctx = (shardctx.use_mesh(self.mesh) if self.mesh is not None
+               else contextlib.nullcontext())
+        t0 = time.time()
+        with ctx:
+            while sched.has_work():
+                # -- admission: prefill each newly admitted request alone --
+                while (seq := sched.try_admit()) is not None:
+                    nb_p = -(-seq.prompt_len // bs)
+                    toks1 = jnp.asarray(seq.req.tokens[None], jnp.int32)
+                    logits, cache = self._prefill(self.params, toks1,
+                                                  nb_p * bs)
+                    prefills += 1
+                    key, k = jax.random.split(key)
+                    tok = self._pick(logits, k, sampling)
+                    seq.out.append(int(np.asarray(tok)[0, 0]))
+                    if seq.done:            # max_tokens == 1: never decodes
+                        outputs[seq.req.rid] = np.asarray(seq.out, np.int32)
+                        sched.finish(seq)
+                        continue
+                    pool = self._pack(pool, cache["kv"],
+                                      jnp.asarray(seq.block_ids[:nb_p],
+                                                  jnp.int32))
+                    r = seq.row
+                    tables[r] = 0
+                    tables[r, :len(seq.block_ids)] = seq.block_ids
+                    lengths[r] = seq.prompt_len
+                    cur_tok[r, 0] = seq.out[-1]
+                    active[r] = True
+                if not active.any():
+                    break                   # queue drained by admission
+                # -- one shared decode step over the masked batch ----------
+                logits, pool = self._decode_paged(
+                    self.params, pool, jnp.asarray(tables),
+                    jnp.asarray(lengths), jnp.asarray(cur_tok))
+                steps += 1
+                key, k = jax.random.split(key)
+                toks = np.asarray(self._pick(logits, k, sampling))
+                lengths[active] += 1        # the step wrote position `len`
+                # -- record tokens, evict finished rows --------------------
+                for r in np.nonzero(active)[0]:
+                    seq = sched.rows[r]
+                    seq.out.append(int(toks[r, 0]))
+                    if seq.done:
+                        outputs[seq.req.rid] = np.asarray(seq.out, np.int32)
+                        sched.finish(seq)
+                        active[r] = False
+                        tables[r] = 0
+                        lengths[r] = 0
+                        cur_tok[r, 0] = 0
+                    else:
+                        cur_tok[r, 0] = toks[r, 0]
+        if pool_alloc.available != pool_alloc.capacity:
+            raise RuntimeError(
+                f"leaked KV blocks: {pool_alloc.capacity - pool_alloc.available}"
+                f" of {pool_alloc.capacity} still allocated after drain")
+        return ServeResult(
+            outputs=outputs, prompt_lens=[r.tokens.size for r in reqs],
+            seconds=time.time() - t0, steps=steps, prefills=prefills,
+            max_queue_depth=sched.max_queue_depth, max_batch=cap,
+            block_size=bs, num_blocks=num_blocks)
 
     @staticmethod
     def _pick(logits, key, sampling: SamplingParams) -> jnp.ndarray:

@@ -12,6 +12,11 @@ compiled engine.
   python -m repro.launch.serve --arch opus-mt --smoke --compression itera \
       --rank-fraction 0.4 --wl 4 --prompt-len 64 --gen 32 --batch 4
 
+  # mixed-length prompts through the continuous-batching scheduler
+  # (blocked KV cache; see docs/serving.md):
+  python -m repro.launch.serve --arch opus-mt --smoke --ragged \
+      --batch 8 --max-batch 4 --block-size 16
+
 On CPU this runs the pure-jnp reference math; on TPU the same entry point
 dispatches the Pallas cascade kernels (models.set_linear_mode("auto")).
 """
@@ -55,6 +60,13 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--max-batch", type=int, default=8,
+                    help="continuous batching: decode-batch capacity")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="continuous batching: KV-cache block size (tokens)")
+    ap.add_argument("--ragged", action="store_true",
+                    help="mixed-length demo: vary prompt lengths and serve "
+                         "through the continuous-batching scheduler")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="<= 0 -> greedy decode")
     ap.add_argument("--top-k", type=int, default=0)
@@ -71,14 +83,32 @@ def main(argv=None):
     else:
         plan = None
 
-    engine = InferenceEngine.build(cfg, plan, seed=args.seed, verbose=True)
+    engine = InferenceEngine.build(cfg, plan, seed=args.seed, verbose=True,
+                                   max_batch=args.max_batch,
+                                   block_size=args.block_size)
 
     task = pipeline.MarkovTask(cfg.vocab_size, seed=args.seed)
     prompts = task.batch(0, args.batch, args.prompt_len)["tokens"]
+    sampling = SamplingParams(max_tokens=args.gen,
+                              temperature=args.temperature,
+                              top_k=args.top_k, seed=args.seed)
 
-    res = engine.generate(prompts, SamplingParams(
-        max_tokens=args.gen, temperature=args.temperature,
-        top_k=args.top_k, seed=args.seed))
+    if args.ragged:
+        # mixed-length workload: truncate each row to a different length
+        base = np.asarray(prompts)
+        lens = [max(4, args.prompt_len - 4 * (i % 4))
+                for i in range(args.batch)]
+        ragged = [base[i, :lens[i]] for i in range(args.batch)]
+        res = engine.serve(ragged, sampling)
+        print(f"[serve] continuous batching: {len(ragged)} requests "
+              f"(prompt lens {lens}) in {res.seconds:.1f}s — "
+              f"{res.steps} decode steps, {res.prefills} prefills, "
+              f"peak queue {res.max_queue_depth}, "
+              f"{res.tokens_per_second:.1f} tok/s")
+        print("[serve] sample:", res.outputs[0][:16].tolist())
+        return np.stack(res.outputs)
+
+    res = engine.generate(prompts, sampling)
     print(f"[serve] generated {res.tokens.shape} in {res.seconds:.1f}s "
           f"({res.tokens_per_second:.1f} tok/s)")
     print("[serve] sample:", np.asarray(res.tokens[0][:16]).tolist())

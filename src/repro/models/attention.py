@@ -204,6 +204,73 @@ def _quant_kv(x):
     return q, scale.astype(jnp.float32)
 
 
+def decode_attention_paged(params, x1, pool, block_table, lengths, cfg):
+    """One-token decode against a blocked (paged) KV pool — the
+    continuous-batching path, where every row sits at its own position.
+
+    x1: (B, 1, D) hidden; pool: ONE layer's blocks {"k","v"[,"ks","vs"]}
+    with leaves (NB, bs, Hk, *); block_table: (B, MB) int32 physical block
+    ids in logical order, padded with the reserved trash block 0;
+    lengths: (B,) int32 tokens already cached per row == the incoming
+    token's absolute position (per-row RoPE / mask, unlike the scalar
+    `pos` of `decode_attention`).
+
+    The new K/V lands at (block_table[b, len//bs], len % bs); attention
+    then runs over the gathered logical view block_table -> (B, MB*bs,
+    Hk, Dh) under a per-row validity mask (slot index <= len). Inactive
+    rows (all-trash tables, length 0) write into block 0 and read garbage
+    the caller discards — no control flow inside the jitted step.
+    """
+    b = x1.shape[0]
+    h, hk, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    bs = pool["k"].shape[1]
+    mb = block_table.shape[1]
+
+    q = apply_linear(x1, params["wq"]).reshape(b, 1, h, hd)
+    k = apply_linear(x1, params["wk"]).reshape(b, 1, hk, hd)
+    v = apply_linear(x1, params["wv"]).reshape(b, 1, hk, hd)
+    if cfg.pos_emb == "rope":
+        pos = lengths[:, None]                       # (B, 1) per-row
+        q = apply_rope(q, pos, cfg.rope_theta, cfg.rotary_pct)
+        k = apply_rope(k, pos, cfg.rope_theta, cfg.rotary_pct)
+
+    blk = block_table[jnp.arange(b), lengths // bs]  # (B,) physical block
+    off = lengths % bs                               # (B,) slot in block
+    if "ks" in pool:
+        kq, ks1 = _quant_kv(k)
+        vq, vs1 = _quant_kv(v)
+        pool = {
+            "k": pool["k"].at[blk, off].set(kq[:, 0]),
+            "v": pool["v"].at[blk, off].set(vq[:, 0]),
+            "ks": pool["ks"].at[blk, off].set(ks1[:, 0]),
+            "vs": pool["vs"].at[blk, off].set(vs1[:, 0]),
+        }
+        ck = (pool["k"][block_table].reshape(b, mb * bs, hk, hd)
+              .astype(q.dtype)
+              * pool["ks"][block_table].reshape(b, mb * bs, hk, 1)
+              .astype(q.dtype))
+        cv = (pool["v"][block_table].reshape(b, mb * bs, hk, hd)
+              .astype(q.dtype)
+              * pool["vs"][block_table].reshape(b, mb * bs, hk, 1)
+              .astype(q.dtype))
+    else:
+        pool = {
+            "k": pool["k"].at[blk, off].set(k[:, 0].astype(pool["k"].dtype)),
+            "v": pool["v"].at[blk, off].set(v[:, 0].astype(pool["v"].dtype)),
+        }
+        ck = pool["k"][block_table].reshape(b, mb * bs, hk, hd).astype(q.dtype)
+        cv = pool["v"][block_table].reshape(b, mb * bs, hk, hd).astype(q.dtype)
+
+    valid = jnp.arange(mb * bs)[None, :] <= lengths[:, None]   # (B, S)
+    qg = _group_q(q, hk)                                       # (B,1,Hk,G,Dh)
+    s = _scores(qg, ck, cfg.logit_softcap)                     # (B,Hk,G,1,S)
+    s = jnp.where(valid[:, None, None, None, :], s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(cv.dtype), cv)
+    y = apply_linear(o.reshape(b, 1, h * hd), params["wo"])
+    return y, pool
+
+
 def decode_attention(params, x1, cache, pos, cfg, *, window=None):
     """One-token decode. x1: (B, 1, D); pos: scalar int32 current position.
 

@@ -95,7 +95,9 @@ def init_params(key, cfg):
 # --------------------------------------------------------------- forward --
 def embed(params, inputs, cfg, pos0=0):
     """inputs: int tokens (B, S) or precomputed embeddings (B, S, D).
-    pos0: absolute position of inputs[:, 0] (decode passes the step)."""
+    pos0: absolute position of inputs[:, 0] — a scalar (rectangular
+    decode passes the step) or a (B,) vector (continuous batching, where
+    every row sits at its own position)."""
     dtype = jnp.dtype(cfg.dtype)
     if inputs.ndim == 3:  # modality-frontend stub: embeddings arrive directly
         h = inputs.astype(dtype)
@@ -104,8 +106,9 @@ def embed(params, inputs, cfg, pos0=0):
         if cfg.layout != "ssm":
             h = h * jnp.asarray(cfg.d_model ** 0.5, dtype)
     if cfg.pos_emb == "sinusoidal":
-        pos = pos0 + jnp.arange(h.shape[1])
-        h = h + sinusoidal_emb(pos, cfg.d_model, dtype)[None]
+        pos = jnp.asarray(pos0)[..., None] + jnp.arange(h.shape[1])
+        emb = sinusoidal_emb(pos, cfg.d_model, dtype)  # (S,D) or (B,S,D)
+        h = h + (emb if emb.ndim == 3 else emb[None])
     return maybe_shard(h, "batch", "seq", None)
 
 
@@ -360,6 +363,41 @@ def prefill(params, inputs, cfg, *, max_len=None, cache_dtype=None,
     h = apply_norm(h, params["final_norm"], cfg.norm, cfg.norm_eps)
     logits = logits_for(params, h[:, -1:], cfg)
     return logits, cache
+
+
+def decode_step_paged(params, pool, block_tables, lengths, inputs, cfg):
+    """One continuous-batching decode step over a blocked KV pool.
+
+    inputs: (B, 1) tokens; block_tables: (B, MB) int32; lengths: (B,)
+    int32 per-row positions (see attention.decode_attention_paged).
+    pool: runtime.kvblocks.init_paged_cache leaves (L, NB, bs, Hk, *),
+    scanned over layers exactly like the monolithic cache. Returns
+    (logits (B, 1, V) f32, updated pool). Inactive rows compute garbage
+    the caller masks; shapes are static in (B, MB) so one jit covers the
+    whole serve loop regardless of admissions/evictions.
+    """
+    from repro.runtime.kvblocks import check_paged_support
+
+    check_paged_support(cfg)
+    h = embed(params, inputs, cfg, pos0=lengths)
+
+    def body(h, xs):
+        lp, pl = xs
+        hn = apply_norm(h, lp["ln1"], cfg.norm, cfg.norm_eps)
+        a, pl = attn.decode_attention_paged(lp["attn"], hn, pl,
+                                            block_tables, lengths, cfg)
+        h = h + a
+        hn = apply_norm(h, lp["ln2"], cfg.norm, cfg.norm_eps)
+        if "moe" in lp:
+            y, _ = moe_mod.moe_apply(lp["moe"], hn, cfg)
+        else:
+            y = mlp_apply(hn, lp["mlp"], cfg.mlp_act)
+        h = h + y
+        return h, pl
+
+    h, pool = jax.lax.scan(body, h, (params["layers"], pool))
+    h = apply_norm(h, params["final_norm"], cfg.norm, cfg.norm_eps)
+    return logits_for(params, h, cfg), pool
 
 
 def decode_step(params, cache, inputs, pos, cfg):

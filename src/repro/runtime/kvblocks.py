@@ -1,0 +1,137 @@
+"""Blocked (paged) KV-cache pool for continuous-batching decode.
+
+The monolithic decode cache sizes every row at `max_len`, so a batch pays
+for its longest request and a finished row's memory is stranded until the
+whole batch retires. This module replaces it, for the shared decode batch,
+with the paged layout production servers use (vLLM / TensorRT-LLM style):
+
+  * a physical pool of fixed-size blocks per layer —
+    `(L, num_blocks, block_size, Hk, Dh)` for K and V, plus per-(token,
+    head) scale planes when `cfg.kv_cache_bits == 8`;
+  * a host-side `BlockPool` free-list allocator. Block 0 is reserved as
+    the *trash block*: inactive batch rows write there and nothing ever
+    reads it back, so the jitted decode step needs no control flow;
+  * per-sequence block tables mapping logical position `p` to physical
+    slot `(table[p // block_size], p % block_size)`. Tables are dense,
+    append-only, and padded with the trash block.
+
+`pack_prefill` scatters a single sequence's rectangular prefill cache into
+its allocated blocks; `models.attention.decode_attention_paged` does the
+per-step write + gather. Admission/eviction policy lives in
+`runtime.scheduler`; this module is pure layout + accounting.
+
+Supported: dense / MoE layouts with global causal attention. Sliding
+windows, local/global alternation, and SSM state are not paged yet (their
+decode state is O(window) / O(1) per row, so paging buys much less).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def check_paged_support(cfg) -> None:
+    """Raise when `cfg` cannot decode through the blocked KV pool."""
+    if cfg.layout not in ("dense", "moe"):
+        raise NotImplementedError(
+            f"paged KV decode supports dense/moe layouts, not {cfg.layout!r}"
+            " (SSM/hybrid decode state is O(1) per row and is not paged)")
+    if cfg.local_global_period or cfg.attn_window:
+        raise NotImplementedError(
+            "paged KV decode does not support windowed or local/global "
+            "attention yet — their rolling caches are already O(window)")
+
+
+def blocks_needed(prompt_len: int, max_tokens: int, block_size: int) -> int:
+    """Blocks a request occupies at peak: prompt positions plus every
+    generated token except the last (which is returned, never cached).
+    A max_tokens == 1 request finishes at prefill — its KV is never
+    packed, so it needs no blocks at all."""
+    if max_tokens <= 1:
+        return 0
+    return -(-(prompt_len + max_tokens - 1) // block_size)
+
+
+class BlockPool:
+    """Host-side free-list allocator over `num_blocks` KV blocks.
+
+    Block 0 is reserved (the trash block for inactive rows) and is never
+    handed out, so `capacity == num_blocks - 1`. Double-alloc and
+    double-free are hard errors — the scheduler tests lean on this to
+    prove admit/evict sequences never leak.
+    """
+
+    def __init__(self, num_blocks: int, block_size: int):
+        if num_blocks < 2:
+            raise ValueError(f"need >= 2 blocks (one is reserved), got "
+                             f"{num_blocks}")
+        if block_size < 1:
+            raise ValueError(f"block_size must be >= 1, got {block_size}")
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self._free = list(range(num_blocks - 1, 0, -1))
+        self._allocated: set[int] = set()
+
+    @property
+    def capacity(self) -> int:
+        return self.num_blocks - 1
+
+    @property
+    def available(self) -> int:
+        return len(self._free)
+
+    def can_alloc(self, n: int) -> bool:
+        return n <= self.available
+
+    def alloc(self, n: int) -> list[int]:
+        if not self.can_alloc(n):
+            raise RuntimeError(
+                f"block pool exhausted: want {n}, have {self.available} "
+                f"(callers must check can_alloc and queue instead)")
+        ids = [self._free.pop() for _ in range(n)]
+        self._allocated.update(ids)
+        return ids
+
+    def free(self, ids) -> None:
+        for b in ids:
+            if b not in self._allocated:
+                raise RuntimeError(f"double free / foreign block {b}")
+            self._allocated.remove(b)
+            self._free.append(b)
+
+
+def init_paged_cache(cfg, num_blocks: int, block_size: int, dtype=None):
+    """Physical pool arrays for every layer: {"k","v"} of shape
+    (L, num_blocks, block_size, Hk, Dh), plus {"ks","vs"} f32 scale planes
+    when cfg.kv_cache_bits == 8 (same int8 code + scale convention as
+    attention.init_kv_cache)."""
+    check_paged_support(cfg)
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    L, hk, hd = cfg.num_layers, cfg.num_kv_heads, cfg.head_dim
+    shape = (L, num_blocks, block_size, hk, hd)
+    if getattr(cfg, "kv_cache_bits", 16) == 8:
+        sshape = (L, num_blocks, block_size, hk, 1)
+        return {"k": jnp.zeros(shape, jnp.int8),
+                "v": jnp.zeros(shape, jnp.int8),
+                "ks": jnp.ones(sshape, jnp.float32),
+                "vs": jnp.ones(sshape, jnp.float32)}
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def pack_prefill(pool, prefill_kv, block_ids):
+    """Scatter one sequence's prefill cache into its allocated blocks.
+
+    pool: init_paged_cache leaves (L, NB, bs, Hk, *).
+    prefill_kv: the `cache["kv"]` pytree from transformer.prefill run at
+        batch 1 with max_len == len(block_ids) * block_size, i.e. leaves
+        (L, 1, nb * bs, Hk, *).
+    block_ids: (nb,) int32 physical destinations, logical order.
+    """
+    nb = block_ids.shape[0]
+
+    def leaf(pl, cl):
+        L, bs = pl.shape[0], pl.shape[2]
+        resh = cl.reshape(L, nb, bs, *cl.shape[3:]).astype(pl.dtype)
+        return pl.at[:, block_ids].set(resh)
+
+    return jax.tree_util.tree_map(leaf, pool, prefill_kv)

@@ -1,0 +1,149 @@
+"""Continuous-batching request scheduler (bookkeeping only, no compute).
+
+Production serving never sees rectangular batches: requests arrive at
+arbitrary times with arbitrary prompt/output lengths. The standard answer
+(TensorRT-LLM "inflight batching", vLLM) is a shared decode batch that
+gains a row the moment a request is admitted and loses it the moment the
+request finishes — the GPU never idles waiting for the longest row. This
+module is the policy half of that loop:
+
+  * `Request`  — what a caller submits: prompt tokens + max_tokens (per
+    request; a mixed workload is the whole point);
+  * `Sequence` — a request bound to a decode row and a set of KV blocks;
+  * `Scheduler` — FCFS waiting queue + admission + eviction. A request is
+    admitted when a batch row is free AND the `BlockPool` can reserve its
+    *worst-case* block count up front (prompt + every generated token), so
+    a running sequence can never be starved of cache mid-decode and
+    overflow queues instead of crashing.
+
+Admission is strictly FCFS: if the head request does not fit, later ones
+do not jump it (no starvation of long prompts). The compute half — prefill
+into blocks, the masked fixed-capacity decode step — lives in
+`api.InferenceEngine.serve`, which drives this object step by step;
+`runtime.kvblocks` owns the cache layout. The scheduler itself touches no
+jax arrays, which is what makes it unit-testable under random admit/evict
+sequences (see tests/test_scheduler.py).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+
+import numpy as np
+
+from repro.runtime.kvblocks import BlockPool, blocks_needed
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request. max_tokens=None defers to the engine-level
+    SamplingParams; rid is assigned by the engine (submission order)."""
+
+    tokens: np.ndarray
+    max_tokens: int | None = None
+    rid: int | None = None
+
+    def __post_init__(self):
+        self.tokens = np.asarray(self.tokens, np.int32).reshape(-1)
+        if self.tokens.size == 0:
+            raise ValueError("empty prompt")
+        if self.max_tokens is not None and self.max_tokens < 1:
+            raise ValueError(f"max_tokens must be >= 1, got {self.max_tokens}")
+
+
+@dataclasses.dataclass
+class Sequence:
+    """A live request: bound to decode row `row`, owning `block_ids`."""
+
+    req: Request
+    row: int
+    block_ids: list[int]
+    out: list[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.req.tokens.size)
+
+    @property
+    def max_tokens(self) -> int:
+        return int(self.req.max_tokens)
+
+    @property
+    def done(self) -> bool:
+        return len(self.out) >= self.max_tokens
+
+
+class Scheduler:
+    """FCFS admission over `max_batch` decode rows and a `BlockPool`."""
+
+    def __init__(self, pool: BlockPool, max_batch: int):
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        self.pool = pool
+        self.max_batch = max_batch
+        self.waiting: collections.deque[Request] = collections.deque()
+        self.rows: list[Sequence | None] = [None] * max_batch
+        self.max_queue_depth = 0
+
+    # ------------------------------------------------------------ submit --
+    def submit(self, req: Request) -> None:
+        """Queue a request. Raises if it can never fit the pool (worst-case
+        block need exceeds total capacity) — that is a config error, not a
+        load condition."""
+        if req.max_tokens is None:
+            raise ValueError(
+                "request max_tokens is unresolved (None); fill it in before "
+                "submitting — engine.serve resolves it from SamplingParams")
+        need = blocks_needed(req.tokens.size, req.max_tokens,
+                             self.pool.block_size)
+        if need > self.pool.capacity:
+            raise ValueError(
+                f"request rid={req.rid} needs {need} KV blocks but the pool "
+                f"only has {self.pool.capacity}; raise num_blocks or "
+                f"block_size")
+        self.waiting.append(req)
+        self.max_queue_depth = max(self.max_queue_depth, len(self.waiting))
+
+    # --------------------------------------------------------- admission --
+    def _free_row(self) -> int | None:
+        for i, s in enumerate(self.rows):
+            if s is None:
+                return i
+        return None
+
+    def try_admit(self) -> Sequence | None:
+        """Admit the head-of-queue request if a row is free and its full
+        block budget is available; None when nothing is admissible now."""
+        if not self.waiting:
+            return None
+        row = self._free_row()
+        if row is None:
+            return None
+        req = self.waiting[0]
+        need = blocks_needed(req.tokens.size, req.max_tokens,
+                             self.pool.block_size)
+        if not self.pool.can_alloc(need):
+            return None
+        self.waiting.popleft()
+        seq = Sequence(req=req, row=row, block_ids=self.pool.alloc(need))
+        self.rows[row] = seq
+        return seq
+
+    # ---------------------------------------------------------- eviction --
+    def finish(self, seq: Sequence) -> None:
+        """Retire a sequence: release its blocks and free its row."""
+        self.pool.free(seq.block_ids)
+        seq.block_ids = []
+        self.rows[seq.row] = None
+
+    # ------------------------------------------------------------- state --
+    @property
+    def num_waiting(self) -> int:
+        return len(self.waiting)
+
+    @property
+    def num_active(self) -> int:
+        return sum(s is not None for s in self.rows)
+
+    def has_work(self) -> bool:
+        return bool(self.waiting) or self.num_active > 0

@@ -150,13 +150,22 @@ def test_engine_sampling_modes(smoke):
     np.testing.assert_array_equal(out.tokens, out2.tokens)
 
 
-def test_engine_rejects_ragged_requests(smoke):
+def test_engine_accepts_ragged_requests(smoke):
+    """Ragged prompt lists route through the continuous-batching scheduler
+    and come back per-request, greedy-identical to solo generation."""
     cfg, params = smoke
     eng = InferenceEngine.build(cfg, None, params=params)
-    with pytest.raises(ValueError, match="ragged"):
-        eng.generate([[1, 2, 3], [1, 2]], SamplingParams(max_tokens=2))
+    prompts = [[1, 2, 3], [4, 5], [6, 7, 8, 9]]
+    res = eng.generate(prompts, SamplingParams(max_tokens=3))
+    assert res.tokens.shape == (3, 3)
+    assert res.prompt_lens == [3, 2, 4] and res.prompt_len == 4
+    for p, got in zip(prompts, res.tokens):
+        solo = eng.generate(np.asarray([p]), SamplingParams(max_tokens=3))
+        np.testing.assert_array_equal(got, solo.tokens[0])
     with pytest.raises(ValueError, match="empty"):
         eng.generate([], SamplingParams(max_tokens=2))
+    with pytest.raises(ValueError, match="1-D"):    # no silent flattening
+        eng.generate([np.zeros((2, 3), np.int32)], SamplingParams(max_tokens=2))
 
 
 def test_co_design_rejects_dict_candidates(smoke):

@@ -1,0 +1,78 @@
+#!/usr/bin/env python
+"""Check that intra-repo markdown links resolve.
+
+Scans the given markdown files / directories (default: README.md and
+docs/) for inline links `[text](target)`. External targets (http/https/
+mailto) are skipped; everything else must exist on disk relative to the
+file containing the link. Anchors (`file.md#heading` or `#heading`) are
+verified against GitHub-style heading slugs of the target file.
+
+Usage (what the CI docs job runs):
+    python tools/check_links.py README.md docs
+Exit status 0 when every link resolves, 1 otherwise.
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+LINK_RE = re.compile(r"(?<!!)\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+CODE_FENCE_RE = re.compile(r"```.*?```", re.DOTALL)
+
+
+def slugify(heading: str) -> str:
+    """GitHub anchor slug: lowercase, drop punctuation, spaces->hyphens."""
+    h = re.sub(r"[`*_]", "", heading.strip().lower())
+    h = re.sub(r"[^\w\- ]", "", h)
+    return h.replace(" ", "-")
+
+
+def heading_slugs(md_path: pathlib.Path) -> set[str]:
+    text = CODE_FENCE_RE.sub("", md_path.read_text(encoding="utf-8"))
+    return {slugify(m.group(1)) for m in HEADING_RE.finditer(text)}
+
+
+def check_file(md_path: pathlib.Path) -> list[str]:
+    errors = []
+    text = CODE_FENCE_RE.sub("", md_path.read_text(encoding="utf-8"))
+    for m in LINK_RE.finditer(text):
+        target = m.group(1)
+        if re.match(r"^[a-z][a-z0-9+.-]*:", target):   # http:, mailto:, ...
+            continue
+        path_part, _, anchor = target.partition("#")
+        dest = (md_path.parent / path_part).resolve() if path_part \
+            else md_path.resolve()
+        if not dest.exists():
+            errors.append(f"{md_path}: broken link -> {target}")
+            continue
+        if anchor and dest.suffix == ".md":
+            if anchor not in heading_slugs(dest):
+                errors.append(f"{md_path}: missing anchor -> {target}")
+    return errors
+
+
+def main(argv=None) -> int:
+    args = (argv if argv is not None else sys.argv[1:]) or ["README.md",
+                                                            "docs"]
+    files: list[pathlib.Path] = []
+    for a in args:
+        p = pathlib.Path(a)
+        if p.is_dir():
+            files.extend(sorted(p.rglob("*.md")))
+        elif p.exists():
+            files.append(p)
+        else:
+            print(f"check_links: no such path {a}", file=sys.stderr)
+            return 1
+    errors = [e for f in files for e in check_file(f)]
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"check_links: {len(files)} files, "
+          f"{'OK' if not errors else f'{len(errors)} broken'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
