@@ -2,7 +2,7 @@
 
 Build compiles a serving engine from (architecture, CompressionPlan):
 compress the weights per the plan, optionally place them on a device mesh,
-and jit the prefill / decode-step callables once. Generation then runs any
+and jit the prefill / step callables once. Generation then runs any
 number of batched requests against the same compiled engine:
 
     plan = CompressionPlan.load("plan.json")          # e.g. a DSE winner
@@ -11,13 +11,19 @@ number of batched requests against the same compiled engine:
 
 Two serving paths share the compiled model:
 
-  * `generate` on a rectangular (B, S) batch — prefill once, decode in
-    lockstep; the static-batching baseline.
-  * `serve` (which `generate` uses for ragged prompt lists) — continuous
-    batching: a `runtime.scheduler.Scheduler` admits requests into a
-    fixed-capacity masked decode batch backed by a `runtime.kvblocks`
-    blocked KV pool; rows join after individual prefill and leave the
-    moment they finish, with their blocks returned to the pool.
+  * `generate` on a rectangular (B, S) batch — prefill once (prompts are
+    right-padded to power-of-two length buckets, so N distinct lengths
+    cost O(log N) compilations), decode in lockstep; the static-batching
+    baseline.
+  * `serve` (which `generate` uses for ragged prompt lists) — in-flight
+    batching with chunked prefill: every forward pass is ONE jitted
+    token-budget step (`models.transformer.unified_step`) that mixes
+    prefill chunks of newly admitted prompts with in-flight decode rows
+    over a `runtime.kvblocks` blocked KV pool, scheduled by
+    `runtime.scheduler.Scheduler`. There is no solo-prefill path: a
+    prompt enters the pool chunk by chunk while older rows keep
+    decoding, and rows leave the moment they finish, returning their
+    blocks to the pool.
 
 `launch.serve` is a thin CLI over this class; every future serving feature
 (KV paging variants, multi-host decode) lands behind this facade rather
@@ -25,6 +31,7 @@ than in loose scripts.
 """
 from __future__ import annotations
 
+import collections
 import contextlib
 import dataclasses
 import time
@@ -72,20 +79,29 @@ class GenerationResult:
         return b * g / max(self.seconds, 1e-9)
 
 
+def _percentile(xs, q) -> float:
+    return float(np.percentile(np.asarray(xs, np.float64), q)) if xs else 0.0
+
+
 @dataclasses.dataclass
 class ServeResult:
-    """Continuous-batching outcome: per-request continuations in
-    submission order, plus the scheduler's step/occupancy accounting."""
+    """In-flight batching outcome: per-request continuations in
+    submission order, plus step/chunk/latency accounting."""
 
     outputs: list[np.ndarray]   # outputs[i]: (requests[i].max_tokens,) int32
     prompt_lens: list[int]
     seconds: float
-    steps: int                  # shared decode steps executed
-    prefills: int               # individual prompt prefills
+    steps: int                  # unified token-budget steps executed
+    prefill_chunks: int         # prompt chunks processed across all steps
+    prefill_tokens: int         # prompt tokens entered via those chunks
+    mixed_steps: int            # steps running prefill AND decode together
+    chunk_tokens: int           # the per-step token budget
     max_queue_depth: int        # peak waiting-queue length (overflow proof)
     max_batch: int
     block_size: int
     num_blocks: int
+    ttft: list[float] = dataclasses.field(default_factory=list)
+    tpot: list[float] = dataclasses.field(default_factory=list)
 
     @property
     def total_tokens(self) -> int:
@@ -94,6 +110,26 @@ class ServeResult:
     @property
     def tokens_per_second(self) -> float:
         return self.total_tokens / max(self.seconds, 1e-9)
+
+    # per-request latency aggregates (seconds). ttft[i] is measured from
+    # serve() start to request i's first sampled token; tpot[i] is the
+    # mean inter-token time over its remaining outputs (0.0 for
+    # single-token requests).
+    @property
+    def ttft_p50(self) -> float:
+        return _percentile(self.ttft, 50)
+
+    @property
+    def ttft_p95(self) -> float:
+        return _percentile(self.ttft, 95)
+
+    @property
+    def tpot_p50(self) -> float:
+        return _percentile([t for t in self.tpot if t > 0], 50)
+
+    @property
+    def tpot_p95(self) -> float:
+        return _percentile([t for t in self.tpot if t > 0], 95)
 
 
 def _as_token_batch(requests):
@@ -119,43 +155,97 @@ def _as_token_batch(requests):
     return toks
 
 
+def _pow2_bucket(n: int) -> int:
+    """Smallest power of two >= n."""
+    return 1 << max(n - 1, 0).bit_length()
+
+
+def _serve_step(params, pool, block_tables, step_buf, prev, cfg):
+    """One fused serving dispatch. step_buf: (B, W + 3) int32 — the
+    host-built span tokens (B, W) with three metadata columns appended
+    (ctx_lens, q_lens, use_prev), packed so the hot loop uploads ONE
+    array per step. Decode rows' first token column is spliced from
+    `prev` (the previous step's device-resident sampled tokens) so token
+    values never round-trip through the host. Returns (logits (B, 1, V),
+    greedy next tokens (B, 1), pool)."""
+    tokens = step_buf[:, :-3]
+    ctx_lens, q_lens, use_prev = (step_buf[:, -3], step_buf[:, -2],
+                                  step_buf[:, -1])
+    tokens = tokens.at[:, 0].set(
+        jnp.where(use_prev.astype(bool), prev[:, 0], tokens[:, 0]))
+    logits, pool = tfm.unified_step(params, pool, block_tables, ctx_lens,
+                                    q_lens, tokens, cfg)
+    toks = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    return logits, toks, pool
+
+
 class InferenceEngine:
     """Compiled compress→shard→serve pipeline for one model + plan."""
 
     def __init__(self, cfg: ModelConfig, params, *, plan=None, report=None,
-                 mesh=None, max_batch: int = 8, block_size: int = 16):
+                 mesh=None, max_batch: int = 8, block_size: int = 16,
+                 chunk_tokens: int = 256, bucket_prompts: bool = True):
         self.cfg = cfg
         self.params = params
         self.plan = plan
         self.report = report
         self.mesh = mesh
-        self.max_batch = max_batch      # serve(): decode-batch capacity
+        self.max_batch = max_batch      # serve(): batch-row capacity
         self.block_size = block_size    # serve(): KV block size (tokens)
+        self.chunk_tokens = chunk_tokens  # serve(): per-step token budget
+        # generate(): right-pad prompts to power-of-two length buckets so
+        # N distinct lengths cost O(log N) prefill compilations. Only
+        # sound where right-padding is inert: dense global causal
+        # attention (padding K/V slots are overwritten before any decode
+        # query can see them). Rolling/windowed caches and SSM state
+        # fold padding into what decode reads, and MoE expert routing is
+        # capacity-bounded per batch — pad tokens compete for expert
+        # slots and can displace real tokens — so those archs prefill at
+        # exact length.
+        self.bucket_prompts = bucket_prompts and self._can_bucket(cfg)
         # jit once; XLA re-specializes per (batch, seq, max_len) shape.
         self._prefill = jax.jit(
-            lambda p, toks, max_len: tfm.prefill(p, toks, cfg,
-                                                 max_len=max_len),
+            lambda p, toks, max_len, last: tfm.prefill(p, toks, cfg,
+                                                       max_len=max_len,
+                                                       last_pos=last),
             static_argnums=2)
         self._decode = jax.jit(
             lambda p, cache, tok, pos: tfm.decode_step(p, cache, tok, pos,
                                                        cfg))
-        # continuous-batching step: static in (capacity, max blocks/seq),
-        # so one compilation serves the whole admit/evict loop.
-        self._decode_paged = jax.jit(
-            lambda p, pool, bt, lens, tok: tfm.decode_step_paged(
-                p, pool, bt, lens, tok, cfg))
-        self._pack = jax.jit(kvblocks.pack_prefill)
+        # the unified serving step: static in (capacity, span width, max
+        # blocks/seq); the span width is power-of-two bucketed, so one
+        # jitted function in O(log chunk_tokens) shapes serves the whole
+        # admit/chunk/decode/evict loop. Everything per-step is fused
+        # into this single dispatch — splicing the previous step's
+        # device-resident sampled tokens into decode rows, the forward
+        # pass, and the greedy argmax — because serving throughput on
+        # small steps is bounded by host dispatch overhead, not FLOPs.
+        self._unified = jax.jit(
+            lambda p, pool, bt, buf, prev: _serve_step(
+                p, pool, bt, buf, prev, cfg))
+        # greedy sampling is the serving hot path: one fused jitted argmax
+        # instead of a chain of eager ops + PRNG key splits per step.
+        self._argmax = jax.jit(
+            lambda lg: jnp.argmax(lg[:, -1], axis=-1)[:, None]
+            .astype(jnp.int32))
+
+    @staticmethod
+    def _can_bucket(cfg) -> bool:
+        return (cfg.layout == "dense"
+                and not cfg.attn_window and not cfg.local_global_period)
 
     # ------------------------------------------------------------- build --
     @classmethod
     def build(cls, arch, plan=None, *, mesh=None, params=None,
               smoke: bool = False, seed: int = 0, verbose: bool = False,
-              max_batch: int = 8, block_size: int = 16) -> "InferenceEngine":
+              max_batch: int = 8, block_size: int = 16,
+              chunk_tokens: int = 256) -> "InferenceEngine":
         """arch: config name (see repro.configs) or a ModelConfig.
         plan: CompressionPlan | legacy CompressionConfig | None (dense).
         params: pre-trained weights; freshly initialized when omitted.
         mesh: optional jax Mesh — weights are placed per launch.sharding.
-        max_batch / block_size: continuous-batching defaults for serve()."""
+        max_batch / block_size / chunk_tokens: serving defaults for
+        serve() — batch rows, KV block size, per-step token budget."""
         cfg = get_config(arch, smoke=smoke) if isinstance(arch, str) else arch
         if params is None:
             params = tfm.init_params(jax.random.PRNGKey(seed), cfg)
@@ -178,7 +268,8 @@ class InferenceEngine:
             params = jax.device_put(params,
                                     shd.param_shardings(params, mesh, cfg))
         return cls(cfg, params, plan=plan, report=report, mesh=mesh,
-                   max_batch=max_batch, block_size=block_size)
+                   max_batch=max_batch, block_size=block_size,
+                   chunk_tokens=chunk_tokens)
 
     # ---------------------------------------------------------- generate --
     def generate(self, requests, sampling: SamplingParams | None = None
@@ -187,11 +278,11 @@ class InferenceEngine:
 
         requests: (B, S) int tokens — array or list of token lists. Equal
         lengths run the rectangular lockstep path; ragged lengths are
-        served by the continuous-batching scheduler (`serve`), prefilled
-        individually and decoded in a shared masked batch. Either way the
-        result is the generated continuation only, (B, max_tokens), in
-        request order — greedy outputs are token-identical between the
-        two paths and to running each prompt alone.
+        served by the in-flight batching scheduler (`serve`) through the
+        unified token-budget step. Either way the result is the generated
+        continuation only, (B, max_tokens), in request order — greedy
+        outputs are token-identical between the two paths and to running
+        each prompt alone.
         """
         sampling = sampling or SamplingParams()
         toks = _as_token_batch(requests)
@@ -202,18 +293,25 @@ class InferenceEngine:
                 prompt_len=max(res.prompt_lens), seconds=res.seconds,
                 prompt_lens=list(res.prompt_lens))
         s = toks.shape[1]
-        max_len = s + sampling.max_tokens
+        padded = _pow2_bucket(s) if self.bucket_prompts else s
+        if padded != s:
+            toks = jnp.pad(toks, ((0, 0), (0, padded - s)))
+        max_len = padded + sampling.max_tokens
 
         from repro.runtime import shardctx
 
         ctx = (shardctx.use_mesh(self.mesh) if self.mesh is not None
                else contextlib.nullcontext())
         t0 = time.time()
+        greedy = sampling.temperature <= 0.0
         with ctx:
-            logits, cache = self._prefill(self.params, toks, max_len)
-            key = jax.random.PRNGKey(sampling.seed)
+            logits, cache = self._prefill(self.params, toks, max_len,
+                                          jnp.asarray(s - 1))
+            key = None if greedy else jax.random.PRNGKey(sampling.seed)
             out = []
-            key, k = jax.random.split(key)
+            k = None
+            if not greedy:
+                key, k = jax.random.split(key)
             tok = self._pick(logits, k, sampling)
             for i in range(sampling.max_tokens):
                 out.append(tok)
@@ -221,7 +319,8 @@ class InferenceEngine:
                     break
                 logits, cache = self._decode(self.params, cache, tok,
                                              jnp.asarray(s + i))
-                key, k = jax.random.split(key)
+                if not greedy:
+                    key, k = jax.random.split(key)
                 tok = self._pick(logits, k, sampling)
             gen = jax.block_until_ready(jnp.concatenate(out, axis=1))
         return GenerationResult(tokens=np.asarray(gen), prompt_len=s,
@@ -230,17 +329,30 @@ class InferenceEngine:
     # ------------------------------------------------------------- serve --
     def serve(self, requests, sampling: SamplingParams | None = None, *,
               max_batch: int | None = None, block_size: int | None = None,
-              num_blocks: int | None = None) -> ServeResult:
-        """Continuous batching: ragged prompts, per-request max_tokens.
+              num_blocks: int | None = None,
+              chunk_tokens: int | None = None) -> ServeResult:
+        """In-flight batching with chunked prefill: ragged prompts,
+        per-request max_tokens, one jitted token-budget step.
 
         requests: list of token sequences or `runtime.scheduler.Request`s
         (the latter carry their own max_tokens; otherwise
         `sampling.max_tokens` applies). Requests are admitted FCFS into a
-        fixed-capacity decode batch: each is prefilled individually, its
-        KV packed into pool blocks, and its row decodes alongside whatever
-        else is in flight; finished rows free their blocks immediately and
-        the next waiting request takes the slot mid-flight. Overflow
-        (rows or blocks) queues — it never crashes the batch.
+        fixed-capacity batch; each step the scheduler splits
+        `chunk_tokens` of budget between one decode token for every
+        in-flight row (decode always advances) and prompt chunks for
+        newly admitted rows, and a single forward pass processes the
+        whole mix. Finished rows free their blocks immediately and the
+        next waiting request takes the slot mid-flight. Overflow (rows or
+        blocks) queues — it never crashes the batch.
+
+        The loop is software-pipelined two steps deep: scheduling depends
+        only on token *counts* (per-request max_tokens, no early
+        stopping), so later steps are dispatched — decode rows fed the
+        previous step's sampled tokens device-to-device — before earlier
+        steps' values are read back. The host consumes a step's tokens
+        while the device runs the next two, which both hides the
+        per-step sync and timestamps each token at true completion
+        (TTFT/TPOT in the result).
 
         num_blocks defaults to enough for max_batch worst-case sequences,
         i.e. admission is then only row-limited. Pass a smaller pool to
@@ -260,6 +372,7 @@ class InferenceEngine:
 
         bs = block_size or self.block_size
         cap = min(max_batch or self.max_batch, len(reqs))
+        budget = chunk_tokens or self.chunk_tokens
         need = [kvblocks.blocks_needed(r.tokens.size, r.max_tokens, bs)
                 for r in reqs]
         mb = max(max(need), 1)              # block-table width (static)
@@ -272,82 +385,129 @@ class InferenceEngine:
 
         pool = kvblocks.init_paged_cache(self.cfg, num_blocks, bs)
         tables = np.zeros((cap, mb), np.int32)
-        lengths = np.zeros((cap,), np.int32)
-        cur_tok = np.zeros((cap, 1), np.int32)
-        active = np.zeros((cap,), bool)
-        outputs: list[np.ndarray | None] = [None] * len(reqs)
-        steps = prefills = 0
-        key = jax.random.PRNGKey(sampling.seed)
+        out_vals: list[list[int]] = [[] for _ in reqs]
+        first_tok_t = [None] * len(reqs)
+        finish_t = [0.0] * len(reqs)
+        steps = prefill_chunks = prefill_tokens = mixed_steps = 0
+        greedy = sampling.temperature <= 0.0
+        key = None if greedy else jax.random.PRNGKey(sampling.seed)
 
         from repro.runtime import shardctx
 
         ctx = (shardctx.use_mesh(self.mesh) if self.mesh is not None
                else contextlib.nullcontext())
         t0 = time.time()
+
+        def consume(emits, toks_dev):
+            """Read back one step's sampled tokens (blocks until the
+            device finishes that step) and credit them to requests."""
+            vals = np.asarray(toks_dev)
+            now = time.time()
+            for rid, r in emits:
+                out_vals[rid].append(int(vals[r, 0]))
+                if first_tok_t[rid] is None:
+                    first_tok_t[rid] = now
+                if len(out_vals[rid]) == reqs[rid].max_tokens:
+                    finish_t[rid] = now
+
         with ctx:
+            tables_dev = None       # device-safe copy, refreshed on change
+            inflight = collections.deque()   # (emits, device toks), oldest
+            prev_toks = jnp.zeros((cap, 1), jnp.int32)
             while sched.has_work():
-                # -- admission: prefill each newly admitted request alone --
-                while (seq := sched.try_admit()) is not None:
-                    nb_p = -(-seq.prompt_len // bs)
-                    toks1 = jnp.asarray(seq.req.tokens[None], jnp.int32)
-                    logits, cache = self._prefill(self.params, toks1,
-                                                  nb_p * bs)
-                    prefills += 1
-                    key, k = jax.random.split(key)
-                    tok = self._pick(logits, k, sampling)
-                    seq.out.append(int(np.asarray(tok)[0, 0]))
-                    if seq.done:            # max_tokens == 1: never decodes
-                        outputs[seq.req.rid] = np.asarray(seq.out, np.int32)
-                        sched.finish(seq)
-                        continue
-                    pool = self._pack(pool, cache["kv"],
-                                      jnp.asarray(seq.block_ids[:nb_p],
-                                                  jnp.int32))
-                    r = seq.row
-                    tables[r] = 0
-                    tables[r, :len(seq.block_ids)] = seq.block_ids
-                    lengths[r] = seq.prompt_len
-                    cur_tok[r, 0] = seq.out[-1]
-                    active[r] = True
-                if not active.any():
-                    break                   # queue drained by admission
-                # -- one shared decode step over the masked batch ----------
-                logits, pool = self._decode_paged(
-                    self.params, pool, jnp.asarray(tables),
-                    jnp.asarray(lengths), jnp.asarray(cur_tok))
-                steps += 1
-                key, k = jax.random.split(key)
-                toks = np.asarray(self._pick(logits, k, sampling))
-                lengths[active] += 1        # the step wrote position `len`
-                # -- record tokens, evict finished rows --------------------
-                for r in np.nonzero(active)[0]:
+                plan = sched.schedule(budget)
+                for seq in plan.admitted:
+                    tables[seq.row] = 0
+                    tables[seq.row, :len(seq.block_ids)] = seq.block_ids
+                    tables_dev = None
+                if not plan.prefill and not plan.decode:
+                    raise RuntimeError(
+                        "scheduler returned an empty step with work "
+                        "pending — admission deadlock")
+                # ---- build the (cap, W + meta) span batch ----------------
+                # one fresh packed buffer per step: span tokens then
+                # (ctx, q_len, use_prev) columns. Handed to the jitted
+                # step as numpy — never mutated after dispatch, so jax's
+                # zero-copy aliasing of host buffers is safe here.
+                w = _pow2_bucket(plan.max_span)
+                buf = np.zeros((cap, w + 3), np.int32)
+                for r, width in plan.prefill.items():
                     seq = sched.rows[r]
-                    seq.out.append(int(toks[r, 0]))
+                    lo = seq.prefilled
+                    buf[r, :width] = seq.req.tokens[lo:lo + width]
+                    buf[r, -3] = lo
+                    buf[r, -2] = width
+                for r in plan.decode:
+                    seq = sched.rows[r]
+                    # the input token is the one sampled last step; it is
+                    # still on device (prev_toks), spliced in by the step.
+                    # pool holds prompt + all but that newest token.
+                    buf[r, -3] = seq.prompt_len + seq.n_emitted - 1
+                    buf[r, -2] = 1
+                    buf[r, -1] = 1
+                # ---- ONE fused dispatch for the prefill/decode mix -------
+                if tables_dev is None:
+                    # a private copy: `tables` is mutated by later
+                    # admissions/evictions while earlier dispatched steps
+                    # may still be reading the (possibly aliased) upload
+                    tables_dev = tables.copy()
+                logits, toks_dev, pool = self._unified(
+                    self.params, pool, tables_dev, buf, prev_toks)
+                steps += 1
+                prefill_chunks += len(plan.prefill)
+                prefill_tokens += sum(plan.prefill.values())
+                mixed_steps += plan.is_mixed
+                if not greedy:
+                    key, k = jax.random.split(key)
+                    toks_dev = self._pick(logits, k, sampling)
+                prev_toks = toks_dev
+                # ---- count-based bookkeeping at dispatch time ------------
+                # (no early stopping, so who emits/finishes never depends
+                # on token values — eviction and admission can run ahead
+                # of the device)
+                emits = []
+                for r, width in plan.prefill.items():
+                    sched.rows[r].prefilled += width
+                for r in list(plan.prefill) + plan.decode:
+                    seq = sched.rows[r]
+                    if not seq.prefill_done:
+                        continue            # mid-prompt: logits unused
+                    seq.n_emitted += 1
+                    emits.append((seq.req.rid, r))
                     if seq.done:
-                        outputs[seq.req.rid] = np.asarray(seq.out, np.int32)
                         sched.finish(seq)
-                        active[r] = False
                         tables[r] = 0
-                        lengths[r] = 0
-                        cur_tok[r, 0] = 0
-                    else:
-                        cur_tok[r, 0] = toks[r, 0]
+                        tables_dev = None
+                # ---- consume an older step while this one runs -----------
+                # (two steps of lookahead keep the device queue busy
+                # through the host's scheduling + readback work)
+                inflight.append((emits, toks_dev))
+                if len(inflight) > 2:
+                    consume(*inflight.popleft())
+            while inflight:
+                consume(*inflight.popleft())
         if pool_alloc.available != pool_alloc.capacity:
             raise RuntimeError(
                 f"leaked KV blocks: {pool_alloc.capacity - pool_alloc.available}"
                 f" of {pool_alloc.capacity} still allocated after drain")
+        outputs = [np.asarray(v, np.int32) for v in out_vals]
+        ttft = [first_tok_t[i] - t0 for i in range(len(reqs))]
+        tpot = [(finish_t[i] - first_tok_t[i]) / max(r.max_tokens - 1, 1)
+                if r.max_tokens > 1 else 0.0
+                for i, r in enumerate(reqs)]
         return ServeResult(
             outputs=outputs, prompt_lens=[r.tokens.size for r in reqs],
-            seconds=time.time() - t0, steps=steps, prefills=prefills,
+            seconds=time.time() - t0, steps=steps,
+            prefill_chunks=prefill_chunks, prefill_tokens=prefill_tokens,
+            mixed_steps=mixed_steps, chunk_tokens=budget,
             max_queue_depth=sched.max_queue_depth, max_batch=cap,
-            block_size=bs, num_blocks=num_blocks)
+            block_size=bs, num_blocks=num_blocks, ttft=ttft, tpot=tpot)
 
-    @staticmethod
-    def _pick(logits, key, sampling: SamplingParams) -> jnp.ndarray:
+    def _pick(self, logits, key, sampling: SamplingParams) -> jnp.ndarray:
         """(B, 1) next tokens from (B, ..., V) last-position logits."""
-        last = logits[:, -1]
         if sampling.temperature <= 0.0:
-            return jnp.argmax(last, axis=-1)[:, None].astype(jnp.int32)
+            return self._argmax(logits)
+        last = logits[:, -1]
         scaled = last / sampling.temperature
         if sampling.top_k > 0 and sampling.top_k < scaled.shape[-1]:
             kth = jax.lax.top_k(scaled, sampling.top_k)[0][..., -1:]

@@ -61,9 +61,12 @@ def main(argv=None):
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--max-batch", type=int, default=8,
-                    help="continuous batching: decode-batch capacity")
+                    help="continuous batching: batch-row capacity")
     ap.add_argument("--block-size", type=int, default=16,
                     help="continuous batching: KV-cache block size (tokens)")
+    ap.add_argument("--chunk-tokens", type=int, default=256,
+                    help="continuous batching: per-step token budget split "
+                         "between prefill chunks and decode tokens")
     ap.add_argument("--ragged", action="store_true",
                     help="mixed-length demo: vary prompt lengths and serve "
                          "through the continuous-batching scheduler")
@@ -85,7 +88,8 @@ def main(argv=None):
 
     engine = InferenceEngine.build(cfg, plan, seed=args.seed, verbose=True,
                                    max_batch=args.max_batch,
-                                   block_size=args.block_size)
+                                   block_size=args.block_size,
+                                   chunk_tokens=args.chunk_tokens)
 
     task = pipeline.MarkovTask(cfg.vocab_size, seed=args.seed)
     prompts = task.batch(0, args.batch, args.prompt_len)["tokens"]
@@ -100,11 +104,16 @@ def main(argv=None):
                 for i in range(args.batch)]
         ragged = [base[i, :lens[i]] for i in range(args.batch)]
         res = engine.serve(ragged, sampling)
-        print(f"[serve] continuous batching: {len(ragged)} requests "
+        print(f"[serve] in-flight batching: {len(ragged)} requests "
               f"(prompt lens {lens}) in {res.seconds:.1f}s — "
-              f"{res.steps} decode steps, {res.prefills} prefills, "
-              f"peak queue {res.max_queue_depth}, "
-              f"{res.tokens_per_second:.1f} tok/s")
+              f"{res.steps} unified steps ({res.mixed_steps} mixed), "
+              f"{res.prefill_chunks} prefill chunks "
+              f"({res.prefill_tokens} tokens, budget "
+              f"{res.chunk_tokens}/step), peak queue "
+              f"{res.max_queue_depth}, {res.tokens_per_second:.1f} tok/s")
+        print(f"[serve] latency: TTFT p50 {res.ttft_p50 * 1e3:.0f}ms / "
+              f"p95 {res.ttft_p95 * 1e3:.0f}ms, per-output-token p50 "
+              f"{res.tpot_p50 * 1e3:.1f}ms / p95 {res.tpot_p95 * 1e3:.1f}ms")
         print("[serve] sample:", res.outputs[0][:16].tolist())
         return np.stack(res.outputs)
 

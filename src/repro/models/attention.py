@@ -74,7 +74,15 @@ def attention(params, x, cfg, *, window=None, positions=None,
     """Causal self-attention for training / prefill. x: (B, S, D).
 
     return_kv=True additionally returns the (pre-expansion, post-RoPE)
-    (k, v) pair at Hk heads — prefill uses it to populate the decode cache.
+    (k, v) pair at Hk heads — prefill uses it to populate the decode
+    cache. In that mode, when `cfg.kv_cache_bits == 8`, attention runs
+    over the *fake-quantized* K/V (dequantize(quantize(k))) — exactly the
+    values decode will later read back from the int8 cache — so prefill
+    logits agree bit-for-bit with chunked prefill through the paged pool
+    (`span_attention_paged`), which stores each chunk quantized before
+    the next chunk attends to it. The returned (k, v) stay full
+    precision; `build_cache_from_kv` quantizes them once, yielding the
+    identical codes and scales.
     """
     b, s, _ = x.shape
     h, hk, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
@@ -87,6 +95,9 @@ def attention(params, x, cfg, *, window=None, positions=None,
     if cfg.pos_emb == "rope":
         q = apply_rope(q, positions, cfg.rope_theta, cfg.rotary_pct)
         k = apply_rope(k, positions, cfg.rope_theta, cfg.rotary_pct)
+    kv = (k, v)
+    if return_kv and getattr(cfg, "kv_cache_bits", 16) == 8:
+        k, v = _fake_quant_kv(k), _fake_quant_kv(v)
     qg = _group_q(q, hk)
 
     impl = cfg.attn_impl
@@ -99,7 +110,7 @@ def attention(params, x, cfg, *, window=None, positions=None,
     else:
         o = _chunked_causal(qg, k, v, positions, window, cfg)
     y = apply_linear(o.reshape(b, s, h * hd), params["wo"])
-    return (y, (k, v)) if return_kv else y
+    return (y, kv) if return_kv else y
 
 
 def _chunked_causal(q, k, v, positions, window, cfg):
@@ -204,46 +215,66 @@ def _quant_kv(x):
     return q, scale.astype(jnp.float32)
 
 
-def decode_attention_paged(params, x1, pool, block_table, lengths, cfg):
-    """One-token decode against a blocked (paged) KV pool — the
-    continuous-batching path, where every row sits at its own position.
+def _fake_quant_kv(x):
+    """quantize->dequantize round trip: the values an int8 KV cache will
+    hand back at decode time, in x's dtype."""
+    q, scale = _quant_kv(x)
+    return (q.astype(jnp.float32) * scale).astype(x.dtype)
 
-    x1: (B, 1, D) hidden; pool: ONE layer's blocks {"k","v"[,"ks","vs"]}
-    with leaves (NB, bs, Hk, *); block_table: (B, MB) int32 physical block
-    ids in logical order, padded with the reserved trash block 0;
-    lengths: (B,) int32 tokens already cached per row == the incoming
-    token's absolute position (per-row RoPE / mask, unlike the scalar
-    `pos` of `decode_attention`).
 
-    The new K/V lands at (block_table[b, len//bs], len % bs); attention
-    then runs over the gathered logical view block_table -> (B, MB*bs,
-    Hk, Dh) under a per-row validity mask (slot index <= len). Inactive
-    rows (all-trash tables, length 0) write into block 0 and read garbage
-    the caller discards — no control flow inside the jitted step.
+def span_attention_paged(params, x, pool, block_table, ctx_lens, q_lens,
+                         cfg):
+    """Variable-width query spans against a blocked (paged) KV pool — the
+    serving primitive behind `transformer.unified_step`, generalizing
+    one-token-per-row paged decode to each row advancing by a span of
+    `q_lens[r]` new tokens: a prefill chunk, a single decode token
+    (q_lens == 1), or nothing (q_lens == 0, idle/pad row). The unified
+    step packs its token budget flat — one buffer row per TOKEN, a
+    span's rows repeating their sequence's block table with increasing
+    positions and width 1 — so the same math serves both layouts.
+
+    x: (B, W, D) hidden, row r valid in [:q_lens[r]]; pool: ONE layer's
+    blocks {"k","v"[,"ks","vs"]} with leaves (NB, bs, Hk, *);
+    block_table: (B, MB) int32 physical block ids in logical order,
+    padded with the reserved trash block 0; ctx_lens: (B,) int32 tokens
+    already in the pool per row == the absolute position of x[:, 0]
+    (per-row RoPE / mask).
+
+    Span token (r, i) sits at position p = ctx_lens[r] + i. Its K/V is
+    scattered to (block_table[r, p // bs], p % bs) *first*, then
+    attention runs over the gathered logical view block_table ->
+    (B, MB*bs, Hk, Dh) under the causal mask `slot <= p` — so queries see
+    the pool prefix AND the earlier tokens of their own span, however
+    the span is laid out (in-step causality falls out of
+    write-then-gather; different sequences can never see each other —
+    they gather through disjoint block tables). Pad slots and idle rows
+    write into trash block 0 and read garbage the caller discards — no
+    control flow inside the jitted step, static in (B, W, MB).
     """
-    b = x1.shape[0]
+    from repro.runtime.kvblocks import span_slots
+
+    b, w, _ = x.shape
     h, hk, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     bs = pool["k"].shape[1]
     mb = block_table.shape[1]
 
-    q = apply_linear(x1, params["wq"]).reshape(b, 1, h, hd)
-    k = apply_linear(x1, params["wk"]).reshape(b, 1, hk, hd)
-    v = apply_linear(x1, params["wv"]).reshape(b, 1, hk, hd)
+    q = apply_linear(x, params["wq"]).reshape(b, w, h, hd)
+    k = apply_linear(x, params["wk"]).reshape(b, w, hk, hd)
+    v = apply_linear(x, params["wv"]).reshape(b, w, hk, hd)
+    pos = ctx_lens[:, None] + jnp.arange(w)[None, :]            # (B, W)
     if cfg.pos_emb == "rope":
-        pos = lengths[:, None]                       # (B, 1) per-row
         q = apply_rope(q, pos, cfg.rope_theta, cfg.rotary_pct)
         k = apply_rope(k, pos, cfg.rope_theta, cfg.rotary_pct)
 
-    blk = block_table[jnp.arange(b), lengths // bs]  # (B,) physical block
-    off = lengths % bs                               # (B,) slot in block
+    blk, off = span_slots(block_table, ctx_lens, q_lens, w, bs)  # (B, W)
     if "ks" in pool:
         kq, ks1 = _quant_kv(k)
         vq, vs1 = _quant_kv(v)
         pool = {
-            "k": pool["k"].at[blk, off].set(kq[:, 0]),
-            "v": pool["v"].at[blk, off].set(vq[:, 0]),
-            "ks": pool["ks"].at[blk, off].set(ks1[:, 0]),
-            "vs": pool["vs"].at[blk, off].set(vs1[:, 0]),
+            "k": pool["k"].at[blk, off].set(kq),
+            "v": pool["v"].at[blk, off].set(vq),
+            "ks": pool["ks"].at[blk, off].set(ks1),
+            "vs": pool["vs"].at[blk, off].set(vs1),
         }
         ck = (pool["k"][block_table].reshape(b, mb * bs, hk, hd)
               .astype(q.dtype)
@@ -255,19 +286,20 @@ def decode_attention_paged(params, x1, pool, block_table, lengths, cfg):
               .astype(q.dtype))
     else:
         pool = {
-            "k": pool["k"].at[blk, off].set(k[:, 0].astype(pool["k"].dtype)),
-            "v": pool["v"].at[blk, off].set(v[:, 0].astype(pool["v"].dtype)),
+            "k": pool["k"].at[blk, off].set(k.astype(pool["k"].dtype)),
+            "v": pool["v"].at[blk, off].set(v.astype(pool["v"].dtype)),
         }
         ck = pool["k"][block_table].reshape(b, mb * bs, hk, hd).astype(q.dtype)
         cv = pool["v"][block_table].reshape(b, mb * bs, hk, hd).astype(q.dtype)
 
-    valid = jnp.arange(mb * bs)[None, :] <= lengths[:, None]   # (B, S)
-    qg = _group_q(q, hk)                                       # (B,1,Hk,G,Dh)
-    s = _scores(qg, ck, cfg.logit_softcap)                     # (B,Hk,G,1,S)
-    s = jnp.where(valid[:, None, None, None, :], s, NEG)
+    # (B, W, S): query (r, i) sees slots at positions <= ctx_lens[r] + i
+    valid = jnp.arange(mb * bs)[None, None, :] <= pos[:, :, None]
+    qg = _group_q(q, hk)                                  # (B,W,Hk,G,Dh)
+    s = _scores(qg, ck, cfg.logit_softcap)                # (B,Hk,G,W,S)
+    s = jnp.where(valid[:, None, None, :, :], s, NEG)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(cv.dtype), cv)
-    y = apply_linear(o.reshape(b, 1, h * hd), params["wo"])
+    y = apply_linear(o.reshape(b, w, h * hd), params["wo"])
     return y, pool
 
 

@@ -285,11 +285,17 @@ def init_cache(cfg, batch, max_len, dtype=None):
 
 
 def prefill(params, inputs, cfg, *, max_len=None, cache_dtype=None,
-            ssm_engine="sequential"):
+            ssm_engine="sequential", last_pos=None):
     """Process a prompt; return (last-position logits (B,1,V), decode cache).
 
     This is the `prefill_32k` serving entry point: one forward pass that
     also lays out every layer's KV / SSM state for subsequent decode.
+
+    last_pos: optional *traced* scalar — the index whose logits to return
+    (default: the final column). Length-bucketed prompts are right-padded
+    to a power of two before jit, so the true last token is mid-sequence;
+    passing its index as a traced value keeps the bucket's compilation
+    shared across every real length inside it.
     """
     h = embed(params, inputs, cfg)
     L = cfg.num_layers
@@ -361,31 +367,47 @@ def prefill(params, inputs, cfg, *, max_len=None, cache_dtype=None,
         raise ValueError(cfg.layout)
 
     h = apply_norm(h, params["final_norm"], cfg.norm, cfg.norm_eps)
-    logits = logits_for(params, h[:, -1:], cfg)
+    if last_pos is None:
+        h1 = h[:, -1:]
+    else:
+        h1 = jax.lax.dynamic_slice_in_dim(h, last_pos, 1, axis=1)
+    logits = logits_for(params, h1, cfg)
     return logits, cache
 
 
-def decode_step_paged(params, pool, block_tables, lengths, inputs, cfg):
-    """One continuous-batching decode step over a blocked KV pool.
+def unified_step(params, pool, block_tables, ctx_lens, q_lens, inputs, cfg):
+    """ONE token-budget serving step over a blocked KV pool: every active
+    row advances by a span of `q_lens[r]` tokens — a prefill chunk, a
+    single decode token, or nothing — in a single forward pass.
 
-    inputs: (B, 1) tokens; block_tables: (B, MB) int32; lengths: (B,)
-    int32 per-row positions (see attention.decode_attention_paged).
-    pool: runtime.kvblocks.init_paged_cache leaves (L, NB, bs, Hk, *),
-    scanned over layers exactly like the monolithic cache. Returns
-    (logits (B, 1, V) f32, updated pool). Inactive rows compute garbage
-    the caller masks; shapes are static in (B, MB) so one jit covers the
-    whole serve loop regardless of admissions/evictions.
+    inputs: (B, W) tokens, row r valid in [:q_lens[r]]; block_tables:
+    (B, MB) int32; ctx_lens: (B,) int32 tokens already in the pool per
+    row (== the position of inputs[:, 0]); pool:
+    runtime.kvblocks.init_paged_cache leaves (L, NB, bs, Hk, *), scanned
+    over layers exactly like the monolithic cache. Returns
+    (logits (B, 1, V) f32 at each row's LAST valid span position,
+    updated pool) — exactly the logits that sample the row's next token
+    when its span completes the prompt or decodes. Idle rows compute
+    garbage the caller discards; shapes are static in (B, W, MB) so the
+    one jitted step covers the whole serve loop regardless of
+    admissions, evictions, or the prefill/decode mix (W is bucketed to a
+    power of two by the driver, so at most O(log budget) shapes exist,
+    and W == 1 — the decode-only steady state — is exactly the classic
+    one-token paged decode). The row-major span layout keeps the KV
+    gather per ROW (each row reads its
+    block-table view once however wide its span is), which is what makes
+    chunked prefill affordable at real model sizes.
     """
     from repro.runtime.kvblocks import check_paged_support
 
     check_paged_support(cfg)
-    h = embed(params, inputs, cfg, pos0=lengths)
+    h = embed(params, inputs, cfg, pos0=ctx_lens)
 
     def body(h, xs):
         lp, pl = xs
         hn = apply_norm(h, lp["ln1"], cfg.norm, cfg.norm_eps)
-        a, pl = attn.decode_attention_paged(lp["attn"], hn, pl,
-                                            block_tables, lengths, cfg)
+        a, pl = attn.span_attention_paged(lp["attn"], hn, pl, block_tables,
+                                          ctx_lens, q_lens, cfg)
         h = h + a
         hn = apply_norm(h, lp["ln2"], cfg.norm, cfg.norm_eps)
         if "moe" in lp:
@@ -397,7 +419,10 @@ def decode_step_paged(params, pool, block_tables, lengths, inputs, cfg):
 
     h, pool = jax.lax.scan(body, h, (params["layers"], pool))
     h = apply_norm(h, params["final_norm"], cfg.norm, cfg.norm_eps)
-    return logits_for(params, h, cfg), pool
+    last = jnp.maximum(q_lens - 1, 0)[:, None, None]      # (B, 1, 1)
+    h1 = jnp.take_along_axis(h, jnp.broadcast_to(
+        last, (h.shape[0], 1, h.shape[2])), axis=1)       # (B, 1, D)
+    return logits_for(params, h1, cfg), pool
 
 
 def decode_step(params, cache, inputs, pos, cfg):

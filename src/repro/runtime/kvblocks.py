@@ -2,23 +2,26 @@
 
 The monolithic decode cache sizes every row at `max_len`, so a batch pays
 for its longest request and a finished row's memory is stranded until the
-whole batch retires. This module replaces it, for the shared decode batch,
-with the paged layout production servers use (vLLM / TensorRT-LLM style):
+whole batch retires. This module replaces it, for the shared serving
+batch, with the paged layout production servers use (vLLM /
+TensorRT-LLM style):
 
   * a physical pool of fixed-size blocks per layer —
     `(L, num_blocks, block_size, Hk, Dh)` for K and V, plus per-(token,
     head) scale planes when `cfg.kv_cache_bits == 8`;
   * a host-side `BlockPool` free-list allocator. Block 0 is reserved as
     the *trash block*: inactive batch rows write there and nothing ever
-    reads it back, so the jitted decode step needs no control flow;
+    reads it back, so the jitted step needs no control flow;
   * per-sequence block tables mapping logical position `p` to physical
     slot `(table[p // block_size], p % block_size)`. Tables are dense,
     append-only, and padded with the trash block.
 
-`pack_prefill` scatters a single sequence's rectangular prefill cache into
-its allocated blocks; `models.attention.decode_attention_paged` does the
-per-step write + gather. Admission/eviction policy lives in
-`runtime.scheduler`; this module is pure layout + accounting.
+Tokens enter the pool a *span* at a time: `span_slots` maps a batch of
+per-row token spans (a chunk of prompt during chunked prefill, or a
+single decode token) to physical (block, offset) scatter targets;
+`models.attention.span_attention_paged` does the span write + gather.
+Admission/eviction policy lives in `runtime.scheduler`; this module is
+pure layout + accounting.
 
 Supported: dense / MoE layouts with global causal attention. Sliding
 windows, local/global alternation, and SSM state are not paged yet (their
@@ -26,7 +29,6 @@ decode state is O(window) / O(1) per row, so paging buys much less).
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 
@@ -43,13 +45,11 @@ def check_paged_support(cfg) -> None:
 
 
 def blocks_needed(prompt_len: int, max_tokens: int, block_size: int) -> int:
-    """Blocks a request occupies at peak: prompt positions plus every
-    generated token except the last (which is returned, never cached).
-    A max_tokens == 1 request finishes at prefill — its KV is never
-    packed, so it needs no blocks at all."""
-    if max_tokens <= 1:
-        return 0
-    return -(-(prompt_len + max_tokens - 1) // block_size)
+    """Blocks a request occupies at peak. Chunked prefill writes every
+    prompt position into the pool, and decode caches every generated
+    token except the last (which is returned, never attended), so the
+    footprint is prompt_len + max_tokens - 1 positions."""
+    return -(-(prompt_len + max(max_tokens, 1) - 1) // block_size)
 
 
 class BlockPool:
@@ -118,20 +118,24 @@ def init_paged_cache(cfg, num_blocks: int, block_size: int, dtype=None):
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
 
-def pack_prefill(pool, prefill_kv, block_ids):
-    """Scatter one sequence's prefill cache into its allocated blocks.
+def span_slots(block_table, ctx_lens, q_lens, width, block_size):
+    """Physical scatter targets for a batch of per-row token spans.
 
-    pool: init_paged_cache leaves (L, NB, bs, Hk, *).
-    prefill_kv: the `cache["kv"]` pytree from transformer.prefill run at
-        batch 1 with max_len == len(block_ids) * block_size, i.e. leaves
-        (L, 1, nb * bs, Hk, *).
-    block_ids: (nb,) int32 physical destinations, logical order.
+    Row r's span this step covers logical positions
+    `ctx_lens[r] .. ctx_lens[r] + q_lens[r] - 1` (a prefill chunk, or a
+    single decode token at q_lens == 1). Returns (blk, off), each
+    (B, width) int32: span slot (r, i) writes physical block
+    `blk[r, i]` at in-block offset `off[r, i]`. Slots past a row's
+    `q_lens` — and whole rows with q_lens == 0 — are routed to the
+    reserved trash block 0, so the caller can scatter the full (B, width)
+    rectangle with no control flow. jit-safe (pure index math, static
+    shapes).
     """
-    nb = block_ids.shape[0]
-
-    def leaf(pl, cl):
-        L, bs = pl.shape[0], pl.shape[2]
-        resh = cl.reshape(L, nb, bs, *cl.shape[3:]).astype(pl.dtype)
-        return pl.at[:, block_ids].set(resh)
-
-    return jax.tree_util.tree_map(leaf, pool, prefill_kv)
+    pos = ctx_lens[:, None] + jnp.arange(width)[None, :]        # (B, W)
+    valid = jnp.arange(width)[None, :] < q_lens[:, None]        # (B, W)
+    mb = block_table.shape[1]
+    bidx = jnp.minimum(pos // block_size, mb - 1)               # clamp pads
+    blk = jnp.where(valid,
+                    jnp.take_along_axis(block_table, bidx, axis=1), 0)
+    off = jnp.where(valid, pos % block_size, 0)
+    return blk.astype(jnp.int32), off.astype(jnp.int32)

@@ -2,27 +2,33 @@
 
 Production serving never sees rectangular batches: requests arrive at
 arbitrary times with arbitrary prompt/output lengths. The standard answer
-(TensorRT-LLM "inflight batching", vLLM) is a shared decode batch that
-gains a row the moment a request is admitted and loses it the moment the
-request finishes — the GPU never idles waiting for the longest row. This
-module is the policy half of that loop:
+(TensorRT-LLM "inflight batching" with chunked prefill, vLLM) is a shared
+batch that gains a row the moment a request is admitted and loses it the
+moment the request finishes — and whose every step mixes prefill *chunks*
+of newly admitted prompts with in-flight decode tokens under one token
+budget, so admissions never stall the batch. This module is the policy
+half of that loop:
 
   * `Request`  — what a caller submits: prompt tokens + max_tokens (per
     request; a mixed workload is the whole point);
-  * `Sequence` — a request bound to a decode row and a set of KV blocks;
-  * `Scheduler` — FCFS waiting queue + admission + eviction. A request is
-    admitted when a batch row is free AND the `BlockPool` can reserve its
-    *worst-case* block count up front (prompt + every generated token), so
-    a running sequence can never be starved of cache mid-decode and
-    overflow queues instead of crashing.
+  * `Sequence` — a request bound to a batch row and a set of KV blocks,
+    tracking how much of its prompt has been chunk-prefilled;
+  * `Scheduler` — FCFS waiting queue + admission + eviction, plus
+    `schedule(token_budget)`: the per-step work plan (`ScheduleOutput`)
+    naming which rows get a prefill chunk and which a decode token. A
+    request is admitted when a batch row is free AND the `BlockPool` can
+    reserve its *worst-case* block count up front (prompt + every
+    generated token), so a running sequence can never be starved of cache
+    mid-decode and overflow queues instead of crashing.
 
 Admission is strictly FCFS: if the head request does not fit, later ones
-do not jump it (no starvation of long prompts). The compute half — prefill
-into blocks, the masked fixed-capacity decode step — lives in
-`api.InferenceEngine.serve`, which drives this object step by step;
-`runtime.kvblocks` owns the cache layout. The scheduler itself touches no
-jax arrays, which is what makes it unit-testable under random admit/evict
-sequences (see tests/test_scheduler.py).
+do not jump it (no starvation of long prompts); within a step, decode
+rows claim budget first (they always advance), then prefilling rows
+receive chunks oldest-first. The compute half — the unified token-budget
+step — lives in `api.InferenceEngine.serve`, which drives this object
+step by step; `runtime.kvblocks` owns the cache layout. The scheduler
+itself touches no jax arrays, which is what makes it unit-testable under
+random admit/evict sequences (see tests/test_scheduler.py).
 """
 from __future__ import annotations
 
@@ -53,12 +59,20 @@ class Request:
 
 @dataclasses.dataclass
 class Sequence:
-    """A live request: bound to decode row `row`, owning `block_ids`."""
+    """A live request: bound to batch row `row`, owning `block_ids`.
+    `prefilled` counts prompt tokens already written to the KV pool by
+    chunked prefill; the row decodes once the whole prompt is in.
+    `n_emitted` counts output tokens the engine has *dispatched* for this
+    row — a count, not values: with per-request max_tokens and no early
+    stopping, scheduling never depends on what the tokens turn out to
+    be, which is what lets the engine pipeline steps without waiting for
+    device results."""
 
     req: Request
     row: int
     block_ids: list[int]
-    out: list[int] = dataclasses.field(default_factory=list)
+    prefilled: int = 0
+    n_emitted: int = 0
 
     @property
     def prompt_len(self) -> int:
@@ -69,12 +83,42 @@ class Sequence:
         return int(self.req.max_tokens)
 
     @property
+    def prefill_done(self) -> bool:
+        return self.prefilled >= self.prompt_len
+
+    @property
     def done(self) -> bool:
-        return len(self.out) >= self.max_tokens
+        return self.n_emitted >= self.max_tokens
+
+
+@dataclasses.dataclass
+class ScheduleOutput:
+    """One step's work plan under the token budget: which rows run a
+    prefill chunk (and how wide), which rows decode one token, and what
+    was newly admitted this step (rows whose block tables the engine
+    must install before the forward pass)."""
+
+    admitted: list[Sequence]
+    prefill: dict[int, int]       # row -> prompt-chunk width this step
+    decode: list[int]             # rows advancing by one decode token
+
+    @property
+    def total_tokens(self) -> int:
+        return sum(self.prefill.values()) + len(self.decode)
+
+    @property
+    def max_span(self) -> int:
+        """Widest per-row span this step (the forward pass's W)."""
+        return max(max(self.prefill.values(), default=0),
+                   1 if self.decode else 0)
+
+    @property
+    def is_mixed(self) -> bool:
+        return bool(self.prefill) and bool(self.decode)
 
 
 class Scheduler:
-    """FCFS admission over `max_batch` decode rows and a `BlockPool`."""
+    """FCFS admission over `max_batch` batch rows and a `BlockPool`."""
 
     def __init__(self, pool: BlockPool, max_batch: int):
         if max_batch < 1:
@@ -128,6 +172,41 @@ class Scheduler:
         seq = Sequence(req=req, row=row, block_ids=self.pool.alloc(need))
         self.rows[row] = seq
         return seq
+
+    # ---------------------------------------------------------- schedule --
+    def schedule(self, token_budget: int) -> ScheduleOutput:
+        """Plan one unified step: admit FCFS, then split `token_budget`
+        tokens across the active rows. Decode rows (prompt fully in the
+        pool, request unfinished) always advance — one token each, even
+        when prefill chunks run in the same step — then the remaining
+        budget is dealt to prefilling rows as prompt chunks of at most
+        ceil(budget / #prefilling) tokens each, oldest-first. The
+        balanced cap matters because the forward pass is a rectangular
+        (rows, max_span) batch: one row hogging the budget widens every
+        other row's padding, while even chunks keep the span — and the
+        step's compute — near the useful-token count. Budget a
+        short-remaining row leaves unused simply idles this step; the
+        next step re-budgets from scratch."""
+        if token_budget < 1:
+            raise ValueError(f"token_budget must be >= 1, got {token_budget}")
+        admitted = []
+        while (seq := self.try_admit()) is not None:
+            admitted.append(seq)
+        live = [s for s in self.rows if s is not None]
+        decode = [s.row for s in live if s.prefill_done and not s.done]
+        budget = max(0, token_budget - len(decode))
+        prefill: dict[int, int] = {}
+        filling = sorted((s for s in live if not s.prefill_done),
+                         key=lambda s: (s.req.rid is None, s.req.rid, s.row))
+        if filling and budget > 0:
+            cap = -(-budget // len(filling))
+            for seq in filling:
+                chunk = min(seq.prompt_len - seq.prefilled, cap, budget)
+                if chunk > 0:
+                    prefill[seq.row] = chunk
+                    budget -= chunk
+        return ScheduleOutput(admitted=admitted, prefill=prefill,
+                              decode=decode)
 
     # ---------------------------------------------------------- eviction --
     def finish(self, seq: Sequence) -> None:

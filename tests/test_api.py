@@ -150,6 +150,26 @@ def test_engine_sampling_modes(smoke):
     np.testing.assert_array_equal(out.tokens, out2.tokens)
 
 
+def test_engine_prompt_length_bucketing(smoke):
+    """Prompts are right-padded to power-of-two buckets before prefill:
+    tokens stay identical to the unbucketed path, and N distinct prompt
+    lengths compile O(log N) prefill variants instead of N."""
+    cfg, params = smoke
+    eng = InferenceEngine.build(cfg, None, params=params)
+    ref = InferenceEngine(cfg, eng.params, bucket_prompts=False)
+    assert eng.bucket_prompts and not ref.bucket_prompts
+    rng = np.random.default_rng(11)
+    lens = [5, 6, 7, 9, 11, 13, 15]                 # buckets: 8 and 16
+    for n in lens:
+        prompts = rng.integers(0, cfg.vocab_size, size=(2, n))
+        a = eng.generate(prompts, SamplingParams(max_tokens=4))
+        b = ref.generate(prompts, SamplingParams(max_tokens=4))
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+    if hasattr(eng._prefill, "_cache_size"):        # jax-version dependent
+        assert eng._prefill._cache_size() == 2      # one per bucket
+        assert ref._prefill._cache_size() == len(lens)
+
+
 def test_engine_accepts_ragged_requests(smoke):
     """Ragged prompt lists route through the continuous-batching scheduler
     and come back per-request, greedy-identical to solo generation."""

@@ -1,0 +1,96 @@
+"""Property-based `BlockPool` invariants (hypothesis; falls back to the
+seeded-random shim in hypothesis_fallback when it is not installed).
+
+Under ANY sequence of alloc/free operations the free-list allocator must
+uphold:
+  * the reserved trash block 0 is never handed out;
+  * no block is ever held twice (no double-alloc), and freeing a block
+    not currently held is a hard error (no double-free);
+  * `available` always equals capacity minus blocks held — the free list
+    never drifts from the allocation set.
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from hypothesis_fallback import given, settings, strategies as st
+
+from repro.runtime.kvblocks import BlockPool, span_slots
+
+settings.register_profile("ci", max_examples=40, deadline=None)
+settings.load_profile("ci")
+
+
+@st.composite
+def pool_and_ops(draw):
+    """A pool geometry plus a random alloc/free script. Ops are encoded
+    so they stay meaningful whatever the interleaving: ('alloc', k) asks
+    for k blocks (possibly more than available — callers must see a
+    clean refusal), ('free', i) releases the i-th live group (mod the
+    number of groups alive at that point)."""
+    num_blocks = draw(st.integers(2, 24))
+    block_size = draw(st.integers(1, 8))
+    ops = []
+    for _ in range(draw(st.integers(1, 60))):
+        k = draw(st.integers(-8, 8))
+        ops.append(("free", -k - 1) if k < 0 else ("alloc", k + 1))
+    return num_blocks, block_size, ops
+
+
+@given(pool_and_ops())
+def test_block_pool_invariants_random_ops(case):
+    num_blocks, block_size, ops = case
+    pool = BlockPool(num_blocks, block_size)
+    live: list[list[int]] = []
+    for op, arg in ops:
+        if op == "alloc":
+            if pool.can_alloc(arg):
+                ids = pool.alloc(arg)
+                assert len(ids) == arg
+                assert 0 not in ids, "reserved trash block handed out"
+                live.append(ids)
+            else:
+                with pytest.raises(RuntimeError, match="exhausted"):
+                    pool.alloc(arg)
+        elif live:
+            pool.free(live.pop(arg % len(live)))
+        held = [b for ids in live for b in ids]
+        assert len(held) == len(set(held)), "block held twice"
+        assert all(0 < b < num_blocks for b in held)
+        assert pool.available == pool.capacity - len(held), \
+            "free list inconsistent with allocations"
+        assert pool.can_alloc(pool.available)
+        assert not pool.can_alloc(pool.available + 1)
+    for ids in live:
+        pool.free(ids)
+    assert pool.available == pool.capacity
+    # every block freed exactly once: a second free must be rejected
+    if pool.capacity >= 1:
+        ids = pool.alloc(1)
+        pool.free(ids)
+        with pytest.raises(RuntimeError, match="double free"):
+            pool.free(ids)
+
+
+@given(st.integers(1, 8), st.integers(0, 20), st.integers(0, 12))
+def test_span_slots_route_every_valid_token_once(bsz, ctx, qlen):
+    """span_slots maps each valid span token to the unique physical slot
+    its logical position owns; pad slots all land in trash block 0."""
+    width = max(qlen, 1)
+    mb = (ctx + width + bsz - 1) // bsz + 1
+    table = np.arange(1, mb + 1, dtype=np.int32)[None, :]   # blocks 1..mb
+    blk, off = span_slots(table, np.asarray([ctx], np.int32),
+                          np.asarray([qlen], np.int32), width, bsz)
+    blk, off = np.asarray(blk)[0], np.asarray(off)[0]
+    for i in range(width):
+        pos = ctx + i
+        if i < qlen:
+            assert blk[i] == table[0, pos // bsz]
+            assert off[i] == pos % bsz
+        else:
+            assert blk[i] == 0 and off[i] == 0
+    # valid slots are distinct (no token overwrites another)
+    valid = [(int(blk[i]), int(off[i])) for i in range(qlen)]
+    assert len(valid) == len(set(valid))

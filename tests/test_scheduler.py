@@ -1,8 +1,11 @@
-"""Continuous-batching scheduler + blocked KV-cache tests.
+"""In-flight batching scheduler + blocked KV-cache tests.
 
 The load-bearing claims, per docs/serving.md:
-  * ragged arrivals through the shared masked decode batch are greedy
+  * ragged arrivals through the unified token-budget step — prompts
+    chunk-prefilled across steps while older rows decode — are greedy
     token-identical to running each prompt alone (incl. int8 KV blocks);
+  * serve never runs a solo prefill: every forward pass is the one
+    jitted step, and decode rows advance on every step a chunk runs;
   * the block pool never leaks under random admit/evict sequences;
   * overflowing the row/block capacity queues requests instead of
     crashing, and everything still completes correctly.
@@ -25,7 +28,10 @@ from repro.runtime.scheduler import Scheduler
 def engine():
     cfg = get_config("opus-mt", smoke=True)
     params = init_params(jax.random.PRNGKey(0), cfg)
-    return InferenceEngine(cfg, params, max_batch=3, block_size=4)
+    # chunk_tokens=8 forces real chunked prefill: every prompt longer
+    # than the leftover budget enters the pool across multiple steps.
+    return InferenceEngine(cfg, params, max_batch=3, block_size=4,
+                           chunk_tokens=8)
 
 
 def _prompts(lens, vocab, seed=0):
@@ -61,13 +67,92 @@ def test_per_request_max_tokens_prefix_property(engine):
 
 def test_int8_kv_blocks_match_rectangular(engine):
     """Quantized (int8+scales) KV blocks reproduce the monolithic int8
-    cache path token for token."""
+    cache path token for token, including chunked prefill (prefill
+    attends fake-quantized K/V, exactly what the pool hands back)."""
     cfg8 = dataclasses.replace(engine.cfg, kv_cache_bits=8)
-    eng8 = InferenceEngine(cfg8, engine.params, max_batch=2, block_size=4)
+    eng8 = InferenceEngine(cfg8, engine.params, max_batch=2, block_size=4,
+                           chunk_tokens=6)
     prompts = _prompts([5, 10, 7], cfg8.vocab_size, seed=2)
     res = eng8.serve(prompts, SamplingParams(max_tokens=5))
+    assert res.prefill_chunks > len(prompts), "prompts were not chunked"
     for p, out in zip(prompts, res.outputs):
         np.testing.assert_array_equal(out, _solo(eng8, p, 5))
+
+
+def test_serve_has_no_solo_prefill_path(engine):
+    """Every forward pass in serve is the unified step: sabotaging the
+    rectangular prefill callable must not change serve at all."""
+    eng = InferenceEngine(engine.cfg, engine.params, max_batch=2,
+                          block_size=4, chunk_tokens=8)
+    prompts = _prompts([9, 4, 13, 6], engine.cfg.vocab_size, seed=4)
+    want = [_solo(engine, p, 5) for p in prompts]
+
+    def boom(*a, **k):
+        raise AssertionError("serve called the solo prefill path")
+
+    eng._prefill = boom
+    res = eng.serve(prompts, SamplingParams(max_tokens=5))
+    for w, out in zip(want, res.outputs):
+        np.testing.assert_array_equal(out, w)
+    assert res.prefill_tokens == sum(p.size for p in prompts)
+
+
+def test_decode_advances_while_chunks_run(engine):
+    """In-flight batching proper: a long prompt admitted mid-flight is
+    chunk-prefilled in the same steps that keep the resident row
+    decoding — no decode stall on admission."""
+    prompts = _prompts([4, 16, 12], engine.cfg.vocab_size, seed=5)
+    res = engine.serve(prompts, SamplingParams(max_tokens=8),
+                       max_batch=2, chunk_tokens=8)
+    assert res.mixed_steps > 0, "no step mixed prefill chunks with decode"
+    for p, out in zip(prompts, res.outputs):
+        np.testing.assert_array_equal(out, _solo(engine, p, 8))
+
+
+def test_schedule_output_decode_first_then_balanced_chunks():
+    """schedule(): decode rows always advance; the chunk budget is split
+    evenly over prefilling rows (narrow spans = little padding in the
+    rectangular step); budget a short prompt can't use idles."""
+    pool = BlockPool(num_blocks=64, block_size=2)
+    sched = Scheduler(pool, max_batch=3)
+    a = Request(tokens=np.arange(1, 11), max_tokens=4, rid=0)   # 10 tokens
+    b = Request(tokens=np.arange(1, 4), max_tokens=4, rid=1)    # 3 tokens
+    for r in (a, b):
+        sched.submit(r)
+    plan = sched.schedule(token_budget=8)
+    assert [s.req.rid for s in plan.admitted] == [0, 1]
+    assert not plan.decode
+    rows = {s.req.rid: s.row for s in plan.admitted}
+    # even split is 4+4, but rid 1 only has 3 tokens of prompt; the
+    # spare token idles rather than widening rid 0's span past the cap
+    assert plan.prefill == {rows[0]: 4, rows[1]: 3}
+    assert plan.max_span == 4 and plan.total_tokens == 7
+    sched.rows[rows[0]].prefilled = 10          # rid 0 prompt now cached
+    sched.rows[rows[1]].prefilled = 3           # rid 1 too, still no output
+    plan2 = sched.schedule(token_budget=8)
+    assert sorted(plan2.decode) == sorted([rows[0], rows[1]])
+    assert not plan2.prefill and not plan2.is_mixed
+    for s in list(sched.rows):
+        if s is not None:
+            sched.finish(s)
+
+
+def test_schedule_short_prompt_budget_idles_not_widens():
+    """Budget a short-remaining prompt leaves unused does NOT widen an
+    older row's chunk past the balanced cap — the span (and so the
+    step's padding) stays bounded by ceil(budget / #prefilling)."""
+    pool = BlockPool(num_blocks=64, block_size=2)
+    sched = Scheduler(pool, max_batch=3)
+    sched.submit(Request(tokens=np.arange(1, 21), max_tokens=2, rid=0))
+    sched.submit(Request(tokens=np.arange(1, 3), max_tokens=2, rid=1))
+    plan = sched.schedule(token_budget=12)
+    rows = {s.req.rid: s.row for s in plan.admitted}
+    # even cap is 6; rid 1 only has 2 prompt tokens, rid 0 stays at 6
+    assert plan.prefill == {rows[0]: 6, rows[1]: 2}
+    assert plan.max_span == 6
+    for s in list(sched.rows):
+        if s is not None:
+            sched.finish(s)
 
 
 # ----------------------------------------------------------- block pool --
@@ -106,7 +191,9 @@ def test_blocks_needed_excludes_final_token():
     # prompt 4 + gen 5 caches positions 0..7 -> 2 blocks of 4, not 3
     assert blocks_needed(4, 5, 4) == 2
     assert blocks_needed(4, 6, 4) == 3
-    assert blocks_needed(9, 1, 4) == 0  # gen-1 finishes at prefill: no KV
+    # chunked prefill writes every prompt position into the pool, so even
+    # a gen-1 request holds blocks for its prompt (not the final token)
+    assert blocks_needed(9, 1, 4) == 3
 
 
 # ------------------------------------------------------------- overflow --

@@ -1,9 +1,11 @@
 """Print before/after roofline comparisons for the §Perf hillclimbs,
-and diff kernel microbenchmark runs:
+and diff kernel / serving benchmark runs:
 
     python tools/perf_compare.py                         # roofline tables
     python tools/perf_compare.py --kernels BENCH_kernels.json
     python tools/perf_compare.py --kernels old.json new.json   # delta %
+    python tools/perf_compare.py --serving BENCH_serving.json
+    python tools/perf_compare.py --serving old.json new.json   # delta %
 """
 import argparse
 import glob
@@ -97,15 +99,76 @@ def kernels_table(base_path, new_path=None):
         print(f"| {name} | {b:.3f} | {n:.3f} | {100 * (n - b) / b:+.1f}% |")
 
 
+# (metric label, path into BENCH_serving.json, unit scale)
+SERVING_METRICS = [
+    ("static tok/s", ("static", "tokens_per_second"), 1.0),
+    ("continuous tok/s", ("continuous", "tokens_per_second"), 1.0),
+    ("speedup (cont/static)", ("speedup",), 1.0),
+    ("unified steps", ("continuous", "steps"), 1.0),
+    ("mixed steps (chunk+decode)", ("continuous", "mixed_steps"), 1.0),
+    ("prefill chunks", ("continuous", "prefill_chunks"), 1.0),
+    ("TTFT p50 (ms)", ("continuous", "ttft_p50_s"), 1e3),
+    ("TTFT p95 (ms)", ("continuous", "ttft_p95_s"), 1e3),
+    ("TPOT p50 (ms)", ("continuous", "tpot_p50_s"), 1e3),
+    ("TPOT p95 (ms)", ("continuous", "tpot_p95_s"), 1e3),
+]
+
+
+def _serving_metric(rec, path, scale):
+    v = rec
+    for k in path:
+        if not isinstance(v, dict) or k not in v:
+            return None
+        v = v[k]
+    return float(v) * scale
+
+
+def serving_table(base_path, new_path=None):
+    """Serving throughput/latency from fig13's BENCH_serving.json — one
+    file prints the run, two files print the before/after delta."""
+    base = json.load(open(base_path))
+    new = json.load(open(new_path)) if new_path else None
+    wl = base.get("workload", {})
+    print(f"serving workload: n={wl.get('n')} max_batch="
+          f"{wl.get('max_batch')} block_size={wl.get('block_size')} "
+          f"chunk_tokens={wl.get('chunk_tokens', '-')}")
+    if new is None:
+        print("| metric | value |")
+        print("|---|--:|")
+        for name, path, scale in SERVING_METRICS:
+            v = _serving_metric(base, path, scale)
+            print(f"| {name} | {'-' if v is None else f'{v:.2f}'} |")
+        return
+    print(f"| metric | {os.path.basename(base_path)} "
+          f"| {os.path.basename(new_path)} | delta |")
+    print("|---|--:|--:|--:|")
+    for name, path, scale in SERVING_METRICS:
+        b = _serving_metric(base, path, scale)
+        n = _serving_metric(new, path, scale)
+        if b is None or n is None or b == 0:
+            bs = "-" if b is None else f"{b:.2f}"
+            ns = "-" if n is None else f"{n:.2f}"
+            print(f"| {name} | {bs} | {ns} | - |")
+            continue
+        print(f"| {name} | {b:.2f} | {n:.2f} | {100 * (n - b) / b:+.1f}% |")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--kernels", nargs="+", metavar="BENCH_kernels.json",
+                    help="one file: print table; two files: before/after")
+    ap.add_argument("--serving", nargs="+", metavar="BENCH_serving.json",
                     help="one file: print table; two files: before/after")
     args = ap.parse_args()
     if args.kernels:
         if len(args.kernels) > 2:
             raise SystemExit("--kernels takes one or two files")
         kernels_table(*args.kernels)
+    if args.serving:
+        if len(args.serving) > 2:
+            raise SystemExit("--serving takes one or two files")
+        serving_table(*args.serving)
+    if args.kernels or args.serving:
         return
     roofline_report()
 
