@@ -219,7 +219,15 @@ class DecompCache:
         return jax.tree_util.tree_map_with_path(visit, params)
 
     def accounting(self, layer_ranks, method):
-        """(compression_ratio, nops_per_row) with TRUE per-layer ranks."""
+        """(compression_ratio, nops_per_row) with TRUE per-layer ranks.
+
+        Bits here are PAPER-style word-length accounting (wl bits per
+        code) — the figure-reproduction axis for the FPGA target, whose
+        native sub-8-bit datapath really stores W6/W3/W2 at wl bits.
+        TPU *residency* accounting (packed W4 = 4, everything else an
+        int8 carrier = 8) lives in core.compress.CompressionReport /
+        QuantizedTensor.storage_bits; the two ratios legitimately differ
+        for any wl not in {4, 8} and must not be mixed in one table."""
         bits = fp32 = nops = dense_nops = 0
         for (p, i), w in self.mats.items():
             k, n = int(w.shape[0]), int(w.shape[1])

@@ -1,6 +1,9 @@
 """Kernel microbenchmarks: Pallas kernels (interpret mode — CPU wall time
 is NOT TPU latency; reported for relative sanity only) plus the analytical
-TPU latencies the DSE actually uses (modeled compute/memory terms).
+TPU latencies the DSE actually uses (modeled compute/memory terms), plus —
+the number the packed-residency work is about — the modeled HBM bytes each
+launch moves (`hbm_mb`): W4 packed streams half the weight bytes of the
+W8/carrier path, so the bandwidth win is measured per case, not asserted.
 
 Besides the csv rows on stdout, writes a machine-readable summary to
 BENCH_kernels.json (path override: --out / $BENCH_KERNELS_OUT) that
@@ -15,8 +18,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from common import csv_row, timed
-from repro.core.itera import svd_decompose
-from repro.core.quant import quantize
+from repro.core.itera import LowRankQ, svd_decompose
+from repro.core.quant import pack_weights, quantize
 from repro.hw import tpu_model as tm
 from repro.kernels import ops
 
@@ -30,10 +33,15 @@ def main(argv=None):
 
     rows = []
 
-    def record(name, us_per_call, derived=""):
-        csv_row(name, us_per_call, derived)
-        rows.append({"name": name, "us_per_call": round(us_per_call, 3),
-                     "derived": derived})
+    def record(name, us_per_call, derived="", hbm_mb=None):
+        csv_row(name, us_per_call,
+                derived + (f";hbm_mb={hbm_mb:.3f}" if hbm_mb is not None
+                           else ""))
+        row = {"name": name, "us_per_call": round(us_per_call, 3),
+               "derived": derived}
+        if hbm_mb is not None:
+            row["hbm_mb"] = round(hbm_mb, 3)
+        rows.append(row)
 
     key = jax.random.PRNGKey(0)
     cases = [
@@ -44,32 +52,44 @@ def main(argv=None):
     for name, m, k, n, r in cases:
         x = jax.random.normal(key, (m, k), jnp.float32)
         w = jax.random.normal(key, (k, n), jnp.float32) / np.sqrt(k)
-        wq = quantize(w, 8, axis=0)
-        lr = svd_decompose(w, r, 8)
+        wq8 = quantize(w, 8, axis=0)
+        wq4 = pack_weights(quantize(w, 4, axis=0))
+        lr8 = svd_decompose(w, r, 8)
+        lr4f = svd_decompose(w, r, 4)
+        lr4 = LowRankQ(pack_weights(lr4f.w1), pack_weights(lr4f.w2))
 
-        dt, _ = timed(lambda: ops.qmm(x, wq, use_kernel=True,
-                                      interpret=True), iters=1)
-        record(f"kernel_qmm_interp_{name}", dt * 1e6,
-               f"M={m};K={k};N={n}")
-        dt, _ = timed(lambda: ops.lrmm(x, lr, use_kernel=True,
-                                       interpret=True), iters=1)
-        record(f"kernel_lrmm_interp_{name}", dt * 1e6,
-               f"M={m};K={k};N={n};R={r}")
-        dt, _ = timed(lambda: ops.qmm(x, wq, use_kernel=False), iters=3)
+        for wl, wq in ((8, wq8), (4, wq4)):
+            tag = f"W{wl}" + ("_packed" if wq.packed else "")
+            dt, _ = timed(lambda: ops.qmm(x, wq, use_kernel=True,
+                                          interpret=True), iters=1)
+            record(f"kernel_qmm_interp_{tag}_{name}", dt * 1e6,
+                   f"M={m};K={k};N={n}",
+                   hbm_mb=ops.qmm_hbm_bytes(m, wq) / 2**20)
+        for wl, lr in ((8, lr8), (4, lr4)):
+            tag = f"W{wl}" + ("_packed" if lr.w1.packed else "")
+            dt, _ = timed(lambda: ops.lrmm(x, lr, use_kernel=True,
+                                           interpret=True), iters=1)
+            record(f"kernel_lrmm_interp_{tag}_{name}", dt * 1e6,
+                   f"M={m};K={k};N={n};R={r}",
+                   hbm_mb=ops.lrmm_hbm_bytes(m, lr) / 2**20)
+        dt, _ = timed(lambda: ops.qmm(x, wq8, use_kernel=False), iters=3)
         record(f"kernel_qmm_ref_{name}", dt * 1e6, "jnp-reference")
 
-        # modeled TPU latencies (what the roofline/DSE uses)
-        bp = tm.best_point(m, k, n, None, weight_wl=8)
-        cp = tm.best_point(m, k, n, r, weight_wl=8,
-                           engines=("cascade",))
-        record(f"kernel_qmm_tpu_model_{name}", bp.latency_s * 1e6,
-               f"bound={'compute' if bp.compute_s >= bp.memory_s else 'memory'}")
-        record(f"kernel_lrmm_tpu_model_{name}", cp.latency_s * 1e6,
-               f"bound={'compute' if cp.compute_s >= cp.memory_s else 'memory'};"
-               f"speedup_vs_dense={bp.latency_s / cp.latency_s:.2f}x")
+        # modeled TPU latencies (what the roofline/DSE uses); weight_wl=4
+        # is now a *deliverable* bandwidth model — packed W4 really moves
+        # wl/8 bytes — not an aspiration
+        for wl in (8, 4):
+            bp = tm.best_point(m, k, n, None, weight_wl=wl)
+            cp = tm.best_point(m, k, n, r, weight_wl=wl,
+                               engines=("cascade",))
+            record(f"kernel_qmm_tpu_model_W{wl}_{name}", bp.latency_s * 1e6,
+                   f"bound={'compute' if bp.compute_s >= bp.memory_s else 'memory'}")
+            record(f"kernel_lrmm_tpu_model_W{wl}_{name}", cp.latency_s * 1e6,
+                   f"bound={'compute' if cp.compute_s >= cp.memory_s else 'memory'};"
+                   f"speedup_vs_dense={bp.latency_s / cp.latency_s:.2f}x")
 
     with open(args.out, "w") as f:
-        json.dump({"schema": "kernels_bench/v1",
+        json.dump({"schema": "kernels_bench/v2",
                    "backend": jax.default_backend(),
                    "jax_version": jax.__version__,
                    "rows": rows}, f, indent=2)

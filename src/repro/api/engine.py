@@ -160,6 +160,14 @@ def _pow2_bucket(n: int) -> int:
     return 1 << max(n - 1, 0).bit_length()
 
 
+def _tree_nbytes(tree) -> int:
+    """Bytes a pytree's arrays actually occupy (packed nibble arrays
+    report their true halved size) — the single definition of measured
+    weight residency."""
+    return sum(int(getattr(l, "nbytes", 0))
+               for l in jax.tree_util.tree_leaves(tree))
+
+
 def _serve_step(params, pool, block_tables, step_buf, prev, cfg):
     """One fused serving dispatch. step_buf: (B, W + 3) int32 — the
     host-built span tokens (B, W) with three metadata columns appended
@@ -234,6 +242,12 @@ class InferenceEngine:
         return (cfg.layout == "dense"
                 and not cfg.attn_window and not cfg.local_global_period)
 
+    def weight_hbm_bytes(self) -> int:
+        """Bytes the parameter arrays actually occupy in device memory —
+        the number the packed-W4 residency work shrinks. Measured
+        residency (`.nbytes` per leaf), not an accounting claim."""
+        return _tree_nbytes(self.params)
+
     # ------------------------------------------------------------- build --
     @classmethod
     def build(cls, arch, plan=None, *, mesh=None, params=None,
@@ -260,7 +274,8 @@ class InferenceEngine:
             plan = report.plan
             if verbose:
                 print(f"[engine] compressed in {time.time()-t0:.1f}s: "
-                      f"{report.summary()}")
+                      f"{report.summary()} "
+                      f"resident={_tree_nbytes(params)/2**20:.1f}MiB")
 
         if mesh is not None:
             from repro.launch import sharding as shd

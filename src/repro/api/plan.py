@@ -68,6 +68,11 @@ class CompressionPlan:
     act_wl: int = 8
     power_iters: int = 24
     label: str = ""
+    # HBM residency: pack W4 weights two-nibbles-per-byte so the serving
+    # path moves wl/8 bytes per weight (kernels unpack in VMEM; exact, so
+    # packed and carrier plans generate identical tokens). W6/W8 stay
+    # int8-carrier either way and are accounted at 8 bits.
+    pack: bool = True
     meta: dict = dataclasses.field(default_factory=dict)
 
     # ------------------------------------------------------------ access --
@@ -92,6 +97,7 @@ class CompressionPlan:
             "format_version": PLAN_FORMAT_VERSION,
             "label": self.label,
             "act_wl": self.act_wl,
+            "pack": self.pack,
             "power_iters": self.power_iters,
             "layers": [lp.to_dict() for lp in self.layers],
             "meta": self.meta,
@@ -106,6 +112,7 @@ class CompressionPlan:
         return cls(
             layers=tuple(LayerPlan.from_dict(l) for l in d.get("layers", ())),
             act_wl=int(d.get("act_wl", 8)),
+            pack=bool(d.get("pack", True)),
             power_iters=int(d.get("power_iters", 24)),
             label=str(d.get("label", "")),
             meta=dict(d.get("meta", {})),
@@ -203,7 +210,8 @@ class CompressionPlan:
         label = label or (f"{cfg.method}_W{cfg.weight_wl}"
                           if cfg.method != "none" else "none")
         return cls(layers=tuple(entries), act_wl=cfg.act_wl,
-                   power_iters=cfg.power_iters, label=label).validate()
+                   pack=cfg.pack, power_iters=cfg.power_iters,
+                   label=label).validate()
 
     @classmethod
     def from_design_point(cls, dp) -> "CompressionPlan":
@@ -234,8 +242,9 @@ class CompressionPlan:
 
         groups = Counter(f"{lp.method}_W{lp.wl}" for lp in self.layers)
         body = " ".join(f"{k}x{v}" for k, v in sorted(groups.items()))
+        resid = "packed" if self.pack else "carrier"
         return f"plan[{self.label or 'unlabeled'}] {len(self.layers)} " \
-               f"layers: {body} (A{self.act_wl})"
+               f"layers: {body} (A{self.act_wl}, {resid})"
 
 
 def merge_plans(base: CompressionPlan,

@@ -48,6 +48,29 @@ def _part(p):
     return f"x:{p}"
 
 
+def _quant_formats(tree) -> dict:
+    """{path: {wl, axis, packed, act_wl}} for every QuantizedTensor node.
+
+    The codes/scales land in arrays.npz like any leaf; this records the
+    *layout* aux alongside them so the manifest is self-describing and
+    restore can refuse a tree built with the wrong residency (a packed-W4
+    checkpoint restored into a carrier-layout tree, or vice versa, would
+    otherwise only surface as a confusing shape error)."""
+    fmts = {}
+
+    def visit(path, leaf):
+        if isinstance(leaf, QuantizedTensor):
+            fmts[_SEP.join(_part(p) for p in path)] = {
+                "wl": int(leaf.wl), "axis": int(leaf.axis),
+                "packed": bool(leaf.packed), "act_wl": int(leaf.act_wl),
+            }
+        return leaf
+
+    jax.tree_util.tree_map_with_path(
+        visit, tree, is_leaf=lambda x: isinstance(x, QuantizedTensor))
+    return fmts
+
+
 def save(ckpt_dir: str, step: int, tree, *, keep: int = 3,
          async_save: bool = False):
     """Write a checkpoint. async_save=True returns a join()able thread."""
@@ -68,6 +91,7 @@ def save(ckpt_dir: str, step: int, tree, *, keep: int = 3,
             "keys": sorted(arrays),
             "shapes": {k: list(v.shape) for k, v in arrays.items()},
             "dtypes": {k: str(v.dtype) for k, v in arrays.items()},
+            "quant_formats": _quant_formats(host_tree),
         }
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f)
@@ -134,6 +158,25 @@ def restore(ckpt_dir: str, like, step: int | None = None, *,
     if missing:
         raise KeyError(f"checkpoint at step {step} missing keys: "
                        f"{missing[:5]}{'...' if len(missing) > 5 else ''}")
+
+    # layout guard: quantized nodes must agree on the fields that shape
+    # the stored arrays (wl, axis, packed) — restoring a packed
+    # checkpoint into a carrier tree (or the reverse) is a plan mismatch,
+    # not an elastic-resume case. act_wl is runtime-only aux (it never
+    # changes resident bytes), so differing act_wl restores fine and
+    # `like`'s value wins.
+    saved_fmts = manifest.get("quant_formats")
+    if saved_fmts is not None:
+        want_fmts = _quant_formats(like)
+        layout = ("wl", "axis", "packed")
+        for key in sorted(set(saved_fmts) & set(want_fmts)):
+            got = {f: saved_fmts[key].get(f) for f in layout}
+            want = {f: want_fmts[key].get(f) for f in layout}
+            if got != want:
+                raise ValueError(
+                    f"{key}: checkpoint quant layout {got} != expected "
+                    f"{want} — rebuild `like` with the plan this "
+                    f"checkpoint was compressed under")
 
     shard_flat = (jax.tree_util.tree_leaves(shardings)
                   if shardings is not None else [None] * len(paths))

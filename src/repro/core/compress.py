@@ -7,6 +7,13 @@ Pareto benchmarks:
   * storage bits  -> compression ratio vs FP32 (ratio 4 == plain 8-bit)
   * NOps per batch row -> the paper's "number of operations" metric
 
+Storage accounting is RESIDENT-honest: per-layer bits are computed from
+the device arrays the compressed node actually holds (`storage_bits()`),
+so packed W4 counts 4 bits/weight because the bytes really are halved,
+while W6 — which stays in its int8 carrier (no byte-aligned packing) —
+counts a full 8, and skipped params count at their actual dtype itemsize.
+Nothing is priced at a word length that is not physically resident.
+
 Methods (paper §VIII-C):
   quant  — fixed-point WxAy quantization only                  (baseline)
   svd    — one-shot truncated SVD then quantization            (baseline)
@@ -32,8 +39,8 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
-from repro.core.itera import itera_decompose, svd_decompose
-from repro.core.quant import quantize
+from repro.core.itera import LowRankQ, itera_decompose, svd_decompose
+from repro.core.quant import QuantizedTensor, pack_weights, quantize
 
 Array = jax.Array
 
@@ -47,6 +54,7 @@ class CompressionConfig:
     method: str = "quant"              # none | quant | svd | itera
     weight_wl: int = 8
     act_wl: int = 8
+    pack: bool = True                  # pack W4 weights two-nibbles-per-byte
     rank_fraction: float = 0.5         # uniform rank = frac · min(K, N)
     ranks: dict | None = None          # per-layer override (path -> rank), e.g. from SRA
     min_rank: int = 1
@@ -80,26 +88,31 @@ class LayerReport:
     shape: tuple
     method: str
     rank: int | None
-    bits: int
+    bits: int                  # RESIDENT bits: what the device arrays occupy
     fp32_bits: int
     nops_per_row: int
     dense_nops_per_row: int
     wl: int = 8
+    packed: bool = False       # any factor stored packed-nibble in HBM
 
 
 @dataclasses.dataclass
 class CompressionReport:
     layers: list
-    skipped_params: int
-    plan: Any = None          # the executed api.plan.CompressionPlan
+    skipped_params: int        # element count of params left uncompressed
+    plan: Any = None           # the executed api.plan.CompressionPlan
+    skipped_bits: int = 0      # actual bits of those params (dtype itemsize)
 
     @property
     def total_bits(self) -> int:
-        return sum(l.bits for l in self.layers) + self.skipped_params * 32
+        return sum(l.bits for l in self.layers) + self.skipped_bits
 
     @property
     def total_fp32_bits(self) -> int:
-        return sum(l.fp32_bits for l in self.layers) + self.skipped_params * 32
+        # skipped params are untouched by compression, so they enter both
+        # sides of the total at their actual size — counting them at 32
+        # bits regardless of dtype skewed totals for bf16 models.
+        return sum(l.fp32_bits for l in self.layers) + self.skipped_bits
 
     @property
     def compression_ratio(self) -> float:
@@ -118,7 +131,9 @@ class CompressionReport:
 
     def summary(self) -> str:
         return (
-            f"layers={len(self.layers)} ratio={self.compression_ratio:.2f}x "
+            f"layers={len(self.layers)} "
+            f"packed={sum(1 for l in self.layers if l.packed)} "
+            f"ratio={self.compression_ratio:.2f}x "
             f"NOps={self.nops_per_row/1e6:.2f}M/row "
             f"(dense {self.dense_nops_per_row/1e6:.2f}M/row, "
             f"{100*(1-self.nops_per_row/max(self.dense_nops_per_row,1)):.1f}% saved)"
@@ -161,7 +176,30 @@ def eligible_linears(
     return out
 
 
-def _compress_matrix(w: Array, lp, power_iters: int):
+def _runtime_format(node, act_wl: int, pack: bool):
+    """Stamp the plan's runtime knobs onto a compressed node: the
+    activation word length its matmul quantizes to, and — for W4 with an
+    even last dim — the packed-nibble HBM layout. Packing is exact (codes
+    unchanged), so packed and carrier trees are token-identical."""
+    def one(q: QuantizedTensor) -> QuantizedTensor:
+        q = dataclasses.replace(q, act_wl=act_wl)
+        return pack_weights(q) if pack else q
+
+    if isinstance(node, LowRankQ):
+        return LowRankQ(one(node.w1), one(node.w2))
+    return one(node)
+
+
+def _node_bits(node) -> tuple[int, bool]:
+    """(resident storage bits, any-factor-packed) straight from the node's
+    device arrays — the honest accounting, never an assumed word length."""
+    if isinstance(node, LowRankQ):
+        return (node.storage_bits(), node.w1.packed or node.w2.packed)
+    return node.storage_bits(), node.packed
+
+
+def _compress_matrix(w: Array, lp, power_iters: int, *,
+                     act_wl: int = 8, pack: bool = True):
     """Compress one (..., K, N) weight per its LayerPlan -> (node,
     LayerReport). Leading stack dims (scan-stacked layers, expert stacks,
     layers x experts) are handled by vmapping once per leading dim."""
@@ -181,24 +219,24 @@ def _compress_matrix(w: Array, lp, power_iters: int):
         fn = jax.vmap(fn)
     for d in w.shape[:-2]:
         mult *= int(d)
-    node = fn(w)
+    node = _runtime_format(fn(w), act_wl, pack)
+    bits, packed = _node_bits(node)
     return node, _report_for(lp.path, (k, n), lp.method, lp.wl, rank,
-                             mult=mult)
+                             mult=mult, bits=bits, packed=packed)
 
 
-def _report_for(path, kn, method, wl, rank, mult):
+def _report_for(path, kn, method, wl, rank, mult, bits, packed):
     k, n = kn
     fp32 = 32 * k * n * mult
     if method == "quant":
-        bits = (wl * k * n + 32 * n) * mult
         nops, rank_out = k * n * mult, None
     else:
-        bits = (wl * (k + n) * rank + 32 * 2 * rank) * mult
         nops, rank_out = rank * (k + n) * mult, rank
     return LayerReport(
         path=path, shape=(mult, k, n) if mult > 1 else (k, n),
         method=method, rank=rank_out, bits=bits, fp32_bits=fp32,
         nops_per_row=nops, dense_nops_per_row=k * n * mult, wl=wl,
+        packed=packed,
     )
 
 
@@ -217,7 +255,8 @@ def compress_params(params, spec):
             leaves = jax.tree_util.tree_leaves(params)
             return params, CompressionReport(
                 [], sum(int(l.size) for l in leaves),
-                plan=CompressionPlan(label="none", act_wl=spec.act_wl))
+                plan=CompressionPlan(label="none", act_wl=spec.act_wl),
+                skipped_bits=sum(_leaf_bits(l) for l in leaves))
         plan = spec.to_plan(params)
     else:
         plan = spec.validate(params)
@@ -225,20 +264,33 @@ def compress_params(params, spec):
     targets = {lp.path: lp for lp in plan.active_layers()}
     reports: list[LayerReport] = []
     skipped = 0
+    skipped_bits = 0
 
     def visit(path, leaf):
-        nonlocal skipped
+        nonlocal skipped, skipped_bits
         p = path_str(path)
         if p in targets:
-            node, rep = _compress_matrix(leaf, targets[p], plan.power_iters)
+            node, rep = _compress_matrix(leaf, targets[p], plan.power_iters,
+                                         act_wl=plan.act_wl, pack=plan.pack)
             reports.append(rep)
             return node
         if hasattr(leaf, "size"):
             skipped += int(leaf.size)
+            skipped_bits += _leaf_bits(leaf)
         return leaf
 
     new_params = jax.tree_util.tree_map_with_path(visit, params)
-    return new_params, CompressionReport(reports, skipped, plan=plan)
+    return new_params, CompressionReport(reports, skipped, plan=plan,
+                                         skipped_bits=skipped_bits)
+
+
+def _leaf_bits(leaf) -> int:
+    """Actual storage bits of an uncompressed leaf: size x dtype itemsize
+    (a bf16 embedding is 16 bits/param, not an assumed 32)."""
+    if not hasattr(leaf, "size"):
+        return 0
+    itemsize = getattr(getattr(leaf, "dtype", None), "itemsize", 4)
+    return int(leaf.size) * int(itemsize) * 8
 
 
 def sra_eval_closure(

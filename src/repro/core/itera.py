@@ -51,7 +51,14 @@ class LowRankQ:
 
     @property
     def rank(self) -> int:
-        return self.w1.shape[1]
+        return self.w1.shape[1]      # logical, even when w1 is packed
+
+    @property
+    def act_wl(self) -> int:
+        """Activation word length for both cascade matmuls (phase-1 input
+        quantization AND the phase-boundary requant); carried on the
+        factors so it rides the pytree into jitted model functions."""
+        return self.w1.act_wl
 
     def dequant_product(self) -> Array:
         return self.w1.dequant() @ self.w2.dequant()
@@ -181,11 +188,17 @@ def truncate(lr: LowRankQ, rank: int) -> LowRankQ:
     """First-r-components decomposition. For ITERA this equals running
     Algorithm 1 with target rank r (greedy prefix consistency); for the
     SVD baseline it equals truncated SVD + vector-wise quantization."""
+    if lr.w1.packed or lr.w2.packed:
+        raise ValueError("truncate() operates on carrier-layout factors; "
+                         "unpack_weights the node first (packing happens "
+                         "after rank selection, in compress_params)")
+    # dataclasses.replace keeps the non-layout aux (act_wl) intact —
+    # truncation must not silently reset an A4/A6 plan back to A8
     return LowRankQ(
-        QuantizedTensor(lr.w1.values[:, :rank], lr.w1.scale[:, :rank],
-                        lr.w1.wl, lr.w1.axis),
-        QuantizedTensor(lr.w2.values[:rank, :], lr.w2.scale[:rank, :],
-                        lr.w2.wl, lr.w2.axis),
+        dataclasses.replace(lr.w1, values=lr.w1.values[:, :rank],
+                            scale=lr.w1.scale[:, :rank]),
+        dataclasses.replace(lr.w2, values=lr.w2.values[:rank, :],
+                            scale=lr.w2.scale[:rank, :]),
     )
 
 

@@ -7,10 +7,14 @@ The paper uses symmetric fixed-point quantization with notation WxAy
 column (per-channel), and on the SVD factors one scale per rank-column /
 rank-row.
 
-On TPU there is no native int4/int6 datapath: values are stored in an int8
-carrier clamped to the word-length range; the *storage* cost used for
-compression-ratio accounting is the true word length (packed int4 / int6
-in HBM — see core/compress.py). The MXU computes int8xint8->int32.
+On TPU there is no native int4/int6 datapath, but HBM residency does not
+have to pay for the carrier: W4 tensors are *packed* two nibbles per int8
+byte in HBM (`pack_weights`) and unpacked on-chip, inside the Pallas
+kernels, right before the int8xint8->int32 MXU dot. W6 has no byte-aligned
+packing (4 codes per 3 bytes straddles lanes) and stays int8-carrier
+resident — and is *accounted* as 8 bits, not 6: `storage_bits()` reports
+the bytes the device arrays actually occupy, never a pretended packed
+size. See core/compress.py for whole-model accounting.
 """
 from __future__ import annotations
 
@@ -34,40 +38,65 @@ def qmax(wl: int) -> int:
 class QuantizedTensor:
     """A symmetric per-axis quantized tensor.
 
-    values : integer codes in an int8 carrier (|v| <= qmax(wl))
-    scale  : fp32 scale, broadcastable against `values` along `axis`
-    wl     : word length in bits (4, 6, 8) — the *storage* width
+    values : integer codes. Carrier layout: one int8 per code
+             (|v| <= qmax(wl)). Packed layout (`packed=True`, wl == 4
+             only): two nibble codes per int8 byte along the LAST axis,
+             so `values.shape[-1]` is half the logical width.
+    scale  : fp32 scale, broadcastable against the *logical* values along
+             `axis`
+    wl     : word length in bits (4, 6, 8) — the code range
     axis   : axis along which scales are shared (the reduction axis of the
              matmul this tensor feeds); scale shape has 1 there.
+    packed : True when `values` holds the packed-nibble HBM layout
+    act_wl : word length the activations feeding this weight's matmul are
+             quantized to at runtime (the plan's WxAy "Ay"); 8 keeps the
+             historical A8 behavior bit-identical.
+
+    `wl`, `axis`, `packed`, `act_wl` are pytree aux data: static under
+    jit, so kernels specialize on the layout and clamp range, and a plan
+    with a different act_wl or packing retraces instead of reusing a
+    stale compilation.
     """
 
     values: Array
     scale: Array
     wl: int
     axis: int
+    packed: bool = False
+    act_wl: int = 8
 
     @property
     def shape(self):
-        return self.values.shape
+        """LOGICAL shape (unpacked), regardless of residency layout."""
+        s = self.values.shape
+        if self.packed:
+            return (*s[:-1], s[-1] * 2)
+        return s
 
     def dequant(self) -> Array:
-        return self.values.astype(jnp.float32) * self.scale
+        v = unpack_int4(self.values) if self.packed else self.values
+        return v.astype(jnp.float32) * self.scale
 
     def storage_bits(self) -> int:
-        """True HBM storage cost in bits (packed sub-8-bit + fp32 scales)."""
+        """HBM storage cost in bits of the arrays as they are actually
+        resident: 8 bits per stored byte (so wl per logical code when
+        packed, a full 8 for any int8-carrier tensor — including W4/W6
+        that was *not* packed) plus fp32 scales. Honest by construction:
+        it counts device bytes, not the word length we wish we stored."""
         n = 1
         for d in self.values.shape:
             n *= int(d)
         ns = 1
         for d in self.scale.shape:
             ns *= int(d)
-        return n * self.wl + ns * 32
+        return n * 8 + ns * 32
 
 
 jax.tree_util.register_pytree_with_keys(
     QuantizedTensor,
-    lambda q: ((("values", q.values), ("scale", q.scale)), (q.wl, q.axis)),
-    lambda aux, ch: QuantizedTensor(ch[0], ch[1], aux[0], aux[1]),
+    lambda q: ((("values", q.values), ("scale", q.scale)),
+               (q.wl, q.axis, q.packed, q.act_wl)),
+    lambda aux, ch: QuantizedTensor(ch[0], ch[1], *aux),
 )
 
 
@@ -114,9 +143,14 @@ def quant_linear_ref(x: Array, w: Array, w_wl: int, a_wl: int) -> Array:
 def pack_int4(codes: Array) -> Array:
     """Pack int8-carried int4 codes into bytes (two nibbles per byte).
 
-    Storage-layer utility: models the HBM layout for W4. The last dim must
-    be even. Values must be in [-8, 7].
+    This IS the HBM layout for packed W4 weights: element 2i goes to the
+    low nibble of byte i, element 2i+1 to the high nibble (matching the
+    in-kernel unpack in kernels/quant_matmul.py). The last dim must be
+    even. Values must be in [-8, 7].
     """
+    if codes.shape[-1] % 2:
+        raise ValueError(
+            f"pack_int4 needs an even last dim, got shape {codes.shape}")
     lo = codes[..., 0::2] & 0x0F
     hi = (codes[..., 1::2] & 0x0F) << 4
     return (lo | hi).astype(jnp.int8)
@@ -132,3 +166,28 @@ def unpack_int4(packed: Array) -> Array:
 
     out = jnp.stack([sext(lo), sext(hi)], axis=-1)
     return out.reshape(*packed.shape[:-1], packed.shape[-1] * 2)
+
+
+def packable(q: QuantizedTensor) -> bool:
+    """True when `q` can move to the packed-nibble layout: W4 codes (the
+    only word length whose packing is byte-aligned) with an even last dim,
+    not already packed."""
+    return (not q.packed and q.wl == 4
+            and int(q.values.shape[-1]) % 2 == 0)
+
+
+def pack_weights(q: QuantizedTensor) -> QuantizedTensor:
+    """Move a W4 tensor to the packed HBM-resident layout (exact: the
+    codes are unchanged, only the byte layout differs). Non-packable
+    tensors (W6/W8, odd last dim) are returned as-is — they stay int8
+    carriers and `storage_bits()` charges them the full 8 bits."""
+    if not packable(q):
+        return q
+    return dataclasses.replace(q, values=pack_int4(q.values), packed=True)
+
+
+def unpack_weights(q: QuantizedTensor) -> QuantizedTensor:
+    """Inverse of pack_weights: back to the int8-carrier layout."""
+    if not q.packed:
+        return q
+    return dataclasses.replace(q, values=unpack_int4(q.values), packed=False)

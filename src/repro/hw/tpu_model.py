@@ -53,6 +53,19 @@ def _pad(x: int, m: int) -> int:
     return -(-x // m) * m
 
 
+def _packed(weight_wl: int) -> bool:
+    """W4 is the only word length the runtime stores packed."""
+    return weight_wl == 4
+
+
+def blocks_feasible(b: Blocks, weight_wl: int) -> bool:
+    """Whether the packed kernels accept these blocks: a packed weight's
+    N half-block must stay 128-lane aligned, so bn % 256 == 0 (the same
+    constraint ops.choose_blocks enforces and quant_matmul asserts). The
+    model must not rank configurations the kernels reject."""
+    return not _packed(weight_wl) or b.bn % 256 == 0
+
+
 def dense_engine(m, k, n, b: Blocks, *, weight_wl=8, act_wl=8,
                  hbm_bw=HBM_BW) -> TpuPoint:
     mp, kp, np_ = _pad(m, b.bm), _pad(k, b.bk), _pad(n, b.bn)
@@ -60,12 +73,12 @@ def dense_engine(m, k, n, b: Blocks, *, weight_wl=8, act_wl=8,
     compute = 2 * macs / (PEAK_OPS_INT8 * _mxu_util(b.bm, b.bk, b.bn))
     # HBM: X once per N-panel pass? output-stationary grid: X blocks stream
     # once per (i,j) row — X re-read N/bn times, W re-read once per i.
-    hbm = (mp * kp * (np_ // b.bn) * _wl_bytes(act_wl)
+    hbm = (mp * kp * _act_bytes(act_wl) * (np_ // b.bn)
            + kp * np_ * (mp // b.bm) * _wl_bytes(weight_wl)
            + mp * np_ * 4)
     memory = hbm / hbm_bw
     return TpuPoint("baseline", max(compute, memory), compute, memory, hbm,
-                    qm_vmem(b.bm, b.bk, b.bn),
+                    qm_vmem(b.bm, b.bk, b.bn, w_packed=_packed(weight_wl)),
                     {"blocks": dataclasses.asdict(b)})
 
 
@@ -88,22 +101,40 @@ def cascade_engine(m, k, n, r, b: Blocks, *, weight_wl=8, act_wl=8,
                    hbm_bw=HBM_BW) -> TpuPoint:
     """Fused kernel: T lives in VMEM; W1 re-read once per M-block row, W2
     once per M-block; X once."""
-    rp = _pad(r, 128)
+    packed = _packed(weight_wl)
+    # a packed W1 pads R to a multiple of 256 (half-width lane alignment,
+    # mirroring ops.lrmm) — the model pays that padding like the kernel does
+    rp = _pad(r, 256 if packed else 128)
     mp, kp, np_ = _pad(m, b.bm), _pad(k, b.bk), _pad(n, b.bn)
     macs = mp * kp * rp + mp * rp * np_
     compute = 2 * macs / (PEAK_OPS_INT8 * _mxu_util(b.bm, b.bk, b.bn))
-    hbm = (mp * kp * _wl_bytes(act_wl)             # X once
+    hbm = (mp * kp * _act_bytes(act_wl)            # X once
            + kp * rp * (mp // b.bm) * _wl_bytes(weight_wl)   # W1 per row
            + rp * np_ * (mp // b.bm) * _wl_bytes(weight_wl)  # W2 per row
            + mp * np_ * 4)                         # Y out f32
     memory = hbm / hbm_bw
     return TpuPoint("cascade", max(compute, memory), compute, memory, hbm,
-                    lr_vmem(b.bm, b.bk, b.bn, rp),
+                    lr_vmem(b.bm, b.bk, b.bn, rp, w1_packed=packed,
+                            w2_packed=packed),
                     {"blocks": dataclasses.asdict(b), "rank": r})
 
 
 def _wl_bytes(wl: int) -> float:
-    return wl / 8.0
+    """HBM bytes per element the TPU runtime ACTUALLY streams: W4 is
+    packed two-nibbles-per-byte (kernels/quant_matmul.py unpacks in
+    VMEM), everything else — including W6, which has no byte-aligned
+    packing — rides a full int8 carrier. Activations are int8 carriers
+    at every Ay. Pricing W6 at 6/8 would rank DSE designs by bandwidth
+    the kernels cannot deliver (the FPGA model in engine_model.py keeps
+    wl/8: that target has a native sub-8-bit datapath)."""
+    return 0.5 if wl == 4 else 1.0
+
+
+def _act_bytes(wl: int) -> float:
+    """Activations are quantized on the fly into int8 carriers at every
+    Ay — never packed — so they always stream a full byte."""
+    del wl
+    return 1.0
 
 
 def block_space(max_bm=512):
@@ -121,6 +152,8 @@ def best_point(m, k, n, r=None, *, weight_wl=8, act_wl=8, hbm_bw=HBM_BW,
     """Lowest-latency feasible engine+blocks for one layer."""
     best = None
     for b in block_space(max_bm=max(8, min(512, _pad(m, 8)))):
+        if not blocks_feasible(b, weight_wl):
+            continue
         cands = []
         if "baseline" in engines:
             cands.append(dense_engine(m, k, n, b, weight_wl=weight_wl,

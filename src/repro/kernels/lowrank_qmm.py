@@ -10,10 +10,17 @@ X·W1).
 Mechanically this is a two-phase sequential grid: for each M-row-block i the
 inner grid axis s runs K/bk accumulation steps (phase 1: T += Xq_blk @ W1_blk)
 followed by N/bn emission steps (phase 2: Y_blk = Tq @ W2_blk). The
-intermediate is re-quantized to int8 once, at the phase boundary — exactly
-the paper's A8 intermediate quantization between the two engines — with the
+intermediate is re-quantized to an int8 carrier once, at the phase boundary
+— the paper's Ay intermediate quantization between the two engines, clamped
+to qmax(act_wl) (`act_qmax`; 127 == the historical A8 behavior) — with the
 per-R scales of W2 (s2) folded into T before requantization so phase 2 needs
 only a per-row scale.
+
+Sub-8-bit residency: both factors may arrive *packed* (two int4 nibbles per
+byte along their last axis — W1 along R, W2 along N; core.quant.pack_int4
+layout). The packed blocks are what DMA HBM→VMEM; the kernel sign-extends
+on-chip right before each MXU dot. Unpacking is exact, so packed and
+carrier runs are bit-identical.
 
 dimension_semantics = ("parallel", "arbitrary"): M-blocks are independent;
 the s axis is order-dependent (accumulate -> requant -> emit).
@@ -27,6 +34,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.quant_matmul import unpack_int4_block
+
 # jax >= 0.6 renamed TPUCompilerParams -> CompilerParams; support both.
 _CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
 
@@ -35,7 +44,7 @@ def _kernel(
     xq_ref, sx_ref, w1_ref, s1_ref, w2_ref, s2_ref,  # inputs
     o_ref,                                           # output
     tacc_ref, tq_ref, st_ref,                        # scratch
-    *, k_blocks, n_blocks,
+    *, k_blocks, n_blocks, w1_packed, w2_packed, act_qmax,
 ):
     s = pl.program_id(1)
 
@@ -46,8 +55,9 @@ def _kernel(
 
     @pl.when(s < k_blocks)
     def _accum():
+        w1 = unpack_int4_block(w1_ref[...]) if w1_packed else w1_ref[...]
         tacc_ref[...] += jax.lax.dot_general(
-            xq_ref[...], w1_ref[...],
+            xq_ref[...], w1,
             dimension_numbers=(((1,), (0,)), ((), ())),
             preferred_element_type=jnp.int32,
         )
@@ -58,15 +68,17 @@ def _kernel(
         t = tacc_ref[...].astype(jnp.float32)
         t = t * sx_ref[...] * s1_ref[...] * s2_ref[...].reshape(1, -1)
         absmax = jnp.max(jnp.abs(t), axis=-1, keepdims=True)
-        st = jnp.where(absmax > 0, absmax / 127.0, 1.0)
-        tq_ref[...] = jnp.clip(jnp.round(t / st), -127, 127).astype(jnp.int8)
+        st = jnp.where(absmax > 0, absmax / act_qmax, 1.0)
+        tq_ref[...] = jnp.clip(jnp.round(t / st),
+                               -act_qmax, act_qmax).astype(jnp.int8)
         st_ref[...] = st.astype(jnp.float32)
 
     # ---- phase 2: emit Y n-block = Tq @ W2q ------------------------------
     @pl.when(s >= k_blocks)
     def _emit():
+        w2 = unpack_int4_block(w2_ref[...]) if w2_packed else w2_ref[...]
         acc = jax.lax.dot_general(
-            tq_ref[...], w2_ref[...],
+            tq_ref[...], w2,
             dimension_numbers=(((1,), (0,)), ((), ())),
             preferred_element_type=jnp.int32,
         )
@@ -74,7 +86,9 @@ def _kernel(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("bm", "bk", "bn", "interpret", "out_dtype")
+    jax.jit,
+    static_argnames=("bm", "bk", "bn", "interpret", "out_dtype",
+                     "w1_packed", "w2_packed", "act_qmax"),
 )
 def lowrank_qmm(
     xq: jax.Array,
@@ -89,21 +103,38 @@ def lowrank_qmm(
     bn: int = 512,
     out_dtype=jnp.float32,
     interpret: bool = False,
+    w1_packed: bool = False,
+    w2_packed: bool = False,
+    act_qmax: int = 127,
 ) -> jax.Array:
     """Y[M,N] = dequant-cascade((Xq @ W1q) @ W2q).
 
     xq: (M, K) int8, sx: (M, 1) f32      — quantized activations
     w1q: (K, R) int8, s1: (1, R) f32     — ITERA factor 1 (R kept whole in VMEM)
     w2q: (R, N) int8, s2: (R, 1) f32     — ITERA factor 2
+    w1_packed / w2_packed: the factor array carries packed W4 nibbles along
+    its last axis (R resp. N) — shapes become (K, R//2) / (R, N//2); scales
+    stay unpacked. act_qmax: clamp of the phase-boundary requant,
+    qmax(act_wl).
     Dims must divide by blocks; R is not tiled (ranks are ≤ ~1k by design —
     that is the whole point of the decomposition).
     """
     m, k = xq.shape
-    k2, r = w1q.shape
-    r2, n = w2q.shape
+    k2, r1 = w1q.shape
+    r = r1 * 2 if w1_packed else r1
+    r2, nw = w2q.shape
+    n = nw * 2 if w2_packed else nw
     assert k == k2 and r == r2, (xq.shape, w1q.shape, w2q.shape)
     assert m % bm == 0 and k % bk == 0 and n % bn == 0, (
         (m, k, n), (bm, bk, bn))
+    # packed half-blocks must stay 128-lane aligned: W2's N half-block
+    # (ops keeps bn >= 256) and W1's untiled R half-width (ops pads R to
+    # a multiple of 256 when W1 is packed)
+    assert not w2_packed or bn % 256 == 0, (
+        f"packed W2 needs bn % 256 == 0, got bn={bn}")
+    assert not w1_packed or r % 256 == 0, (
+        f"packed W1 needs padded R % 256 == 0, got R={r}")
+    bnw = bn // 2 if w2_packed else bn
 
     k_blocks, n_blocks = k // bk, n // bn
     grid = (m // bm, k_blocks + n_blocks)
@@ -113,18 +144,20 @@ def lowrank_qmm(
         return jnp.maximum(s - k_blocks, 0)
 
     return pl.pallas_call(
-        functools.partial(_kernel, k_blocks=k_blocks, n_blocks=n_blocks),
+        functools.partial(_kernel, k_blocks=k_blocks, n_blocks=n_blocks,
+                          w1_packed=w1_packed, w2_packed=w2_packed,
+                          act_qmax=act_qmax),
         grid=grid,
         in_specs=[
             # phase-1 operands: clamp to the last K block during phase 2
             pl.BlockSpec((bm, bk),
                          lambda i, s: (i, jnp.minimum(s, k_blocks - 1))),
             pl.BlockSpec((bm, 1), lambda i, s: (i, 0)),
-            pl.BlockSpec((bk, r),
+            pl.BlockSpec((bk, r1),
                          lambda i, s: (jnp.minimum(s, k_blocks - 1), 0)),
             pl.BlockSpec((1, r), lambda i, s: (0, 0)),
             # phase-2 operands: park on block 0 during phase 1
-            pl.BlockSpec((r, bn), lambda i, s: (0, nmap(i, s))),
+            pl.BlockSpec((r, bnw), lambda i, s: (0, nmap(i, s))),
             pl.BlockSpec((r, 1), lambda i, s: (0, 0)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, s: (i, nmap(i, s))),
@@ -141,15 +174,43 @@ def lowrank_qmm(
     )(xq, sx, w1q, s1, w2q, s2)
 
 
-def vmem_bytes(bm: int, bk: int, bn: int, r: int) -> int:
-    """VMEM working set of one grid step (constraint for the DSE)."""
+def vmem_bytes(bm: int, bk: int, bn: int, r: int, *,
+               w1_packed: bool = False, w2_packed: bool = False) -> int:
+    """VMEM working set of one grid step (constraint for the DSE). Packed
+    factor blocks DMA half the bytes but add a transient unpacked int8
+    copy for the MXU (1.5x the carrier block on-chip — packing buys HBM
+    bandwidth, not VMEM)."""
+    w1_blk = (bk * r // 2 + bk * r) if w1_packed else bk * r
+    w2_blk = (r * bn // 2 + r * bn) if w2_packed else r * bn
     return (
         bm * bk          # x block int8
-        + bk * r         # w1 block int8
-        + r * bn         # w2 block int8
+        + w1_blk         # w1 block (packed DMA + unpacked temp, or carrier)
+        + w2_blk         # w2 block
         + bm * r * 4     # T accumulator int32
         + bm * r         # Tq int8
         + bm * 4 * 2     # sx, st
         + r * 4 * 2      # s1, s2
         + bm * bn * 4    # out f32
+    )
+
+
+def hbm_bytes_moved(m: int, k: int, n: int, r: int, bm: int, *,
+                    w1_packed: bool = False, w2_packed: bool = False) -> int:
+    """Modeled HBM traffic of one fused cascade launch.
+
+    Only the M row-blocking matters: X streams once (consecutive phase-2
+    steps revisit the same X block, which stays resident); both factors
+    are re-fetched per M row-block; the (bm x R) intermediate never
+    leaves VMEM — the cascade's defining property; the f32 output is
+    written once. bk/bn change nothing here, so they are not parameters.
+    """
+    m_rep = max(m // bm, 1)
+    w1_bytes = (k * r // 2) if w1_packed else k * r
+    w2_bytes = (r * n // 2) if w2_packed else r * n
+    return (
+        m * k                      # Xq int8, once
+        + m * 4                    # sx
+        + (w1_bytes + w2_bytes) * m_rep   # factors, once per M row
+        + (r + r) * 4 * m_rep      # s1, s2
+        + m * n * 4                # Y f32 out
     )

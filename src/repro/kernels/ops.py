@@ -1,14 +1,20 @@
 """Public jit'd wrappers around the Pallas kernels.
 
-Handles: activation quantization (A8 per-row), padding to block multiples,
-automatic block-shape selection under a VMEM budget (the DSE's per-layer
-choice — see hw/dse.py for the global search), and backend dispatch:
+Handles: activation quantization (per-row symmetric, clamp from the plan's
+act_wl carried on the weight node — A8 by default), packed-W4 layout
+dispatch (packed arrays DMA as-is; the kernels unpack in VMEM), padding to
+block multiples (zero bytes unpack to zero codes, so padding happens
+directly in the packed domain), automatic block-shape selection under a
+VMEM budget (the DSE's per-layer choice — see hw/dse.py for the global
+search), and backend dispatch:
 
   * on TPU           -> compiled Pallas kernels
   * on CPU (tests)   -> interpret=True Pallas (bit-faithful emulation)
   * use_kernel=False -> pure-jnp reference path (used inside big jitted
                         models / dry-runs, where interpret-mode Pallas would
-                        bloat the HLO; numerically identical to ref.py)
+                        bloat the HLO; numerically identical to the kernels
+                        — packed weights are unpacked up front, which is
+                        exact)
 """
 from __future__ import annotations
 
@@ -18,7 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.itera import LowRankQ
-from repro.core.quant import QuantizedTensor
+from repro.core.quant import QuantizedTensor, qmax, unpack_int4
 from repro.kernels import lowrank_qmm as _lr
 from repro.kernels import quant_matmul as _qm
 from repro.kernels import ref as _ref
@@ -35,7 +41,8 @@ def on_tpu() -> bool:
 
 
 def quantize_acts(x: jax.Array, qm: int = 127):
-    """Per-row symmetric A8 activation quantization."""
+    """Per-row symmetric activation quantization into an int8 carrier,
+    clamped to ±qm = ±qmax(act_wl); qm=127 is the A8 default."""
     absmax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
     sx = jnp.where(absmax > 0, absmax / qm, 1.0).astype(jnp.float32)
     xq = jnp.clip(jnp.round(x / sx), -qm, qm).astype(jnp.int8)
@@ -43,20 +50,33 @@ def quantize_acts(x: jax.Array, qm: int = 127):
 
 
 def choose_blocks(m: int, k: int, n: int, r: int | None = None,
-                  budget: int = VMEM_BUDGET):
+                  budget: int = VMEM_BUDGET, *,
+                  packed_n: bool = False, packed_r: bool = False):
     """Pick (bm, bk, bn) aligned to the MXU that fit the VMEM budget.
 
     Mirrors the paper's hardware-aware tile selection: prefer large bm/bn
     (amortize weight streaming), shrink until the working set fits.
+    packed_n: the N-axis operand (W, or W2 in the cascade) is
+    nibble-packed, so bn stays >= 256 (the packed half-block must remain
+    lane-aligned) and the working set counts the unpack temp. packed_r:
+    the cascade's W1 is packed along R (affects only the vmem model; R is
+    never tiled).
     """
+    bn_floor = 256 if packed_n else 128
     bm = min(_round_up(m, 8), 256)
     bk = min(_round_up(k, 128), 512)
-    bn = min(_round_up(n, 128), 512)
-    fits = (lambda: _lr.vmem_bytes(bm, bk, bn, r)) if r is not None else (
-        lambda: _qm.vmem_bytes(bm, bk, bn))
+    # packed N blocks must be multiples of 256 (half-block lane-aligned),
+    # and halving from 512 keeps them so; carrier blocks align to 128
+    bn = max(min(_round_up(n, bn_floor), 512), bn_floor)
+    if r is not None:
+        fits = lambda: _lr.vmem_bytes(bm, bk, bn, r, w1_packed=packed_r,
+                                      w2_packed=packed_n)     # noqa: E731
+    else:
+        fits = lambda: _qm.vmem_bytes(bm, bk, bn,
+                                      w_packed=packed_n)      # noqa: E731
     while fits() > budget and bm > 8:
         bm //= 2
-    while fits() > budget and bn > 128:
+    while fits() > budget and bn > bn_floor:
         bn //= 2
     while fits() > budget and bk > 128:
         bk //= 2
@@ -83,29 +103,36 @@ def qmm(
     blocks: tuple | None = None,
     out_dtype=jnp.float32,
 ) -> jax.Array:
-    """y = dequant(quant(x)) @ dequant(w) — WxA8 dense linear.
+    """y = dequant(quant(x)) @ dequant(w) — WxAy dense linear.
 
     x: (..., K) float; w: QuantizedTensor (K, N) with per-column scales.
+    The activation word length (Ay) and the packed/carrier layout ride on
+    `w` as pytree aux data, so they are static here: the clamp range is
+    qmax(w.act_wl), and a packed w streams its nibble bytes straight into
+    the kernel.
     """
     if interpret is None:
         interpret = not on_tpu()
     lead = x.shape[:-1]
-    k, n = w.shape
+    k, n = w.shape                     # logical, even when packed
     x2 = x.reshape(-1, k)
     m = x2.shape[0]
-    xq, sx = quantize_acts(x2)
+    xq, sx = quantize_acts(x2, qmax(w.act_wl))
     sw = w.scale.reshape(1, n)
 
     if not use_kernel:
-        y = _ref.quant_matmul_ref(xq, sx, w.values, sw)
+        wv = unpack_int4(w.values) if w.packed else w.values
+        y = _ref.quant_matmul_ref(xq, sx, wv, sw)
         return y.astype(out_dtype).reshape(*lead, n)
 
-    bm, bk, bn = blocks or choose_blocks(m, k, n)
+    bm, bk, bn = blocks or choose_blocks(m, k, n, packed_n=w.packed)
     mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
+    wv = _pad2(w.values, kp, np_ // 2 if w.packed else np_)
     y = _qm.quant_matmul(
         _pad2(xq, mp, kp), _pad2(sx, mp, 1),
-        _pad2(w.values, kp, np_), _pad2(sw, 1, np_),
+        wv, _pad2(sw, 1, np_),
         bm=bm, bk=bk, bn=bn, out_dtype=out_dtype, interpret=interpret,
+        w_packed=w.packed,
     )[:m, :n]
     return y.reshape(*lead, n)
 
@@ -129,46 +156,94 @@ def lrmm(
     fused=True  -> Cascade engine analog (single kernel, T pinned in VMEM)
     fused=False -> Single engine analog (two quant_matmul launches; T makes
                    an HBM round-trip — kept for the engine comparison bench)
+
+    Activation word length (input quantization AND the phase-boundary
+    requant clamp) comes from lr.act_wl; packed factors stream packed.
     """
     if interpret is None:
         interpret = not on_tpu()
     lead = x.shape[:-1]
-    k, r = lr.w1.shape
+    k, r = lr.w1.shape                 # logical
     _, n = lr.w2.shape
     x2 = x.reshape(-1, k)
     m = x2.shape[0]
-    xq, sx = quantize_acts(x2)
+    act_qm = qmax(lr.act_wl)
+    xq, sx = quantize_acts(x2, act_qm)
     s1 = lr.w1.scale.reshape(1, r)
     s2 = lr.w2.scale.reshape(r, 1)
 
     if not use_kernel:
-        y = _ref.lowrank_qmm_ref(xq, sx, lr.w1.values, s1, lr.w2.values, s2)
+        w1v = unpack_int4(lr.w1.values) if lr.w1.packed else lr.w1.values
+        w2v = unpack_int4(lr.w2.values) if lr.w2.packed else lr.w2.values
+        y = _ref.lowrank_qmm_ref(xq, sx, w1v, s1, w2v, s2, act_qm)
         return y.astype(out_dtype).reshape(*lead, n)
 
     if not fused:
-        # Single-engine schedule: T leaves the chip between the two matmuls.
-        t = _ref.quant_matmul_ref(xq, sx, lr.w1.values, s1)
+        # Single-engine schedule: T leaves the chip between the two
+        # matmuls — and both phases run the Pallas kernel, so the engine
+        # comparison bench measures kernel-vs-kernel, not ref-vs-kernel.
+        bm1, bk1, bn1 = choose_blocks(m, k, r, packed_n=lr.w1.packed)
+        mp, kp = _round_up(m, bm1), _round_up(k, bk1)
+        rp1 = _round_up(r, bn1)
+        t = _qm.quant_matmul(
+            _pad2(xq, mp, kp), _pad2(sx, mp, 1),
+            _pad2(lr.w1.values, kp, rp1 // 2 if lr.w1.packed else rp1),
+            _pad2(s1, 1, rp1),
+            bm=bm1, bk=bk1, bn=bn1, interpret=interpret,
+            w_packed=lr.w1.packed,
+        )[:m, :r]
         t = t * s2.reshape(1, -1)
-        tq, st = quantize_acts(t)
-        bm, bk, bn = blocks or choose_blocks(m, r, n)
+        tq, st = quantize_acts(t, act_qm)
+        bm, bk, bn = blocks or choose_blocks(m, r, n, packed_n=lr.w2.packed)
         mp, rp, np_ = _round_up(m, bm), _round_up(r, bk), _round_up(n, bn)
         y = _qm.quant_matmul(
             _pad2(tq, mp, rp), _pad2(st, mp, 1),
-            _pad2(lr.w2.values, rp, np_),
+            _pad2(lr.w2.values, rp, np_ // 2 if lr.w2.packed else np_),
             jnp.ones((1, np_), jnp.float32),
             bm=bm, bk=bk, bn=bn, out_dtype=out_dtype, interpret=interpret,
+            w_packed=lr.w2.packed,
         )[:m, :n]
         return y.reshape(*lead, n)
 
-    rp = _round_up(r, 128)
-    bm, bk, bn = blocks or choose_blocks(m, k, n, rp)
+    # R is held whole in VMEM; a packed W1 needs rp // 2 lane-aligned.
+    rp = _round_up(r, 256 if lr.w1.packed else 128)
+    bm, bk, bn = blocks or choose_blocks(m, k, n, rp,
+                                         packed_n=lr.w2.packed,
+                                         packed_r=lr.w1.packed)
     mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
     y = _lr.lowrank_qmm(
         _pad2(xq, mp, kp), _pad2(sx, mp, 1),
-        _pad2(lr.w1.values, kp, rp),
+        _pad2(lr.w1.values, kp, rp // 2 if lr.w1.packed else rp),
         _pad2(jnp.pad(s1, ((0, 0), (0, rp - r)), constant_values=1.0), 1, rp),
-        _pad2(lr.w2.values, rp, np_),
+        _pad2(lr.w2.values, rp, np_ // 2 if lr.w2.packed else np_),
         _pad2(jnp.pad(s2, ((0, rp - r), (0, 0)), constant_values=1.0), rp, 1),
         bm=bm, bk=bk, bn=bn, out_dtype=out_dtype, interpret=interpret,
+        w1_packed=lr.w1.packed, w2_packed=lr.w2.packed, act_qmax=act_qm,
     )[:m, :n]
     return y.reshape(*lead, n)
+
+
+def qmm_hbm_bytes(m: int, w: QuantizedTensor,
+                  blocks: tuple | None = None) -> int:
+    """Modeled HBM bytes one qmm(x, w) launch moves for an (m, K) input —
+    the bytes-moved column in BENCH_kernels.json. Uses the same block
+    choice as the dispatch above, on the padded shapes."""
+    k, n = w.shape
+    bm, bk, bn = blocks or choose_blocks(m, k, n, packed_n=w.packed)
+    mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
+    return _qm.hbm_bytes_moved(mp, kp, np_, bm, bn, w_packed=w.packed)
+
+
+def lrmm_hbm_bytes(m: int, lr: LowRankQ,
+                   blocks: tuple | None = None) -> int:
+    """Modeled HBM bytes one fused lrmm(x, lr) launch moves."""
+    k, r = lr.w1.shape
+    _, n = lr.w2.shape
+    rp = _round_up(r, 256 if lr.w1.packed else 128)
+    bm, bk, bn = blocks or choose_blocks(m, k, n, rp,
+                                         packed_n=lr.w2.packed,
+                                         packed_r=lr.w1.packed)
+    mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
+    return _lr.hbm_bytes_moved(mp, kp, np_, rp, bm,
+                               w1_packed=lr.w1.packed,
+                               w2_packed=lr.w2.packed)

@@ -9,8 +9,13 @@ paper's output-stationary PE array).
 
 Inputs are pre-quantized int8 codes with per-row activation scales and
 per-column weight scales (symmetric, matching core/quant.py). Sub-8-bit
-weights (W4/W6) arrive as int8 carriers whose values are range-limited; the
-MXU computes int8xint8->int32 regardless (see DESIGN.md §2).
+weights arrive either as int8 carriers whose values are range-limited
+(W6/W8) or — the paper's actual memory win — as *packed* W4 (two nibble
+codes per byte along N, `w_packed=True`): the packed block is what DMAs
+HBM→VMEM, and the kernel sign-extends the nibbles on-chip right before the
+int8xint8->int32 MXU dot, so HBM moves wl/8 bytes per weight while the MXU
+still sees int8. Unpacking is exact, so packed and carrier runs are
+bit-identical.
 """
 from __future__ import annotations
 
@@ -25,15 +30,32 @@ from jax.experimental.pallas import tpu as pltpu
 _CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
 
 
-def _kernel(xq_ref, sx_ref, wq_ref, sw_ref, o_ref, acc_ref, *, k_blocks):
+def unpack_int4_block(wp):
+    """Sign-extend a packed-nibble int8 block (B, C) -> int8 codes (B, 2C).
+
+    Shift arithmetic runs in int32 (Mosaic lowers sub-word shifts through
+    32-bit lanes anyway, and interpret mode matches exactly): byte b holds
+    code 2i in bits 3..0 and code 2i+1 in bits 7..4, the layout written by
+    core.quant.pack_int4.
+    """
+    w32 = wp.astype(jnp.int32)
+    lo = (w32 << 28) >> 28                      # sign-extended low nibble
+    hi = (w32 << 24) >> 28                      # sign-extended high nibble
+    out = jnp.stack([lo, hi], axis=-1).astype(jnp.int8)
+    return out.reshape(*wp.shape[:-1], wp.shape[-1] * 2)
+
+
+def _kernel(xq_ref, sx_ref, wq_ref, sw_ref, o_ref, acc_ref, *, k_blocks,
+            w_packed):
     k = pl.program_id(2)
 
     @pl.when(k == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
+    wq = unpack_int4_block(wq_ref[...]) if w_packed else wq_ref[...]
     acc_ref[...] += jax.lax.dot_general(
-        xq_ref[...], wq_ref[...],
+        xq_ref[...], wq,
         dimension_numbers=(((1,), (0,)), ((), ())),
         preferred_element_type=jnp.int32,
     )
@@ -46,7 +68,8 @@ def _kernel(xq_ref, sx_ref, wq_ref, sw_ref, o_ref, acc_ref, *, k_blocks):
 
 
 @functools.partial(
-    jax.jit, static_argnames=("bm", "bk", "bn", "interpret", "out_dtype")
+    jax.jit,
+    static_argnames=("bm", "bk", "bn", "interpret", "out_dtype", "w_packed"),
 )
 def quant_matmul(
     xq: jax.Array,
@@ -59,25 +82,37 @@ def quant_matmul(
     bn: int = 512,
     out_dtype=jnp.float32,
     interpret: bool = False,
+    w_packed: bool = False,
 ) -> jax.Array:
     """Y[M,N] = (Xq·sx) @ (Wq·sw) with int8 MXU arithmetic.
 
-    Shapes must be divisible by the block factors — `ops.py` handles padding.
+    w_packed=True: wq is (K, N//2) packed nibbles (core.quant.pack_int4
+    layout along N); the kernel unpacks in VMEM. bn must then be even with
+    bn//2 lane-aligned — `ops.choose_blocks` keeps bn >= 256 for packed
+    weights. Shapes must be divisible by the block factors — `ops.py`
+    handles padding (zero bytes unpack to zero codes, so padding in the
+    packed domain is exact).
     """
     m, k = xq.shape
-    k2, n = wq.shape
+    k2, nw = wq.shape
+    n = nw * 2 if w_packed else nw
     assert k == k2, (xq.shape, wq.shape)
     assert m % bm == 0 and k % bk == 0 and n % bn == 0, (
         (m, k, n), (bm, bk, bn))
+    # packed half-blocks must stay 128-lane aligned (choose_blocks keeps
+    # bn >= 256; caller-supplied blocks are checked here, not trusted)
+    assert not w_packed or bn % 256 == 0, (
+        f"packed weights need bn % 256 == 0, got bn={bn}")
+    bnw = bn // 2 if w_packed else bn
 
     grid = (m // bm, n // bn, k // bk)
     return pl.pallas_call(
-        functools.partial(_kernel, k_blocks=k // bk),
+        functools.partial(_kernel, k_blocks=k // bk, w_packed=w_packed),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
             pl.BlockSpec((bm, 1), lambda i, j, kk: (i, 0)),
-            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bk, bnw), lambda i, j, kk: (kk, j)),
             pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
@@ -90,13 +125,42 @@ def quant_matmul(
     )(xq, sx, wq, sw)
 
 
-def vmem_bytes(bm: int, bk: int, bn: int) -> int:
-    """VMEM working set of one grid step (the BRAM analog, DESIGN.md §2)."""
+def vmem_bytes(bm: int, bk: int, bn: int, *, w_packed: bool = False) -> int:
+    """VMEM working set of one grid step (the BRAM analog, DESIGN.md §2).
+
+    A packed weight block halves its DMA footprint but adds a transient
+    unpacked int8 copy for the MXU, so on-chip it costs 1.5x the carrier
+    block — the packing win is HBM bandwidth, not VMEM.
+    """
+    w_blk = (bk * bn // 2 + bk * bn) if w_packed else bk * bn
     return (
         bm * bk            # x block int8
-        + bk * bn          # w block int8
+        + w_blk            # w block (packed DMA + unpacked temp, or carrier)
         + bm * 4           # sx
         + bn * 4           # sw
         + bm * bn * 4      # out f32
         + bm * bn * 4      # acc int32
+    )
+
+
+def hbm_bytes_moved(m: int, k: int, n: int, bm: int, bn: int,
+                    *, w_packed: bool = False) -> int:
+    """Modeled HBM traffic of one quant_matmul launch.
+
+    Per the grid order (i, j, kk): each X block is re-fetched for every
+    N block column, each W block for every M block row; scales ride along
+    with the same reuse; the f32 output is written once. Only bm/bn set
+    the reuse counts — bk is not a parameter because it changes nothing
+    here. This is the number the bytes-moved benchmark column reports —
+    the W term is what packing halves.
+    """
+    n_rep = max(n // bn, 1)
+    m_rep = max(m // bm, 1)
+    w_bytes = (k * n // 2) if w_packed else k * n
+    return (
+        m * k * n_rep              # Xq int8, once per N column
+        + m * 4 * n_rep            # sx
+        + w_bytes * m_rep          # W (packed or carrier), once per M row
+        + n * 4 * m_rep            # sw
+        + m * n * 4                # Y f32 out
     )

@@ -25,30 +25,34 @@ def quant_matmul_ref(xq, sx, wq, sw):
 
 
 def requant_rows(t: jnp.ndarray, qm: int = 127):
-    """Symmetric per-row requantization of an fp intermediate to int8."""
+    """Symmetric per-row requantization of an fp intermediate to an int8
+    carrier, clamped to ±qm = ±qmax(act_wl) (127 == A8)."""
     absmax = jnp.max(jnp.abs(t), axis=-1, keepdims=True)
     st = jnp.where(absmax > 0, absmax / qm, 1.0)
     tq = jnp.clip(jnp.round(t / st), -qm, qm).astype(jnp.int8)
     return tq, st.astype(jnp.float32)
 
 
-def lowrank_qmm_ref(xq, sx, w1q, s1, w2q, s2):
+def lowrank_qmm_ref(xq, sx, w1q, s1, w2q, s2, qm: int = 127):
     """Cascade low-rank quantized matmul, mirroring the fused kernel:
 
     phase 1: T̃ = (Xq @ W1q) · sx · s1 · s2ᵀ     (s2 folded into T)
-    requant: Tq, sT = rowquant(T̃)
+    requant: Tq, sT = rowquant(T̃)  clamped to ±qm (the plan's act_wl)
     phase 2: Y = (Tq @ W2q) · sT
 
     xq: (M, K) int8; sx: (M, 1) f32
     w1q: (K, R) int8; s1: (1, R) f32
     w2q: (R, N) int8; s2: (R, 1) f32
+    Factors arrive in carrier layout — callers unpack packed W4 first
+    (ops.qmm/lrmm do); nibble unpack is exact, so this stays a
+    bit-faithful oracle for the packed kernels too.
     """
     t = jnp.dot(
         xq.astype(jnp.int32), w1q.astype(jnp.int32),
         preferred_element_type=jnp.int32,
     ).astype(jnp.float32)
     t = t * sx * s1 * s2.reshape(1, -1)
-    tq, st = requant_rows(t)
+    tq, st = requant_rows(t, qm)
     y = jnp.dot(
         tq.astype(jnp.int32), w2q.astype(jnp.int32),
         preferred_element_type=jnp.int32,

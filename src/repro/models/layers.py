@@ -47,11 +47,13 @@ def apply_linear(x: jax.Array, w, out_dtype=None) -> jax.Array:
 
 
 def weight_shape(w) -> tuple:
-    """(K, N) of a linear node regardless of representation."""
+    """(K, N) of a linear node regardless of representation — the LOGICAL
+    shape (QuantizedTensor.shape unpacks the halved last dim of
+    packed-nibble W4 storage)."""
     if isinstance(w, LowRankQ):
         return (w.w1.shape[0], w.w2.shape[1])
     if isinstance(w, QuantizedTensor):
-        return tuple(w.values.shape)
+        return tuple(w.shape)
     return tuple(w.shape)
 
 

@@ -9,7 +9,7 @@ except ImportError:
     from hypothesis_fallback import given, settings, strategies as st
 
 from repro.core.itera import (
-    itera_decompose, reconstruction_error, svd_decompose,
+    LowRankQ, itera_decompose, reconstruction_error, svd_decompose,
 )
 from repro.core.quant import quantize
 
@@ -94,7 +94,31 @@ def test_nops_and_storage():
     w = lowrankish(jax.random.PRNGKey(5), 64, 64)
     lr = itera_decompose(w, 16, 4)
     assert lr.nops(8) == 8 * 16 * (64 + 64)
-    assert lr.storage_bits() == (64 * 16 + 16 * 64) * 4 + 2 * 16 * 32
+    # decompose emits int8 carriers: resident cost is 8 bits/code until
+    # the factors are packed (compress_params does this for W4 plans)
+    assert lr.storage_bits() == (64 * 16 + 16 * 64) * 8 + 2 * 16 * 32
+    from repro.core.quant import pack_weights
+    packed = LowRankQ(pack_weights(lr.w1), pack_weights(lr.w2))
+    assert packed.rank == 16 and packed.w1.shape == (64, 16)
+    assert packed.storage_bits() == (64 * 16 + 16 * 64) * 4 + 2 * 16 * 32
+
+
+def test_truncate_preserves_aux_and_rejects_packed():
+    """truncate keeps act_wl (an A4 plan must not silently become A8)
+    and refuses packed factors (packing happens after rank selection)."""
+    import dataclasses
+    from repro.core.itera import truncate
+    from repro.core.quant import pack_weights
+
+    w = lowrankish(jax.random.PRNGKey(6), 64, 64)
+    lr = itera_decompose(w, 16, 4)
+    lr_a4 = LowRankQ(dataclasses.replace(lr.w1, act_wl=4),
+                     dataclasses.replace(lr.w2, act_wl=4))
+    t = truncate(lr_a4, 8)
+    assert t.rank == 8 and t.w1.act_wl == 4 and t.w2.act_wl == 4
+    packed = LowRankQ(pack_weights(lr.w1), pack_weights(lr.w2))
+    with pytest.raises(ValueError, match="carrier-layout"):
+        truncate(packed, 8)
 
 
 def test_outlier_capture():

@@ -70,7 +70,9 @@ def test_compressed_model_runs(method):
     cp, report = compress_params(
         params, CompressionConfig(method=method, weight_wl=6,
                                   rank_fraction=0.6))
-    assert report.compression_ratio > 4.0
+    # honest resident accounting: W6 has no byte-aligned packing, so it
+    # stays an int8 carrier and a quant-only W6 model lands just under 4x
+    assert report.compression_ratio > 3.5
     batch, inputs = make_batch(cfg, key)
     loss, _ = loss_fn(cp, batch, cfg)
     assert np.isfinite(float(loss))

@@ -9,7 +9,8 @@ except ImportError:
     from hypothesis_fallback import given, settings, strategies as st
 
 from repro.core.quant import (
-    fake_quant, pack_int4, qmax, quant_linear_ref, quantize, unpack_int4,
+    fake_quant, pack_int4, pack_weights, packable, qmax, quant_linear_ref,
+    quantize, unpack_int4, unpack_weights,
 )
 
 settings.register_profile("ci", max_examples=25, deadline=None)
@@ -82,17 +83,60 @@ def test_quant_linear_ref_shapes():
     assert rel < 0.05
 
 
-@given(st.integers(1, 12), st.integers(1, 12))
-def test_pack_unpack_int4(r, c):
-    rng = np.random.default_rng(0)
+@given(st.integers(1, 12), st.integers(1, 12), st.integers(0, 2**31 - 1))
+def test_pack_unpack_int4(r, c, seed):
+    rng = np.random.default_rng(seed)
     codes = rng.integers(-8, 8, size=(r, 2 * c)).astype(np.int8)
     packed = pack_int4(jnp.asarray(codes))
     assert packed.shape == (r, c)
+    assert packed.dtype == jnp.int8
     out = unpack_int4(packed)
     np.testing.assert_array_equal(np.asarray(out), codes)
 
 
+def test_pack_unpack_int4_exhaustive_range():
+    """Every one of the 256 (lo, hi) nibble pairs round-trips exactly —
+    the full int4 code range [-8, 7] in both byte halves."""
+    lo, hi = np.meshgrid(np.arange(-8, 8), np.arange(-8, 8))
+    codes = np.stack([lo.ravel(), hi.ravel()], axis=-1).astype(np.int8)
+    out = unpack_int4(pack_int4(jnp.asarray(codes)))
+    np.testing.assert_array_equal(np.asarray(out), codes)
+
+
+def test_pack_int4_rejects_odd_last_dim():
+    with pytest.raises(ValueError, match="even last dim"):
+        pack_int4(jnp.zeros((4, 5), jnp.int8))
+
+
+@given(matrix())
+def test_pack_weights_roundtrip(w):
+    """pack_weights/unpack_weights is exact and dequant-invariant on any
+    W4 tensor with an even last dim; odd dims and W6/W8 stay carriers."""
+    q = quantize(jnp.asarray(w), 4, axis=0)
+    if w.shape[-1] % 2:
+        assert not packable(q) and pack_weights(q) is q
+        return
+    p = pack_weights(q)
+    assert p.packed and p.shape == q.shape
+    assert p.values.shape[-1] == w.shape[-1] // 2
+    back = unpack_weights(p)
+    np.testing.assert_array_equal(np.asarray(back.values),
+                                  np.asarray(q.values))
+    np.testing.assert_array_equal(np.asarray(p.dequant()),
+                                  np.asarray(q.dequant()))
+
+
 def test_storage_bits_accounting():
+    """storage_bits reports RESIDENT bytes: an unpacked W4 tensor still
+    occupies a full int8 carrier (8 bits/code); packing halves it to the
+    true 4; W6 has no byte-aligned packing and stays at 8."""
     w = jnp.ones((64, 32))
     q = quantize(w, 4, axis=0)
-    assert q.storage_bits() == 64 * 32 * 4 + 32 * 32
+    assert q.storage_bits() == 64 * 32 * 8 + 32 * 32
+    p = pack_weights(q)
+    assert p.packed and p.values.shape == (64, 16)
+    assert p.shape == (64, 32)
+    assert p.storage_bits() == 64 * 32 * 4 + 32 * 32
+    q6 = quantize(w, 6, axis=0)
+    assert pack_weights(q6) is q6          # carrier-resident, honest 8 bits
+    assert q6.storage_bits() == 64 * 32 * 8 + 32 * 32

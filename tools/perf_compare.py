@@ -70,33 +70,67 @@ GROUPS = [
 ]
 
 
+_V1_PREFIXES = ("kernel_qmm_interp_", "kernel_lrmm_interp_",
+                "kernel_qmm_tpu_model_", "kernel_lrmm_tpu_model_")
+
+
+def _v1_name(name):
+    """Map a v1 row name onto its v2 equivalent. v1 rows carried no
+    word-length tag and were all W8 (W4 rows are new in v2), so
+    kernel_qmm_interp_paper512 -> kernel_qmm_interp_W8_paper512; without
+    this the v1-vs-v2 diff would silently join nothing."""
+    for p in _V1_PREFIXES:
+        if name.startswith(p):
+            return f"{p}W8_{name[len(p):]}"
+    return name
+
+
 def load_kernels(path):
-    """{row name: us_per_call} from a kernels_bench BENCH_kernels.json."""
+    """{row name: (us_per_call, hbm_mb | None)} from a kernels_bench
+    BENCH_kernels.json. v1 files (no bytes-moved column, untagged W8 row
+    names) still load and diff against v2: names are normalized and
+    hbm_mb prints as '-'."""
     rec = json.load(open(path))
-    if rec.get("schema") != "kernels_bench/v1":
-        raise SystemExit(f"{path}: not a kernels_bench/v1 file")
-    return {r["name"]: float(r["us_per_call"]) for r in rec["rows"]}
+    schema = rec.get("schema")
+    if schema not in ("kernels_bench/v1", "kernels_bench/v2"):
+        raise SystemExit(f"{path}: not a kernels_bench file "
+                         f"(schema={schema!r})")
+    rename = _v1_name if schema == "kernels_bench/v1" else (lambda n: n)
+    return {rename(r["name"]): (float(r["us_per_call"]),
+                                None if r.get("hbm_mb") is None
+                                else float(r["hbm_mb"]))
+            for r in rec["rows"]}
+
+
+def _fmt(v, spec=".3f"):
+    return "-" if v is None else format(v, spec)
+
+
+def _delta(b, n):
+    if b is None or n is None or b == 0:
+        return "-"
+    return f"{100 * (n - b) / b:+.1f}%"
 
 
 def kernels_table(base_path, new_path=None):
     base = load_kernels(base_path)
     new = load_kernels(new_path) if new_path else None
     if new is None:
-        print("| kernel | us/call |")
-        print("|---|--:|")
-        for name, us in base.items():
-            print(f"| {name} | {us:.3f} |")
+        print("| kernel | us/call | HBM MiB/call |")
+        print("|---|--:|--:|")
+        for name, (us, mb) in base.items():
+            print(f"| {name} | {us:.3f} | {_fmt(mb)} |")
         return
-    print(f"| kernel | {os.path.basename(base_path)} "
-          f"| {os.path.basename(new_path)} | delta |")
-    print("|---|--:|--:|--:|")
+    print(f"| kernel | {os.path.basename(base_path)} us "
+          f"| {os.path.basename(new_path)} us | us delta "
+          f"| HBM MiB old | HBM MiB new | HBM delta |")
+    print("|---|--:|--:|--:|--:|--:|--:|")
     for name in sorted(set(base) | set(new)):
-        b, n = base.get(name), new.get(name)
-        if b is None or n is None:
-            print(f"| {name} | {b if b is not None else '-'} "
-                  f"| {n if n is not None else '-'} | - |")
-            continue
-        print(f"| {name} | {b:.3f} | {n:.3f} | {100 * (n - b) / b:+.1f}% |")
+        b_us, b_mb = base.get(name, (None, None))
+        n_us, n_mb = new.get(name, (None, None))
+        print(f"| {name} | {_fmt(b_us)} | {_fmt(n_us)} "
+              f"| {_delta(b_us, n_us)} | {_fmt(b_mb)} | {_fmt(n_mb)} "
+              f"| {_delta(b_mb, n_mb)} |")
 
 
 # (metric label, path into BENCH_serving.json, unit scale)
