@@ -18,10 +18,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from common import csv_row, timed
+from repro.configs.base import ModelConfig
 from repro.core.itera import LowRankQ, svd_decompose
 from repro.core.quant import pack_weights, quantize
 from repro.hw import tpu_model as tm
 from repro.kernels import ops
+from repro.kernels import paged_attention as pa
+from repro.models import attention as mattn
 
 
 def main(argv=None):
@@ -58,20 +61,33 @@ def main(argv=None):
         lr4f = svd_decompose(w, r, 4)
         lr4 = LowRankQ(pack_weights(lr4f.w1), pack_weights(lr4f.w2))
 
+        qmm_mb = {}
         for wl, wq in ((8, wq8), (4, wq4)):
             tag = f"W{wl}" + ("_packed" if wq.packed else "")
             dt, _ = timed(lambda: ops.qmm(x, wq, use_kernel=True,
                                           interpret=True), iters=1)
+            qmm_mb[wl] = ops.qmm_hbm_bytes(m, wq) / 2**20
             record(f"kernel_qmm_interp_{tag}_{name}", dt * 1e6,
-                   f"M={m};K={k};N={n}",
-                   hbm_mb=ops.qmm_hbm_bytes(m, wq) / 2**20)
+                   f"M={m};K={k};N={n}", hbm_mb=qmm_mb[wl])
+        lrmm_mb = {}
         for wl, lr in ((8, lr8), (4, lr4)):
-            tag = f"W{wl}" + ("_packed" if lr.w1.packed else "")
+            # a factor whose pack axis would pad-inflate stays carrier
+            # (core.quant.packable); the row is "packed" if any factor is
+            tag = f"W{wl}" + ("_packed" if (lr.w1.packed or lr.w2.packed)
+                              else "")
             dt, _ = timed(lambda: ops.lrmm(x, lr, use_kernel=True,
                                            interpret=True), iters=1)
+            lrmm_mb[wl] = ops.lrmm_hbm_bytes(m, lr) / 2**20
             record(f"kernel_lrmm_interp_{tag}_{name}", dt * 1e6,
-                   f"M={m};K={k};N={n};R={r}",
-                   hbm_mb=ops.lrmm_hbm_bytes(m, lr) / 2**20)
+                   f"M={m};K={k};N={n};R={r}", hbm_mb=lrmm_mb[wl])
+        # packing must never lose to its own carrier: the W4 launch (with
+        # ops.packed_pad_ok demoting pad-inflating axes) streams at most
+        # the W8 bytes. Tracked here so a choose_blocks / padding change
+        # that reintroduces the old lrmm paper512 regression (packed
+        # rp->256 padding costing more than the nibble halving saved)
+        # fails the bench, not just a note in a JSON diff.
+        assert qmm_mb[4] <= qmm_mb[8] + 1e-9, (name, qmm_mb)
+        assert lrmm_mb[4] <= lrmm_mb[8] + 1e-9, (name, lrmm_mb)
         dt, _ = timed(lambda: ops.qmm(x, wq8, use_kernel=False), iters=3)
         record(f"kernel_qmm_ref_{name}", dt * 1e6, "jnp-reference")
 
@@ -87,6 +103,79 @@ def main(argv=None):
             record(f"kernel_lrmm_tpu_model_W{wl}_{name}", cp.latency_s * 1e6,
                    f"bound={'compute' if cp.compute_s >= cp.memory_s else 'memory'};"
                    f"speedup_vs_dense={bp.latency_s / cp.latency_s:.2f}x")
+
+    # ---- paged serving attention: streamed kernel vs jnp gather oracle ----
+    # Same mixed span batch (chunk + decode + idle rows, GQA) against the
+    # same blocked KV pool; short vs long context shows the point of the
+    # kernel — its bytes scale with ctx_lens while the gather path reads
+    # the full MB*bs logical view either way.
+    B, W, hk, g, dh, bs, mb = 4, 8, 4, 2, 64, 16, 16
+    h = hk * g
+    cfg_attn = ModelConfig(name="bench-attn", d_model=h * dh, num_heads=h,
+                           num_kv_heads=hk, head_dim=dh, dtype="bfloat16")
+    q_lens = [8, 1, 0, 8]                       # chunk, decode, idle, chunk
+    ctx_cases = {"short": [40, 17, 0, 9], "long": [216, 230, 0, 188]}
+    for cname, ctx in ctx_cases.items():
+        ctx_a = jnp.asarray(ctx, jnp.int32)
+        ql_a = jnp.asarray(q_lens, jnp.int32)
+        bt = np.zeros((B, mb), np.int32)
+        nxt = 1                                 # block 0 = reserved trash
+        for r in range(B):
+            need = -(-(ctx[r] + q_lens[r]) // bs)
+            bt[r, :need] = np.arange(nxt, nxt + need)
+            nxt += need
+        bt_a = jnp.asarray(bt)
+        nb_pool = B * mb + 1
+        ks = jax.random.split(jax.random.PRNGKey(7), 3)
+        q = jax.random.normal(ks[0], (B, W, h, dh), jnp.bfloat16)
+        for kv_bits, tag in ((16, "bf16kv"), (8, "int8kv")):
+            if kv_bits == 8:
+                pool_l = {
+                    "k": jax.random.randint(ks[1], (nb_pool, bs, hk, dh),
+                                            -127, 128).astype(jnp.int8),
+                    "v": jax.random.randint(ks[2], (nb_pool, bs, hk, dh),
+                                            -127, 128).astype(jnp.int8),
+                    "ks": jnp.ones((nb_pool, bs, hk, 1), jnp.float32) * 0.02,
+                    "vs": jnp.ones((nb_pool, bs, hk, 1), jnp.float32) * 0.02,
+                }
+            else:
+                pool_l = {
+                    "k": jax.random.normal(ks[1], (nb_pool, bs, hk, dh),
+                                           jnp.bfloat16),
+                    "v": jax.random.normal(ks[2], (nb_pool, bs, hk, dh),
+                                           jnp.bfloat16),
+                }
+            geom = f"B={B};W={W};Hk={hk};G={g};Dh={dh};bs={bs};MB={mb}"
+            stream_mb = pa.stream_hbm_bytes(ctx, q_lens, bs, hk, dh,
+                                            kv_bits=kv_bits,
+                                            n_q_heads=h) / 2**20
+            gather_mb = pa.gather_hbm_bytes(B, mb, bs, hk, dh,
+                                            kv_bits=kv_bits, w=W,
+                                            n_q_heads=h) / 2**20
+            dt, _ = timed(lambda: pa.paged_attention(
+                q, pool_l, bt_a, ctx_a, ql_a, interpret=True), iters=1)
+            record(f"kernel_pattn_interp_{tag}_{cname}_ctx", dt * 1e6,
+                   geom, hbm_mb=stream_mb)
+            pos = ctx_a[:, None] + jnp.arange(W)[None, :]
+            dt, _ = timed(lambda: mattn._span_attend_gather(
+                q, pool_l, bt_a, pos, cfg_attn), iters=1)
+            record(f"kernel_pattn_gather_{tag}_{cname}_ctx", dt * 1e6,
+                   "jnp-gather-oracle", hbm_mb=gather_mb)
+            # the acceptance bar: streamed bytes scale with ctx and stay
+            # strictly below the gather whenever ctx < pool capacity
+            assert stream_mb < gather_mb, (cname, tag, stream_mb, gather_mb)
+            sp = tm.paged_attention_point(
+                ctx, q_lens, num_kv_heads=hk, head_dim=dh, num_heads=h,
+                block_size=bs, max_blocks=mb, kv_bits=kv_bits,
+                streamed=True)
+            gp = tm.paged_attention_point(
+                ctx, q_lens, num_kv_heads=hk, head_dim=dh, num_heads=h,
+                block_size=bs, max_blocks=mb, kv_bits=kv_bits,
+                streamed=False)
+            record(f"kernel_pattn_tpu_model_{tag}_{cname}_ctx",
+                   sp.latency_s * 1e6,
+                   f"bound={'compute' if sp.compute_s >= sp.memory_s else 'memory'};"
+                   f"speedup_vs_gather={gp.latency_s / sp.latency_s:.2f}x")
 
     with open(args.out, "w") as f:
         json.dump({"schema": "kernels_bench/v2",

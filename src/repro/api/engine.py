@@ -253,14 +253,20 @@ class InferenceEngine:
     def build(cls, arch, plan=None, *, mesh=None, params=None,
               smoke: bool = False, seed: int = 0, verbose: bool = False,
               max_batch: int = 8, block_size: int = 16,
-              chunk_tokens: int = 256) -> "InferenceEngine":
+              chunk_tokens: int = 256,
+              paged_attn: str | None = None) -> "InferenceEngine":
         """arch: config name (see repro.configs) or a ModelConfig.
         plan: CompressionPlan | legacy CompressionConfig | None (dense).
         params: pre-trained weights; freshly initialized when omitted.
         mesh: optional jax Mesh — weights are placed per launch.sharding.
         max_batch / block_size / chunk_tokens: serving defaults for
-        serve() — batch rows, KV block size, per-step token budget."""
+        serve() — batch rows, KV block size, per-step token budget.
+        paged_attn: override cfg.paged_attn_impl for the serving
+        attention backend — "auto" (Pallas kernel on TPU, jnp gather
+        oracle on CPU), "kernel", or "ref"."""
         cfg = get_config(arch, smoke=smoke) if isinstance(arch, str) else arch
+        if paged_attn is not None:
+            cfg = dataclasses.replace(cfg, paged_attn_impl=paged_attn)
         if params is None:
             params = tfm.init_params(jax.random.PRNGKey(seed), cfg)
 

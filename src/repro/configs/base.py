@@ -54,6 +54,14 @@ class ModelConfig:
     pos_emb: str = "rope"                   # rope | sinusoidal | none
     attn_impl: str = "auto"                 # auto | full | chunked
     attn_chunk: int = 1024                  # KV block for chunked attention
+    # serving attention over the blocked KV pool (span_attention_paged):
+    # "kernel" = Pallas paged-attention (block-table DMA walk, online
+    # softmax, in-kernel int8-KV dequant); "ref" = the jnp gather oracle;
+    # "auto" = kernel on TPU, oracle on CPU (same dispatch rule as the
+    # matmul kernels — interpret-mode Pallas inside the big jitted step
+    # would bloat the HLO for tests while the TPU path gets the O(ctx)
+    # streaming win).
+    paged_attn_impl: str = "auto"           # auto | kernel | ref
 
     # MLP flavor
     mlp_act: str = "swiglu"                 # swiglu | relu2 | gelu | geglu

@@ -179,8 +179,9 @@ def eligible_linears(
 def _runtime_format(node, act_wl: int, pack: bool):
     """Stamp the plan's runtime knobs onto a compressed node: the
     activation word length its matmul quantizes to, and — for W4 with an
-    even last dim — the packed-nibble HBM layout. Packing is exact (codes
-    unchanged), so packed and carrier trees are token-identical."""
+    even, non-pad-inflating last dim (`quant.packable`) — the
+    packed-nibble HBM layout. Packing is exact (codes unchanged), so
+    packed and carrier trees are token-identical."""
     def one(q: QuantizedTensor) -> QuantizedTensor:
         q = dataclasses.replace(q, act_wl=act_wl)
         return pack_weights(q) if pack else q

@@ -168,19 +168,36 @@ def unpack_int4(packed: Array) -> Array:
     return out.reshape(*packed.shape[:-1], packed.shape[-1] * 2)
 
 
+def packed_pad_ok(dim: int) -> bool:
+    """Whether nibble-packing a `dim`-wide axis is free of padding
+    inflation in the Pallas kernels: a packed half-width must stay
+    128-lane aligned, so a packed axis pads to a multiple of 256 where
+    its int8 carrier pads to 128. When the two round-ups differ (dim %
+    256 in 1..128 — e.g. a rank-128 cascade factor, or the smoke model's
+    64-wide heads), packing buys nothing at runtime: the kernel streams
+    the same padded bytes as the carrier but runs double the padded MXU
+    work (the old `kernel_lrmm_interp_W4_packed_paper512` regression).
+    Such axes stay int8 carriers — `packable` gates on this, so the
+    decision is made ONCE at pack time, not paid per dispatch."""
+    return -(-dim // 256) * 256 == -(-dim // 128) * 128
+
+
 def packable(q: QuantizedTensor) -> bool:
     """True when `q` can move to the packed-nibble layout: W4 codes (the
-    only word length whose packing is byte-aligned) with an even last dim,
-    not already packed."""
+    only word length whose packing is byte-aligned) with an even last
+    dim whose packed padding does not exceed its carrier's
+    (`packed_pad_ok`), not already packed."""
     return (not q.packed and q.wl == 4
-            and int(q.values.shape[-1]) % 2 == 0)
+            and int(q.values.shape[-1]) % 2 == 0
+            and packed_pad_ok(int(q.values.shape[-1])))
 
 
 def pack_weights(q: QuantizedTensor) -> QuantizedTensor:
     """Move a W4 tensor to the packed HBM-resident layout (exact: the
     codes are unchanged, only the byte layout differs). Non-packable
-    tensors (W6/W8, odd last dim) are returned as-is — they stay int8
-    carriers and `storage_bits()` charges them the full 8 bits."""
+    tensors (W6/W8, odd last dim, pad-inflating last dim) are returned
+    as-is — they stay int8 carriers and `storage_bits()` charges them
+    the full 8 bits."""
     if not packable(q):
         return q
     return dataclasses.replace(q, values=pack_int4(q.values), packed=True)

@@ -11,6 +11,10 @@ Engines:
   baseline — dense WxA8 matmul (kernels/quant_matmul)
   single   — unfused low-rank: two matmul launches, T round-trips HBM
   cascade  — fused low-rank (kernels/lowrank_qmm): T pinned in VMEM
+  pattn_*  — serving attention over the blocked KV pool
+             (paged_attention_point): the Pallas streaming kernel vs the
+             jnp gather oracle, so the model prices the KV-bandwidth term
+             of decode, not just the linear layers
 
 The DSE (hw/dse.py) sweeps block shapes under the VMEM constraint and
 bandwidth scalings (the paper's Fig. 10/11 bandwidth-limited axis).
@@ -19,6 +23,7 @@ from __future__ import annotations
 
 import dataclasses
 
+from repro.core.quant import packed_pad_ok
 from repro.kernels.lowrank_qmm import vmem_bytes as lr_vmem
 from repro.kernels.quant_matmul import vmem_bytes as qm_vmem
 from repro.launch.mesh import HBM_BW, PEAK_OPS_INT8, VMEM_BYTES
@@ -58,27 +63,39 @@ def _packed(weight_wl: int) -> bool:
     return weight_wl == 4
 
 
-def blocks_feasible(b: Blocks, weight_wl: int) -> bool:
+def blocks_feasible(b: Blocks, weight_wl: int, n: int | None = None) -> bool:
     """Whether the packed kernels accept these blocks: a packed weight's
     N half-block must stay 128-lane aligned, so bn % 256 == 0 (the same
     constraint ops.choose_blocks enforces and quant_matmul asserts). The
-    model must not rank configurations the kernels reject."""
-    return not _packed(weight_wl) or b.bn % 256 == 0
+    model must not rank configurations the kernels reject. When the N
+    axis is known and packing it would pad fatter than its carrier
+    (ops.packed_pad_ok false), the dispatch demotes the weight to a
+    carrier and any 128-aligned bn is acceptable."""
+    if not _packed(weight_wl):
+        return True
+    if n is not None and not packed_pad_ok(n):
+        return True
+    return b.bn % 256 == 0
 
 
 def dense_engine(m, k, n, b: Blocks, *, weight_wl=8, act_wl=8,
                  hbm_bw=HBM_BW) -> TpuPoint:
+    # W4 streams packed only when the N axis pads no fatter packed than
+    # carrier (ops.packed_pad_ok) — otherwise ops.qmm demotes to an int8
+    # carrier and the model must price what actually streams
+    w_packed = _packed(weight_wl) and packed_pad_ok(n)
     mp, kp, np_ = _pad(m, b.bm), _pad(k, b.bk), _pad(n, b.bn)
     macs = mp * kp * np_
     compute = 2 * macs / (PEAK_OPS_INT8 * _mxu_util(b.bm, b.bk, b.bn))
     # HBM: X once per N-panel pass? output-stationary grid: X blocks stream
     # once per (i,j) row — X re-read N/bn times, W re-read once per i.
     hbm = (mp * kp * _act_bytes(act_wl) * (np_ // b.bn)
-           + kp * np_ * (mp // b.bm) * _wl_bytes(weight_wl)
+           + kp * np_ * (mp // b.bm)
+           * (_wl_bytes(weight_wl) if w_packed else 1.0)
            + mp * np_ * 4)
     memory = hbm / hbm_bw
     return TpuPoint("baseline", max(compute, memory), compute, memory, hbm,
-                    qm_vmem(b.bm, b.bk, b.bn, w_packed=_packed(weight_wl)),
+                    qm_vmem(b.bm, b.bk, b.bn, w_packed=w_packed),
                     {"blocks": dataclasses.asdict(b)})
 
 
@@ -102,20 +119,28 @@ def cascade_engine(m, k, n, r, b: Blocks, *, weight_wl=8, act_wl=8,
     """Fused kernel: T lives in VMEM; W1 re-read once per M-block row, W2
     once per M-block; X once."""
     packed = _packed(weight_wl)
-    # a packed W1 pads R to a multiple of 256 (half-width lane alignment,
-    # mirroring ops.lrmm) — the model pays that padding like the kernel does
-    rp = _pad(r, 256 if packed else 128)
+    # a factor packs only along an axis where packing pads no fatter
+    # than the carrier (ops.packed_pad_ok; W1 packs along R, W2 along N)
+    # — otherwise ops.lrmm demotes it to an int8 carrier up front, so
+    # the model prices a carrier (1.0 B/elt, carrier padding) rather
+    # than charging doubled padded MACs for halved bytes the kernel
+    # never streams
+    w1_packed = packed and packed_pad_ok(r)
+    w2_packed = packed and packed_pad_ok(n)
+    rp = _pad(r, 256 if w1_packed else 128)
     mp, kp, np_ = _pad(m, b.bm), _pad(k, b.bk), _pad(n, b.bn)
     macs = mp * kp * rp + mp * rp * np_
     compute = 2 * macs / (PEAK_OPS_INT8 * _mxu_util(b.bm, b.bk, b.bn))
     hbm = (mp * kp * _act_bytes(act_wl)            # X once
-           + kp * rp * (mp // b.bm) * _wl_bytes(weight_wl)   # W1 per row
-           + rp * np_ * (mp // b.bm) * _wl_bytes(weight_wl)  # W2 per row
+           + kp * rp * (mp // b.bm)
+           * (_wl_bytes(weight_wl) if w1_packed else 1.0)    # W1 per row
+           + rp * np_ * (mp // b.bm)
+           * (_wl_bytes(weight_wl) if w2_packed else 1.0)    # W2 per row
            + mp * np_ * 4)                         # Y out f32
     memory = hbm / hbm_bw
     return TpuPoint("cascade", max(compute, memory), compute, memory, hbm,
-                    lr_vmem(b.bm, b.bk, b.bn, rp, w1_packed=packed,
-                            w2_packed=packed),
+                    lr_vmem(b.bm, b.bk, b.bn, rp, w1_packed=w1_packed,
+                            w2_packed=w2_packed),
                     {"blocks": dataclasses.asdict(b), "rank": r})
 
 
@@ -137,6 +162,59 @@ def _act_bytes(wl: int) -> float:
     return 1.0
 
 
+# ------------------------------------------------------ paged attention --
+def paged_attention_point(ctx_lens, q_lens, *, num_kv_heads, head_dim,
+                          num_heads=None, block_size=16, max_blocks=None,
+                          kv_bits=16, streamed=True,
+                          hbm_bw=HBM_BW) -> TpuPoint:
+    """Price one serving-attention step over the blocked KV pool, so the
+    DSE / bytes-moved accounting sees attention — the dominant decode
+    term — and not just the linear layers.
+
+    streamed=True models the Pallas paged-attention kernel: each active
+    row DMAs exactly its ceil((ctx+q)/block_size) valid KV blocks, int8
+    KV moves 1 B/element + f32 scale planes (dequantized in VMEM, never
+    materialized in HBM). streamed=False models the jnp gather oracle:
+    every row reads its FULL max_blocks·block_size logical view
+    regardless of ctx, and int8 KV additionally round-trips a dense
+    dequantized view at compute dtype. Compute is the QK^T + PV MACs over
+    each path's own key window: the streamed kernel touches only valid
+    blocks, while the gather path is charged the full max_blocks window
+    it really runs the einsum over (masked-out slots still multiply) —
+    so the gather point costs more in BOTH terms. Attention at serving
+    widths is overwhelmingly memory-bound either way, which is what this
+    point exists to show.
+    """
+    from repro.kernels import paged_attention as pa
+
+    hk, dh = num_kv_heads, head_dim
+    h = num_heads or hk
+    ctx_lens = [int(c) for c in ctx_lens]
+    q_lens = [int(q) for q in q_lens]
+    if max_blocks is None:
+        max_blocks = max((-(-(c + q) // block_size)
+                          for c, q in zip(ctx_lens, q_lens)), default=1)
+    if streamed:
+        hbm = pa.stream_hbm_bytes(ctx_lens, q_lens, block_size, hk, dh,
+                                  kv_bits=kv_bits, n_q_heads=h)
+        keys = [(-(-(c + q) // block_size)) * block_size
+                for c, q in zip(ctx_lens, q_lens) if q > 0]
+    else:
+        hbm = pa.gather_hbm_bytes(len(ctx_lens), max_blocks, block_size,
+                                  hk, dh, kv_bits=kv_bits,
+                                  w=max(q_lens, default=1), n_q_heads=h)
+        keys = [max_blocks * block_size
+                for q in q_lens if q > 0]
+    w = max(q_lens, default=1)
+    macs = sum(2 * w * (h // hk) * hk * dh * s for s in keys)  # QK^T + PV
+    compute = 2 * macs / (PEAK_OPS_INT8 * _mxu_util(w * (h // hk), dh, 128))
+    memory = hbm / hbm_bw
+    kind = "pattn_stream" if streamed else "pattn_gather"
+    return TpuPoint(kind, max(compute, memory), compute, memory, hbm, 0,
+                    {"block_size": block_size, "max_blocks": max_blocks,
+                     "kv_bits": kv_bits, "rows": len(ctx_lens)})
+
+
 def block_space(max_bm=512):
     for bm in (8, 16, 32, 64, 128, 256, 512):
         if bm > max_bm:
@@ -152,7 +230,7 @@ def best_point(m, k, n, r=None, *, weight_wl=8, act_wl=8, hbm_bw=HBM_BW,
     """Lowest-latency feasible engine+blocks for one layer."""
     best = None
     for b in block_space(max_bm=max(8, min(512, _pad(m, 8)))):
-        if not blocks_feasible(b, weight_wl):
+        if not blocks_feasible(b, weight_wl, n):
             continue
         cands = []
         if "baseline" in engines:

@@ -24,7 +24,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.itera import LowRankQ
-from repro.core.quant import QuantizedTensor, qmax, unpack_int4
+from repro.core.quant import (
+    QuantizedTensor, packed_pad_ok, qmax, unpack_int4,
+)
 from repro.kernels import lowrank_qmm as _lr
 from repro.kernels import quant_matmul as _qm
 from repro.kernels import ref as _ref
@@ -49,6 +51,16 @@ def quantize_acts(x: jax.Array, qm: int = 127):
     return xq, sx
 
 
+# Pad-inflating pack axes (core.quant.packed_pad_ok false — e.g. the
+# paper512 cascade's R=128, once `kernel_lrmm_interp_W4_packed_paper512`'s
+# 11297us-vs-6379us regression) are refused at PACK time: compress_params
+# stores them as int8 carriers, so the dispatchers below normally never
+# see them. The demotion branches in qmm/lrmm are a fallback for
+# hand-built packed tensors only — they unpack per call (exact, so still
+# bit-identical), and the *_hbm_bytes models charge that unpack
+# round-trip so the benchmark's packed<=carrier assert stays honest.
+
+
 def choose_blocks(m: int, k: int, n: int, r: int | None = None,
                   budget: int = VMEM_BUDGET, *,
                   packed_n: bool = False, packed_r: bool = False):
@@ -60,7 +72,9 @@ def choose_blocks(m: int, k: int, n: int, r: int | None = None,
     nibble-packed, so bn stays >= 256 (the packed half-block must remain
     lane-aligned) and the working set counts the unpack temp. packed_r:
     the cascade's W1 is packed along R (affects only the vmem model; R is
-    never tiled).
+    never tiled). Callers must only set packed_* for axes where
+    `packed_pad_ok` holds — qmm/lrmm demote the rest to carrier first —
+    so the bn_floor=256 constraint never inflates a small-N/R launch.
     """
     bn_floor = 256 if packed_n else 128
     bm = min(_round_up(m, 8), 256)
@@ -125,14 +139,17 @@ def qmm(
         y = _ref.quant_matmul_ref(xq, sx, wv, sw)
         return y.astype(out_dtype).reshape(*lead, n)
 
-    bm, bk, bn = blocks or choose_blocks(m, k, n, packed_n=w.packed)
+    w_packed, wval = w.packed, w.values
+    if w_packed and not packed_pad_ok(n):
+        wval, w_packed = unpack_int4(wval), False  # exact; see packed_pad_ok
+    bm, bk, bn = blocks or choose_blocks(m, k, n, packed_n=w_packed)
     mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
-    wv = _pad2(w.values, kp, np_ // 2 if w.packed else np_)
+    wv = _pad2(wval, kp, np_ // 2 if w_packed else np_)
     y = _qm.quant_matmul(
         _pad2(xq, mp, kp), _pad2(sx, mp, 1),
         wv, _pad2(sw, 1, np_),
         bm=bm, bk=bk, bn=bn, out_dtype=out_dtype, interpret=interpret,
-        w_packed=w.packed,
+        w_packed=w_packed,
     )[:m, :n]
     return y.reshape(*lead, n)
 
@@ -178,47 +195,57 @@ def lrmm(
         y = _ref.lowrank_qmm_ref(xq, sx, w1v, s1, w2v, s2, act_qm)
         return y.astype(out_dtype).reshape(*lead, n)
 
+    # demote packed factors whose axis would pad fatter than its carrier
+    # (exact nibble unpack; see packed_pad_ok) — W1 packs along R, W2
+    # along N
+    w1_packed, w1v = lr.w1.packed, lr.w1.values
+    if w1_packed and not packed_pad_ok(r):
+        w1v, w1_packed = unpack_int4(w1v), False
+    w2_packed, w2v = lr.w2.packed, lr.w2.values
+    if w2_packed and not packed_pad_ok(n):
+        w2v, w2_packed = unpack_int4(w2v), False
+
     if not fused:
         # Single-engine schedule: T leaves the chip between the two
         # matmuls — and both phases run the Pallas kernel, so the engine
         # comparison bench measures kernel-vs-kernel, not ref-vs-kernel.
-        bm1, bk1, bn1 = choose_blocks(m, k, r, packed_n=lr.w1.packed)
+        bm1, bk1, bn1 = choose_blocks(m, k, r, packed_n=w1_packed)
         mp, kp = _round_up(m, bm1), _round_up(k, bk1)
         rp1 = _round_up(r, bn1)
         t = _qm.quant_matmul(
             _pad2(xq, mp, kp), _pad2(sx, mp, 1),
-            _pad2(lr.w1.values, kp, rp1 // 2 if lr.w1.packed else rp1),
+            _pad2(w1v, kp, rp1 // 2 if w1_packed else rp1),
             _pad2(s1, 1, rp1),
             bm=bm1, bk=bk1, bn=bn1, interpret=interpret,
-            w_packed=lr.w1.packed,
+            w_packed=w1_packed,
         )[:m, :r]
         t = t * s2.reshape(1, -1)
         tq, st = quantize_acts(t, act_qm)
-        bm, bk, bn = blocks or choose_blocks(m, r, n, packed_n=lr.w2.packed)
+        bm, bk, bn = blocks or choose_blocks(m, r, n, packed_n=w2_packed)
         mp, rp, np_ = _round_up(m, bm), _round_up(r, bk), _round_up(n, bn)
         y = _qm.quant_matmul(
             _pad2(tq, mp, rp), _pad2(st, mp, 1),
-            _pad2(lr.w2.values, rp, np_ // 2 if lr.w2.packed else np_),
+            _pad2(w2v, rp, np_ // 2 if w2_packed else np_),
             jnp.ones((1, np_), jnp.float32),
             bm=bm, bk=bk, bn=bn, out_dtype=out_dtype, interpret=interpret,
-            w_packed=lr.w2.packed,
+            w_packed=w2_packed,
         )[:m, :n]
         return y.reshape(*lead, n)
 
     # R is held whole in VMEM; a packed W1 needs rp // 2 lane-aligned.
-    rp = _round_up(r, 256 if lr.w1.packed else 128)
+    rp = _round_up(r, 256 if w1_packed else 128)
     bm, bk, bn = blocks or choose_blocks(m, k, n, rp,
-                                         packed_n=lr.w2.packed,
-                                         packed_r=lr.w1.packed)
+                                         packed_n=w2_packed,
+                                         packed_r=w1_packed)
     mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
     y = _lr.lowrank_qmm(
         _pad2(xq, mp, kp), _pad2(sx, mp, 1),
-        _pad2(lr.w1.values, kp, rp // 2 if lr.w1.packed else rp),
+        _pad2(w1v, kp, rp // 2 if w1_packed else rp),
         _pad2(jnp.pad(s1, ((0, 0), (0, rp - r)), constant_values=1.0), 1, rp),
-        _pad2(lr.w2.values, rp, np_ // 2 if lr.w2.packed else np_),
+        _pad2(w2v, rp, np_ // 2 if w2_packed else np_),
         _pad2(jnp.pad(s2, ((0, rp - r), (0, 0)), constant_values=1.0), rp, 1),
         bm=bm, bk=bk, bn=bn, out_dtype=out_dtype, interpret=interpret,
-        w1_packed=lr.w1.packed, w2_packed=lr.w2.packed, act_qmax=act_qm,
+        w1_packed=w1_packed, w2_packed=w2_packed, act_qmax=act_qm,
     )[:m, :n]
     return y.reshape(*lead, n)
 
@@ -227,23 +254,35 @@ def qmm_hbm_bytes(m: int, w: QuantizedTensor,
                   blocks: tuple | None = None) -> int:
     """Modeled HBM bytes one qmm(x, w) launch moves for an (m, K) input —
     the bytes-moved column in BENCH_kernels.json. Uses the same block
-    choice as the dispatch above, on the padded shapes."""
+    choice AND the same packed-axis demotion as the dispatch above, on
+    the padded shapes."""
     k, n = w.shape
-    bm, bk, bn = blocks or choose_blocks(m, k, n, packed_n=w.packed)
+    packed = w.packed and packed_pad_ok(n)
+    bm, bk, bn = blocks or choose_blocks(m, k, n, packed_n=packed)
     mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
-    return _qm.hbm_bytes_moved(mp, kp, np_, bm, bn, w_packed=w.packed)
+    total = _qm.hbm_bytes_moved(mp, kp, np_, bm, bn, w_packed=packed)
+    if w.packed and not packed:
+        total += k * n * 3 // 2     # fallback demotion: packed read + write
+    return total
 
 
 def lrmm_hbm_bytes(m: int, lr: LowRankQ,
                    blocks: tuple | None = None) -> int:
-    """Modeled HBM bytes one fused lrmm(x, lr) launch moves."""
+    """Modeled HBM bytes one fused lrmm(x, lr) launch moves (with the
+    dispatch's packed-axis demotion applied, so the model prices what
+    actually streams)."""
     k, r = lr.w1.shape
     _, n = lr.w2.shape
-    rp = _round_up(r, 256 if lr.w1.packed else 128)
+    w1p = lr.w1.packed and packed_pad_ok(r)
+    w2p = lr.w2.packed and packed_pad_ok(n)
+    rp = _round_up(r, 256 if w1p else 128)
     bm, bk, bn = blocks or choose_blocks(m, k, n, rp,
-                                         packed_n=lr.w2.packed,
-                                         packed_r=lr.w1.packed)
+                                         packed_n=w2p, packed_r=w1p)
     mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
-    return _lr.hbm_bytes_moved(mp, kp, np_, rp, bm,
-                               w1_packed=lr.w1.packed,
-                               w2_packed=lr.w2.packed)
+    total = _lr.hbm_bytes_moved(mp, kp, np_, rp, bm,
+                                w1_packed=w1p, w2_packed=w2p)
+    if lr.w1.packed and not w1p:
+        total += k * r * 3 // 2     # fallback demotion: packed read + write
+    if lr.w2.packed and not w2p:
+        total += r * n * 3 // 2
+    return total

@@ -67,6 +67,11 @@ def main(argv=None):
     ap.add_argument("--chunk-tokens", type=int, default=256,
                     help="continuous batching: per-step token budget split "
                          "between prefill chunks and decode tokens")
+    ap.add_argument("--paged-attn", default="auto",
+                    choices=["auto", "kernel", "ref"],
+                    help="serving attention over the blocked KV pool: "
+                         "Pallas paged-attention kernel vs jnp gather "
+                         "oracle (auto = kernel on TPU, oracle on CPU)")
     ap.add_argument("--ragged", action="store_true",
                     help="mixed-length demo: vary prompt lengths and serve "
                          "through the continuous-batching scheduler")
@@ -89,7 +94,8 @@ def main(argv=None):
     engine = InferenceEngine.build(cfg, plan, seed=args.seed, verbose=True,
                                    max_batch=args.max_batch,
                                    block_size=args.block_size,
-                                   chunk_tokens=args.chunk_tokens)
+                                   chunk_tokens=args.chunk_tokens,
+                                   paged_attn=args.paged_attn)
 
     task = pipeline.MarkovTask(cfg.vocab_size, seed=args.seed)
     prompts = task.batch(0, args.batch, args.prompt_len)["tokens"]

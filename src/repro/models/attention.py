@@ -9,6 +9,12 @@ Implementations:
     triangular (≈S²/2) instead of rectangular (S²). This is the pure-JAX
     flash-attention analog used by the 32k prefill dry-run cells.
 
+Serving attention over the blocked KV pool (`span_attention_paged`) has
+its own backend pair selected by `cfg.paged_attn_impl`: the Pallas
+paged-attention kernel (`kernels/paged_attention.py` — streams only
+valid blocks, dequantizes int8 KV in VMEM) and the jnp gather oracle
+(`_span_attend_gather`) it is identity-tested against.
+
 GQA: KV is stored at num_kv_heads and broadcast to the query heads at
 compute time (group-repeat), so cache memory stays at Hk while the einsum
 runs at H. Head axes shard over the "model" mesh axis.
@@ -222,8 +228,57 @@ def _fake_quant_kv(x):
     return (q.astype(jnp.float32) * scale).astype(x.dtype)
 
 
+def _paged_impl(cfg) -> str:
+    """Resolve cfg.paged_attn_impl: "auto" follows the matmul-kernel
+    dispatch rule — compiled Pallas on TPU, the jnp gather oracle on CPU
+    (interpret-mode Pallas inside the big jitted serving step would bloat
+    the HLO; the oracle is the numerics reference either way)."""
+    import jax as _jax
+
+    impl = getattr(cfg, "paged_attn_impl", "auto")
+    if impl == "auto":
+        return "kernel" if _jax.default_backend() == "tpu" else "ref"
+    if impl not in ("kernel", "ref"):
+        raise ValueError(f"paged_attn_impl must be auto|kernel|ref, "
+                         f"got {impl!r}")
+    return impl
+
+
+def _span_attend_gather(q, pool, block_table, pos, cfg):
+    """The jnp oracle: gather the FULL logical pool view
+    block_table -> (B, MB*bs, Hk, Dh) (dequantized whole in jnp when the
+    pool is int8) and run one masked softmax over it. O(MB*bs) HBM bytes
+    and a dense materialization regardless of ctx_lens — the cost the
+    Pallas kernel exists to delete; kept as the selectable reference."""
+    b, w = q.shape[:2]
+    hk, hd = cfg.num_kv_heads, cfg.head_dim
+    bs = pool["k"].shape[1]
+    mb = block_table.shape[1]
+    if "ks" in pool:
+        ck = (pool["k"][block_table].reshape(b, mb * bs, hk, hd)
+              .astype(q.dtype)
+              * pool["ks"][block_table].reshape(b, mb * bs, hk, 1)
+              .astype(q.dtype))
+        cv = (pool["v"][block_table].reshape(b, mb * bs, hk, hd)
+              .astype(q.dtype)
+              * pool["vs"][block_table].reshape(b, mb * bs, hk, 1)
+              .astype(q.dtype))
+    else:
+        ck = pool["k"][block_table].reshape(b, mb * bs, hk, hd).astype(q.dtype)
+        cv = pool["v"][block_table].reshape(b, mb * bs, hk, hd).astype(q.dtype)
+
+    # (B, W, S): query (r, i) sees slots at positions <= ctx_lens[r] + i
+    valid = jnp.arange(mb * bs)[None, None, :] <= pos[:, :, None]
+    qg = _group_q(q, hk)                                  # (B,W,Hk,G,Dh)
+    s = _scores(qg, ck, cfg.logit_softcap)                # (B,Hk,G,W,S)
+    s = jnp.where(valid[:, None, None, :, :], s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(cv.dtype), cv)
+    return o.reshape(b, w, cfg.num_heads, hd)
+
+
 def span_attention_paged(params, x, pool, block_table, ctx_lens, q_lens,
-                         cfg):
+                         cfg, *, impl=None):
     """Variable-width query spans against a blocked (paged) KV pool — the
     serving primitive behind `transformer.unified_step`, generalizing
     one-token-per-row paged decode to each row advancing by a span of
@@ -242,21 +297,27 @@ def span_attention_paged(params, x, pool, block_table, ctx_lens, q_lens,
 
     Span token (r, i) sits at position p = ctx_lens[r] + i. Its K/V is
     scattered to (block_table[r, p // bs], p % bs) *first*, then
-    attention runs over the gathered logical view block_table ->
-    (B, MB*bs, Hk, Dh) under the causal mask `slot <= p` — so queries see
-    the pool prefix AND the earlier tokens of their own span, however
-    the span is laid out (in-step causality falls out of
-    write-then-gather; different sequences can never see each other —
-    they gather through disjoint block tables). Pad slots and idle rows
-    write into trash block 0 and read garbage the caller discards — no
-    control flow inside the jitted step, static in (B, W, MB).
+    attention runs over the row's block-table view under the causal mask
+    `slot <= p` — so queries see the pool prefix AND the earlier tokens
+    of their own span, however the span is laid out (in-step causality
+    falls out of write-then-attend; different sequences can never see
+    each other — they read through disjoint block tables). Pad slots and
+    idle rows write into trash block 0 and read garbage the caller
+    discards — no control flow inside the jitted step, static in
+    (B, W, MB).
+
+    impl: None -> cfg.paged_attn_impl (see `_paged_impl`). "kernel" runs
+    the Pallas paged-attention kernel (`kernels.paged_attention`):
+    streams ONLY the ceil((ctx+q)/bs) valid blocks per row and
+    dequantizes int8 K/V tiles in VMEM. "ref" runs the jnp gather oracle
+    (`_span_attend_gather`): materializes the full (B, MB*bs, Hk, Dh)
+    logical view — the numerics reference the kernel is tested against.
     """
     from repro.runtime.kvblocks import span_slots
 
     b, w, _ = x.shape
     h, hk, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     bs = pool["k"].shape[1]
-    mb = block_table.shape[1]
 
     q = apply_linear(x, params["wq"]).reshape(b, w, h, hd)
     k = apply_linear(x, params["wk"]).reshape(b, w, hk, hd)
@@ -276,29 +337,21 @@ def span_attention_paged(params, x, pool, block_table, ctx_lens, q_lens,
             "ks": pool["ks"].at[blk, off].set(ks1),
             "vs": pool["vs"].at[blk, off].set(vs1),
         }
-        ck = (pool["k"][block_table].reshape(b, mb * bs, hk, hd)
-              .astype(q.dtype)
-              * pool["ks"][block_table].reshape(b, mb * bs, hk, 1)
-              .astype(q.dtype))
-        cv = (pool["v"][block_table].reshape(b, mb * bs, hk, hd)
-              .astype(q.dtype)
-              * pool["vs"][block_table].reshape(b, mb * bs, hk, 1)
-              .astype(q.dtype))
     else:
         pool = {
             "k": pool["k"].at[blk, off].set(k.astype(pool["k"].dtype)),
             "v": pool["v"].at[blk, off].set(v.astype(pool["v"].dtype)),
         }
-        ck = pool["k"][block_table].reshape(b, mb * bs, hk, hd).astype(q.dtype)
-        cv = pool["v"][block_table].reshape(b, mb * bs, hk, hd).astype(q.dtype)
 
-    # (B, W, S): query (r, i) sees slots at positions <= ctx_lens[r] + i
-    valid = jnp.arange(mb * bs)[None, None, :] <= pos[:, :, None]
-    qg = _group_q(q, hk)                                  # (B,W,Hk,G,Dh)
-    s = _scores(qg, ck, cfg.logit_softcap)                # (B,Hk,G,W,S)
-    s = jnp.where(valid[:, None, None, :, :], s, NEG)
-    p = jax.nn.softmax(s, axis=-1)
-    o = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(cv.dtype), cv)
+    impl = impl or _paged_impl(cfg)
+    if impl == "kernel":
+        from repro.kernels.paged_attention import paged_attention
+
+        o = paged_attention(q, pool, block_table, ctx_lens, q_lens,
+                            logit_softcap=cfg.logit_softcap,
+                            interpret=jax.default_backend() != "tpu")
+    else:
+        o = _span_attend_gather(q, pool, block_table, pos, cfg)
     y = apply_linear(o.reshape(b, w, h * hd), params["wo"])
     return y, pool
 

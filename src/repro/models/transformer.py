@@ -394,9 +394,16 @@ def unified_step(params, pool, block_tables, ctx_lens, q_lens, inputs, cfg):
     power of two by the driver, so at most O(log budget) shapes exist,
     and W == 1 — the decode-only steady state — is exactly the classic
     one-token paged decode). The row-major span layout keeps the KV
-    gather per ROW (each row reads its
-    block-table view once however wide its span is), which is what makes
-    chunked prefill affordable at real model sizes.
+    reads per ROW (each row reads its block-table view once however wide
+    its span is), which is what makes chunked prefill affordable at real
+    model sizes.
+
+    Attention per layer goes through `attn.span_attention_paged`, whose
+    backend is cfg.paged_attn_impl: on TPU ("auto"/"kernel") the Pallas
+    paged-attention kernel streams only each row's
+    ceil((ctx+q)/block_size) valid blocks — O(ctx) HBM bytes per step —
+    and dequantizes int8 KV in VMEM; "ref" (the CPU default) runs the
+    jnp gather oracle the kernel is identity-tested against.
     """
     from repro.runtime.kvblocks import check_paged_support
 

@@ -118,6 +118,23 @@ def init_paged_cache(cfg, num_blocks: int, block_size: int, dtype=None):
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
 
+def valid_block_counts(ctx_lens, q_lens, block_size, max_blocks):
+    """Per-row count of block-table entries holding valid context THIS
+    step — the grid metadata the Pallas paged-attention kernel walks.
+
+    Row r's span writes its K/V first, so after the scatter the pool holds
+    `ctx_lens[r] + q_lens[r]` valid positions = the first
+    ceil((ctx + q) / block_size) table entries; everything past that is
+    trash-block-0 padding the kernel must never fetch. Idle rows
+    (q_lens == 0) count zero — the kernel skips them entirely. jit-safe
+    (pure index math); clamped to the table width for caller-supplied
+    out-of-range metadata."""
+    total = ctx_lens + q_lens
+    nb = (total + block_size - 1) // block_size
+    nb = jnp.where(q_lens > 0, nb, 0)
+    return jnp.clip(nb, 0, max_blocks).astype(jnp.int32)
+
+
 def span_slots(block_table, ctx_lens, q_lens, width, block_size):
     """Physical scatter targets for a batch of per-row token spans.
 

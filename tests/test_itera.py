@@ -97,8 +97,18 @@ def test_nops_and_storage():
     # decompose emits int8 carriers: resident cost is 8 bits/code until
     # the factors are packed (compress_params does this for W4 plans)
     assert lr.storage_bits() == (64 * 16 + 16 * 64) * 8 + 2 * 16 * 32
-    from repro.core.quant import pack_weights
-    packed = LowRankQ(pack_weights(lr.w1), pack_weights(lr.w2))
+    # hand-build the packed layout (these 16/64-wide axes are
+    # pad-inflating, so pack_weights itself refuses them — see
+    # quant.packed_pad_ok): storage_bits counts the halved bytes either way
+    import dataclasses
+
+    from repro.core.quant import pack_int4
+
+    def force(q):
+        return dataclasses.replace(q, values=pack_int4(q.values),
+                                   packed=True)
+
+    packed = LowRankQ(force(lr.w1), force(lr.w2))
     assert packed.rank == 16 and packed.w1.shape == (64, 16)
     assert packed.storage_bits() == (64 * 16 + 16 * 64) * 4 + 2 * 16 * 32
 
@@ -108,7 +118,7 @@ def test_truncate_preserves_aux_and_rejects_packed():
     and refuses packed factors (packing happens after rank selection)."""
     import dataclasses
     from repro.core.itera import truncate
-    from repro.core.quant import pack_weights
+    from repro.core.quant import pack_int4
 
     w = lowrankish(jax.random.PRNGKey(6), 64, 64)
     lr = itera_decompose(w, 16, 4)
@@ -116,7 +126,13 @@ def test_truncate_preserves_aux_and_rejects_packed():
                      dataclasses.replace(lr.w2, act_wl=4))
     t = truncate(lr_a4, 8)
     assert t.rank == 8 and t.w1.act_wl == 4 and t.w2.act_wl == 4
-    packed = LowRankQ(pack_weights(lr.w1), pack_weights(lr.w2))
+    # any packed factor must be refused, however it was built (these
+    # axes are pad-inflating, so hand-build the layout)
+    packed = LowRankQ(
+        dataclasses.replace(lr.w1, values=pack_int4(lr.w1.values),
+                            packed=True),
+        dataclasses.replace(lr.w2, values=pack_int4(lr.w2.values),
+                            packed=True))
     with pytest.raises(ValueError, match="carrier-layout"):
         truncate(packed, 8)
 

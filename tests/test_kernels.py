@@ -134,8 +134,14 @@ def test_qmm_packed_identical_to_carrier(m, k, n, wl):
     w = jax.random.normal(kw, (k, n), jnp.float32) / np.sqrt(k)
     wq = quantize(w, wl, axis=0)
     wp = pack_weights(wq)
-    assert wp.packed == (wl == 4)
-    if wl == 4:
+    # pack_weights only packs pad-ok axes; a pad-inflating N (e.g. 320,
+    # 128) stays a carrier and wp is then wq itself — the identity below
+    # still proves the no-op. The hand-built bad-axis case is covered by
+    # test_qmm_forced_packed_bad_axis_demoted.
+    from repro.core.quant import packed_pad_ok
+
+    assert wp.packed == (wl == 4 and packed_pad_ok(n))
+    if wp.packed:
         assert wp.values.shape == (k, n // 2)
     y_carrier = ops.qmm(x, wq, use_kernel=True, interpret=True)
     y_packed = ops.qmm(x, wp, use_kernel=True, interpret=True)
@@ -146,6 +152,30 @@ def test_qmm_packed_identical_to_carrier(m, k, n, wl):
                                rtol=1e-5, atol=1e-5)
 
 
+def test_qmm_forced_packed_bad_axis_demoted():
+    """A hand-built packed tensor on a pad-inflating axis (something
+    compress_params never produces) still computes bit-identically: the
+    dispatch demotes it to a carrier up front instead of fat-padding."""
+    import dataclasses
+
+    from repro.core.quant import pack_int4
+
+    key = jax.random.PRNGKey(3)
+    kx, kw = jax.random.split(key)
+    x = jax.random.normal(kx, (8, 128), jnp.float32)
+    w = jax.random.normal(kw, (128, 128), jnp.float32) / np.sqrt(128)
+    wq = quantize(w, 4, axis=0)
+    forced = dataclasses.replace(wq, values=pack_int4(wq.values),
+                                 packed=True)
+    y_carrier = ops.qmm(x, wq, use_kernel=True, interpret=True)
+    y_forced = ops.qmm(x, forced, use_kernel=True, interpret=True)
+    np.testing.assert_array_equal(np.asarray(y_forced),
+                                  np.asarray(y_carrier))
+    # and the byte model charges the demotion round-trip, so a forced
+    # pack can never *report* fewer bytes than its own carrier saves
+    assert ops.qmm_hbm_bytes(8, forced) > ops.qmm_hbm_bytes(8, wq)
+
+
 @pytest.mark.parametrize("fused", [True, False])
 @pytest.mark.parametrize("wl", [4, 6, 8])
 def test_lrmm_packed_identical_to_carrier(fused, wl):
@@ -154,11 +184,14 @@ def test_lrmm_packed_identical_to_carrier(fused, wl):
     cascade AND the two-launch single-engine schedule."""
     key = jax.random.PRNGKey(11 + wl)
     x = jax.random.normal(key, (48, 192), jnp.float32)
-    w = jax.random.normal(key, (192, 320), jnp.float32) * 0.05
-    lr = svd_decompose(w, 96, wl)
+    # R=192 and N=512 are both pad-ok axes, so a W4 decomposition packs
+    # both factors (pad-inflating axes would stay carriers — see
+    # test_lrmm_forced_packed_bad_axes_demoted)
+    w = jax.random.normal(key, (192, 512), jnp.float32) * 0.05
+    lr = svd_decompose(w, 192, wl)
     lrp = _pack_lr(lr)
     assert lrp.w1.packed == (wl == 4) and lrp.w2.packed == (wl == 4)
-    assert lrp.rank == 96 and lrp.w2.shape == (96, 320)
+    assert lrp.rank == 192 and lrp.w2.shape == (192, 512)
     y_carrier = ops.lrmm(x, lr, use_kernel=True, interpret=True, fused=fused)
     y_packed = ops.lrmm(x, lrp, use_kernel=True, interpret=True, fused=fused)
     np.testing.assert_array_equal(np.asarray(y_packed),
@@ -166,6 +199,33 @@ def test_lrmm_packed_identical_to_carrier(fused, wl):
     y_ref = ops.lrmm(x, lrp, use_kernel=False)
     np.testing.assert_allclose(np.asarray(y_packed), np.asarray(y_ref),
                                rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("fused", [True, False])
+def test_lrmm_forced_packed_bad_axes_demoted(fused):
+    """Hand-built packed factors on pad-inflating axes (R=96, N=320)
+    still compute bit-identically through both schedules — the dispatch
+    demotes them to carriers up front."""
+    import dataclasses
+
+    from repro.core.quant import pack_int4
+
+    key = jax.random.PRNGKey(29)
+    x = jax.random.normal(key, (48, 192), jnp.float32)
+    w = jax.random.normal(key, (192, 320), jnp.float32) * 0.05
+    lr = svd_decompose(w, 96, 4)
+
+    def force(q):
+        return dataclasses.replace(q, values=pack_int4(q.values),
+                                   packed=True)
+
+    lrp = LowRankQ(force(lr.w1), force(lr.w2))
+    assert lrp.w1.packed and lrp.w2.packed
+    y_carrier = ops.lrmm(x, lr, use_kernel=True, interpret=True, fused=fused)
+    y_forced = ops.lrmm(x, lrp, use_kernel=True, interpret=True, fused=fused)
+    np.testing.assert_array_equal(np.asarray(y_forced),
+                                  np.asarray(y_carrier))
+    assert ops.lrmm_hbm_bytes(48, lrp) > ops.lrmm_hbm_bytes(48, lr)
 
 
 def test_lrmm_mixed_packing():

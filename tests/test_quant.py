@@ -9,8 +9,8 @@ except ImportError:
     from hypothesis_fallback import given, settings, strategies as st
 
 from repro.core.quant import (
-    fake_quant, pack_int4, pack_weights, packable, qmax, quant_linear_ref,
-    quantize, unpack_int4, unpack_weights,
+    fake_quant, pack_int4, pack_weights, packable, packed_pad_ok, qmax,
+    quant_linear_ref, quantize, unpack_int4, unpack_weights,
 )
 
 settings.register_profile("ci", max_examples=25, deadline=None)
@@ -109,16 +109,28 @@ def test_pack_int4_rejects_odd_last_dim():
 
 
 @given(matrix())
-def test_pack_weights_roundtrip(w):
-    """pack_weights/unpack_weights is exact and dequant-invariant on any
-    W4 tensor with an even last dim; odd dims and W6/W8 stay carriers."""
+def test_pack_weights_refuses_small_axes(w):
+    """The 2..24-wide hypothesis axes are all pad-inflating (a packed
+    half-width must pad to 256 lanes where the carrier pads to 128), so
+    pack_weights must refuse every one of them — packing would double
+    the kernels' padded work for zero byte savings."""
     q = quantize(jnp.asarray(w), 4, axis=0)
-    if w.shape[-1] % 2:
-        assert not packable(q) and pack_weights(q) is q
-        return
+    assert not packed_pad_ok(w.shape[-1])
+    assert not packable(q) and pack_weights(q) is q
+
+
+@pytest.mark.parametrize("n", [192, 256, 512])
+def test_pack_weights_roundtrip(n):
+    """pack_weights/unpack_weights is exact and dequant-invariant on any
+    W4 tensor whose last dim is even and pad-ok; odd / pad-inflating
+    dims and W6/W8 stay carriers."""
+    w = jnp.asarray(np.random.default_rng(n).normal(size=(16, n)),
+                    jnp.float32)
+    q = quantize(w, 4, axis=0)
+    assert packed_pad_ok(n)
     p = pack_weights(q)
     assert p.packed and p.shape == q.shape
-    assert p.values.shape[-1] == w.shape[-1] // 2
+    assert p.values.shape[-1] == n // 2
     back = unpack_weights(p)
     np.testing.assert_array_equal(np.asarray(back.values),
                                   np.asarray(q.values))
@@ -129,14 +141,18 @@ def test_pack_weights_roundtrip(w):
 def test_storage_bits_accounting():
     """storage_bits reports RESIDENT bytes: an unpacked W4 tensor still
     occupies a full int8 carrier (8 bits/code); packing halves it to the
-    true 4; W6 has no byte-aligned packing and stays at 8."""
-    w = jnp.ones((64, 32))
+    true 4; W6 has no byte-aligned packing and a pad-inflating W4 axis
+    refuses to pack — both stay at an honest 8."""
+    w = jnp.ones((64, 256))
     q = quantize(w, 4, axis=0)
-    assert q.storage_bits() == 64 * 32 * 8 + 32 * 32
+    assert q.storage_bits() == 64 * 256 * 8 + 32 * 256
     p = pack_weights(q)
-    assert p.packed and p.values.shape == (64, 16)
-    assert p.shape == (64, 32)
-    assert p.storage_bits() == 64 * 32 * 4 + 32 * 32
+    assert p.packed and p.values.shape == (64, 128)
+    assert p.shape == (64, 256)
+    assert p.storage_bits() == 64 * 256 * 4 + 32 * 256
     q6 = quantize(w, 6, axis=0)
     assert pack_weights(q6) is q6          # carrier-resident, honest 8 bits
-    assert q6.storage_bits() == 64 * 32 * 8 + 32 * 32
+    assert q6.storage_bits() == 64 * 256 * 8 + 32 * 256
+    q32 = quantize(jnp.ones((64, 32)), 4, axis=0)
+    assert pack_weights(q32) is q32        # pad-inflating axis: carrier
+    assert q32.storage_bits() == 64 * 32 * 8 + 32 * 32

@@ -112,6 +112,32 @@ def _delta(b, n):
     return f"{100 * (n - b) / b:+.1f}%"
 
 
+def _pattn_delta(rows):
+    """Pair each kernel_pattn_interp_* (streamed Pallas kernel) row with
+    its kernel_pattn_gather_* (jnp oracle) sibling and print the
+    bytes-moved ratio — the O(MB*bs) -> O(ctx) conversion the
+    paged-attention kernel exists for. Short-context cases should show a
+    much smaller ratio than long-context ones; >= 1.0 means the kernel
+    stopped paying off."""
+    pairs = []
+    for name, (_, mb) in rows.items():
+        if name.startswith("kernel_pattn_interp_"):
+            suffix = name[len("kernel_pattn_interp_"):]
+            gather = rows.get("kernel_pattn_gather_" + suffix)
+            if gather is not None:
+                pairs.append((suffix, mb, gather[1]))
+    if not pairs:
+        return
+    print()
+    print("paged attention: KV bytes streamed (kernel) vs gathered "
+          "(jnp oracle)")
+    print("| case | stream MiB | gather MiB | stream/gather |")
+    print("|---|--:|--:|--:|")
+    for suffix, smb, gmb in sorted(pairs):
+        ratio = "-" if not smb or not gmb else f"{smb / gmb:.2f}x"
+        print(f"| {suffix} | {_fmt(smb)} | {_fmt(gmb)} | {ratio} |")
+
+
 def kernels_table(base_path, new_path=None):
     base = load_kernels(base_path)
     new = load_kernels(new_path) if new_path else None
@@ -120,6 +146,7 @@ def kernels_table(base_path, new_path=None):
         print("|---|--:|--:|")
         for name, (us, mb) in base.items():
             print(f"| {name} | {us:.3f} | {_fmt(mb)} |")
+        _pattn_delta(base)
         return
     print(f"| kernel | {os.path.basename(base_path)} us "
           f"| {os.path.basename(new_path)} us | us delta "
@@ -131,6 +158,7 @@ def kernels_table(base_path, new_path=None):
         print(f"| {name} | {_fmt(b_us)} | {_fmt(n_us)} "
               f"| {_delta(b_us, n_us)} | {_fmt(b_mb)} | {_fmt(n_mb)} "
               f"| {_delta(b_mb, n_mb)} |")
+    _pattn_delta(new)
 
 
 # (metric label, path into BENCH_serving.json, unit scale)
