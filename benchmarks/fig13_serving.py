@@ -36,20 +36,37 @@ import json
 
 import numpy as np
 
-from repro.api import InferenceEngine, Request, SamplingParams
+import jax
+
+from repro.api import DraftSpec, InferenceEngine, Request, SamplingParams
+from repro.configs import get_config
+from repro.core.compress import CompressionConfig, shape_spectra
+from repro.models import transformer as tfm
 
 # length buckets keep the number of distinct jit shapes small; the mix of
 # short/long generations is what continuous batching exploits.
 PROMPT_LENS = (8, 16, 24, 32)
 GEN_LENS = (2, 4, 8, 24)
 
+# the speculation section runs decode-heavy (short prompts, long
+# generations): that is the regime where a round's k cheap draft passes
+# amortize — prefill-heavy mixes leave no per-step budget for drafting.
+SPEC_PROMPT_LENS = (8, 12, 16)
+SPEC_GEN_LENS = (32, 48, 64)
+SPEC_MAX_BATCH = 2
+SPEC_CHUNK_TOKENS = 16
+SPEC_ALPHA = 3.0          # power-law spectrum exponent for the proxy
+SPEC_N = 8                # short admission queue: decode rounds, not
+                          # prefill churn, must dominate the section
 
-def make_workload(n, vocab, seed=0):
+
+def make_workload(n, vocab, seed=0, prompt_lens=PROMPT_LENS,
+                  gen_lens=GEN_LENS):
     rng = np.random.default_rng(seed)
     reqs = []
     for _ in range(n):
-        plen = int(rng.choice(PROMPT_LENS))
-        gen = int(rng.choice(GEN_LENS))
+        plen = int(rng.choice(prompt_lens))
+        gen = int(rng.choice(gen_lens))
         reqs.append(Request(tokens=rng.integers(0, vocab, size=plen),
                             max_tokens=gen))
     return reqs
@@ -90,6 +107,91 @@ def run_continuous(engine, reqs, max_batch, block_size, chunk_tokens):
             "tokens_per_second": res.tokens_per_second}, res.outputs
 
 
+def run_speculation(args):
+    """Self-speculative decoding section: the SAME low-rank engine served
+    with its truncated-cascade draft model on vs off, decode-heavy
+    workload. The reported speedup is real tokens per second, so
+    rejected drafts are paid for honestly, and token identity vs the
+    plain path is hard-asserted request by request on every run.
+
+    This section pins its own regime instead of inheriting the timed
+    comparison's, because speculation only ever pays where a decode step
+    does NOT cost proportionally to the tokens it carries. On the TPU
+    target that is ordinary decode (weight-streaming-bound: a width-k+1
+    verify moves the same bytes as a width-1 step — the premise the
+    paper's sub-8-bit residency work is built on). The CPU proxy at full
+    size is the opposite — compute-bound, cost ∝ tokens, so every
+    drafted-then-verified token is paid twice and NO draft can win; its
+    dispatch-bound regime (smoke geometry, small batch) is the regime
+    where step cost is ~flat, so that is what this section serves.
+
+    The proxy's weights are spectrum-shaped before compression
+    (`shape_spectra`): random-init matrices have near-flat singular
+    spectra, which makes ANY rank truncation argmax-flipping — an
+    artifact of the proxy, not a property of the trained weights the
+    paper targets, whose decaying spectra are the reason low-rank
+    compression works at all. Shaping restores that regime so the
+    draft's acceptance rate measures the design, not init noise."""
+    plan = CompressionConfig(method="svd", weight_wl=8, rank_fraction=0.75)
+    spec = DraftSpec(k=args.speculate,
+                     rank_fraction=args.draft_rank_fraction)
+    cfg = get_config("opus-mt", smoke=True)
+    params = shape_spectra(tfm.init_params(jax.random.PRNGKey(args.seed),
+                                           cfg), alpha=SPEC_ALPHA)
+    engine = InferenceEngine.build(cfg, plan, params=params,
+                                   max_batch=SPEC_MAX_BATCH,
+                                   block_size=args.block_size,
+                                   chunk_tokens=SPEC_CHUNK_TOKENS,
+                                   speculate=spec)
+    n = min(args.n, SPEC_N)
+    reqs = make_workload(n, engine.cfg.vocab_size, seed=args.seed,
+                         prompt_lens=SPEC_PROMPT_LENS,
+                         gen_lens=SPEC_GEN_LENS)
+    engine.serve(reqs, speculate=False)                # warmup both modes
+    engine.serve(reqs, speculate=True)
+    base = on = None
+    ratios = []
+    # the section is seconds long, so extra paired repeats are cheap and
+    # the median ratio needs them (smoke-scale walltime is noisy)
+    for _ in range(max(args.repeat, 5)):
+        r0 = engine.serve(reqs, speculate=False)
+        r1 = engine.serve(reqs, speculate=True)
+        mism = [i for i in range(len(reqs))
+                if not np.array_equal(r0.outputs[i], r1.outputs[i])]
+        assert not mism, (
+            f"request {mism[0]}: speculative {r1.outputs[mism[0]]} "
+            f"!= plain {r0.outputs[mism[0]]}")
+        if base is None or r0.seconds < base.seconds:
+            base = r0
+        if on is None or r1.seconds < on.seconds:
+            on = r1
+        ratios.append(r1.tokens_per_second / r0.tokens_per_second)
+    print(f"speculation: k={on.spec_k} accept {on.accept_rate:.2f} "
+          f"({on.accepted}/{on.drafted} over {on.spec_rounds} rounds), "
+          f"{on.tokens_per_second:.1f} tok/s vs "
+          f"{base.tokens_per_second:.1f} plain "
+          f"({float(np.median(ratios)):.2f}x); "
+          f"{len(reqs)}/{len(reqs)} requests token-identical")
+    return {
+        "k": on.spec_k,
+        "rank_fraction": args.draft_rank_fraction,
+        "plan": "svd_W8_r0.75",
+        "regime": {"model": cfg.name, "max_batch": SPEC_MAX_BATCH,
+                   "chunk_tokens": SPEC_CHUNK_TOKENS,
+                   "spectrum_alpha": SPEC_ALPHA},
+        "workload": {"n": n, "prompt_lens": list(SPEC_PROMPT_LENS),
+                     "gen_lens": list(SPEC_GEN_LENS), "seed": args.seed},
+        "accept_rate": on.accept_rate,
+        "drafted": on.drafted, "accepted": on.accepted,
+        "spec_rounds": on.spec_rounds, "steps": on.steps,
+        "baseline_steps": base.steps,
+        "mismatched_requests": 0,
+        "tokens_per_second": on.tokens_per_second,
+        "baseline_tokens_per_second": base.tokens_per_second,
+        "speedup_vs_plain": float(np.median(ratios)),
+    }
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--n", type=int, default=24, help="number of requests")
@@ -106,6 +208,18 @@ def main(argv=None):
                     help="tiny CI workload (seconds on CPU): fewer "
                          "requests, one warmup, and a hard assert that "
                          "greedy outputs match between the two modes")
+    ap.add_argument("--speculate", type=int, default=0, metavar="K",
+                    help="also benchmark self-speculative decoding at "
+                         "draft depth K on a low-rank engine "
+                         "(dedicated dispatch-bound decode-heavy "
+                         "regime, spec on vs off; outputs are asserted "
+                         "token-identical)")
+    ap.add_argument("--draft-rank-fraction", type=float, default=0.17,
+                    help="rank fraction the speculation draft keeps "
+                         "(0.17 of the r0.75 plan's rank 48 = rank 8 at "
+                         "the section's geometry: the draft streams ~1/6 "
+                         "of the cascade bytes, and the shaped spectrum "
+                         "keeps its argmax agreeing with the full rank)")
     args = ap.parse_args(argv)
 
     if args.smoke:
@@ -172,6 +286,8 @@ def main(argv=None):
         "continuous": cont,
         "speedup": speedup,
     }
+    if args.speculate > 0:
+        report["speculation"] = run_speculation(args)
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2)
     print(f"static:     {static['tokens_per_second']:8.1f} tok/s "

@@ -14,9 +14,10 @@ from repro.api.engine import (
     ServeResult,
 )
 from repro.runtime.scheduler import Request
+from repro.runtime.speculation import DraftSpec
 
 __all__ = [
     "CompressionPlan", "LayerPlan", "merge_plans",
     "GenerationResult", "InferenceEngine", "SamplingParams",
-    "ServeResult", "Request",
+    "ServeResult", "Request", "DraftSpec",
 ]

@@ -47,6 +47,7 @@ from repro.core.compress import CompressionConfig, compress_params
 from repro.models import transformer as tfm
 from repro.runtime import kvblocks
 from repro.runtime.scheduler import Request, Scheduler
+from repro.runtime.speculation import DraftSpec, SpeculationController
 
 
 @dataclasses.dataclass(frozen=True)
@@ -102,6 +103,19 @@ class ServeResult:
     num_blocks: int
     ttft: list[float] = dataclasses.field(default_factory=list)
     tpot: list[float] = dataclasses.field(default_factory=list)
+    # self-speculative decoding accounting (0 when speculation is off):
+    # over the whole serve, `drafted` draft tokens were proposed and
+    # `accepted` of them survived full-model verification across
+    # `spec_rounds` drafting rounds of width spec_k.
+    spec_k: int = 0
+    drafted: int = 0
+    accepted: int = 0
+    spec_rounds: int = 0
+
+    @property
+    def accept_rate(self) -> float:
+        """Fraction of proposed draft tokens the full model kept."""
+        return self.accepted / self.drafted if self.drafted else 0.0
 
     @property
     def total_tokens(self) -> int:
@@ -192,12 +206,18 @@ class InferenceEngine:
 
     def __init__(self, cfg: ModelConfig, params, *, plan=None, report=None,
                  mesh=None, max_batch: int = 8, block_size: int = 16,
-                 chunk_tokens: int = 256, bucket_prompts: bool = True):
+                 chunk_tokens: int = 256, bucket_prompts: bool = True,
+                 speculate: DraftSpec | None = None):
         self.cfg = cfg
         self.params = params
         self.plan = plan
         self.report = report
         self.mesh = mesh
+        # self-speculative decoding: derive the truncated-cascade draft
+        # tree once at engine construction (it shares every dense array
+        # with `params` by reference — no second checkpoint in HBM)
+        self.speculation = (SpeculationController(speculate, cfg, params)
+                            if speculate is not None else None)
         self.max_batch = max_batch      # serve(): batch-row capacity
         self.block_size = block_size    # serve(): KV block size (tokens)
         self.chunk_tokens = chunk_tokens  # serve(): per-step token budget
@@ -254,7 +274,8 @@ class InferenceEngine:
               smoke: bool = False, seed: int = 0, verbose: bool = False,
               max_batch: int = 8, block_size: int = 16,
               chunk_tokens: int = 256,
-              paged_attn: str | None = None) -> "InferenceEngine":
+              paged_attn: str | None = None,
+              speculate=None) -> "InferenceEngine":
         """arch: config name (see repro.configs) or a ModelConfig.
         plan: CompressionPlan | legacy CompressionConfig | None (dense).
         params: pre-trained weights; freshly initialized when omitted.
@@ -263,7 +284,11 @@ class InferenceEngine:
         serve() — batch rows, KV block size, per-step token budget.
         paged_attn: override cfg.paged_attn_impl for the serving
         attention backend — "auto" (Pallas kernel on TPU, jnp gather
-        oracle on CPU), "kernel", or "ref"."""
+        oracle on CPU), "kernel", or "ref".
+        speculate: self-speculative decoding config. None defers to
+        `plan.draft`; a `DraftSpec` (or int draft depth k, or True for
+        the defaults) turns it on regardless of the plan; False/0 forces
+        it off even when the plan carries a draft spec."""
         cfg = get_config(arch, smoke=smoke) if isinstance(arch, str) else arch
         if paged_attn is not None:
             cfg = dataclasses.replace(cfg, paged_attn_impl=paged_attn)
@@ -288,9 +313,20 @@ class InferenceEngine:
 
             params = jax.device_put(params,
                                     shd.param_shardings(params, mesh, cfg))
+        if isinstance(speculate, DraftSpec):
+            spec = speculate
+        elif speculate is None:
+            spec = plan.draft if plan is not None else None
+        elif speculate is True:
+            spec = (plan.draft if plan is not None and plan.draft is not None
+                    else DraftSpec())
+        elif not speculate:             # False / 0: explicit off
+            spec = None
+        else:
+            spec = DraftSpec(k=int(speculate))
         return cls(cfg, params, plan=plan, report=report, mesh=mesh,
                    max_batch=max_batch, block_size=block_size,
-                   chunk_tokens=chunk_tokens)
+                   chunk_tokens=chunk_tokens, speculate=spec)
 
     # ---------------------------------------------------------- generate --
     def generate(self, requests, sampling: SamplingParams | None = None
@@ -351,7 +387,8 @@ class InferenceEngine:
     def serve(self, requests, sampling: SamplingParams | None = None, *,
               max_batch: int | None = None, block_size: int | None = None,
               num_blocks: int | None = None,
-              chunk_tokens: int | None = None) -> ServeResult:
+              chunk_tokens: int | None = None,
+              speculate: bool | None = None) -> ServeResult:
         """In-flight batching with chunked prefill: ragged prompts,
         per-request max_tokens, one jitted token-budget step.
 
@@ -378,8 +415,38 @@ class InferenceEngine:
         num_blocks defaults to enough for max_batch worst-case sequences,
         i.e. admission is then only row-limited. Pass a smaller pool to
         exercise block-limited admission.
+
+        When the engine carries a draft model (`build(speculate=...)` or
+        `plan.draft`), decode rows additionally propose up to `spec.k`
+        draft tokens per step with the truncated cascade and the full
+        model verifies the whole span in the same dispatch — greedy
+        acceptance keeps the outputs token-identical to non-speculative
+        serve (see runtime/speculation.py). `speculate=False` disables
+        it for this call; `speculate=True` requires the engine to have a
+        draft model. This path is synchronous (acceptance is
+        value-dependent), trading the 2-deep pipeline for >1 token per
+        dispatch.
+
+        serve() is greedy-only: speculative verification and the
+        count-based pipelined bookkeeping both rely on deterministic
+        argmax tokens, so SamplingParams.temperature > 0 raises instead
+        of being silently ignored (rectangular `generate` batches do
+        sample).
         """
         sampling = sampling or SamplingParams()
+        if sampling.temperature > 0.0:
+            raise NotImplementedError(
+                "serve() (in-flight batching) is greedy-only: speculative "
+                "verification and count-based scheduling rely on "
+                "deterministic argmax tokens. Use temperature=0, or "
+                "generate() on a rectangular batch for sampled decoding.")
+        ctl = self.speculation
+        if speculate is False:
+            ctl = None
+        elif speculate is True and ctl is None:
+            raise ValueError(
+                "speculate=True but the engine has no draft model — build "
+                "with speculate=DraftSpec(...) or a plan carrying .draft")
         reqs: list[Request] = []
         for i, r in enumerate(requests):
             if not isinstance(r, Request):
@@ -410,8 +477,7 @@ class InferenceEngine:
         first_tok_t = [None] * len(reqs)
         finish_t = [0.0] * len(reqs)
         steps = prefill_chunks = prefill_tokens = mixed_steps = 0
-        greedy = sampling.temperature <= 0.0
-        key = None if greedy else jax.random.PRNGKey(sampling.seed)
+        drafted = accepted = spec_rounds = 0
 
         from repro.runtime import shardctx
 
@@ -432,10 +498,18 @@ class InferenceEngine:
                     finish_t[rid] = now
 
         with ctx:
+            if ctl is not None:
+                (steps, prefill_chunks, prefill_tokens, mixed_steps,
+                 drafted, accepted, spec_rounds) = self._spec_loop(
+                    reqs, sched, pool, tables, cap, budget, ctl,
+                    out_vals, first_tok_t, finish_t)
+                sched_done = True
+            else:
+                sched_done = False
             tables_dev = None       # device-safe copy, refreshed on change
             inflight = collections.deque()   # (emits, device toks), oldest
             prev_toks = jnp.zeros((cap, 1), jnp.int32)
-            while sched.has_work():
+            while not sched_done and sched.has_work():
                 plan = sched.schedule(budget)
                 for seq in plan.admitted:
                     tables[seq.row] = 0
@@ -478,9 +552,6 @@ class InferenceEngine:
                 prefill_chunks += len(plan.prefill)
                 prefill_tokens += sum(plan.prefill.values())
                 mixed_steps += plan.is_mixed
-                if not greedy:
-                    key, k = jax.random.split(key)
-                    toks_dev = self._pick(logits, k, sampling)
                 prev_toks = toks_dev
                 # ---- count-based bookkeeping at dispatch time ------------
                 # (no early stopping, so who emits/finishes never depends
@@ -522,7 +593,115 @@ class InferenceEngine:
             prefill_chunks=prefill_chunks, prefill_tokens=prefill_tokens,
             mixed_steps=mixed_steps, chunk_tokens=budget,
             max_queue_depth=sched.max_queue_depth, max_batch=cap,
-            block_size=bs, num_blocks=num_blocks, ttft=ttft, tpot=tpot)
+            block_size=bs, num_blocks=num_blocks, ttft=ttft, tpot=tpot,
+            spec_k=(ctl.spec.k if ctl is not None else 0),
+            drafted=drafted, accepted=accepted, spec_rounds=spec_rounds)
+
+    def _spec_loop(self, reqs, sched, pool, tables, cap, budget, ctl,
+                   out_vals, first_tok_t, finish_t):
+        """The speculative serve loop: one fused draft->verify->accept
+        dispatch per step (runtime.speculation.speculative_step).
+
+        Synchronous by design — how many tokens a row advanced is
+        value-dependent (the accept count), so the next step's schedule
+        must wait for this step's readback. The throughput win comes
+        from E[accepted + 1] tokens per dispatch, not from pipelining;
+        in the dispatch-bound small-step regime that IS the serving
+        bottleneck. Only two step variants ever trace: draft width
+        spec.k (any drafting row this step) and 0 (none — e.g. a
+        prefill-only step), mirroring the non-speculative path's
+        power-of-two span bucketing.
+
+        Mutates out_vals / first_tok_t / finish_t in place (same
+        contract as serve's consume()); returns the step counters."""
+        steps = prefill_chunks = prefill_tokens = mixed_steps = 0
+        drafted = accepted = spec_rounds = 0
+        tables_dev = None
+        prev_toks = jnp.zeros((cap, 1), jnp.int32)
+        while sched.has_work():
+            plan = sched.schedule(budget, spec_k=ctl.spec.k)
+            for seq in plan.admitted:
+                tables[seq.row] = 0
+                tables[seq.row, :len(seq.block_ids)] = seq.block_ids
+                tables_dev = None
+            # draft-block reservations can grow a row's table mid-flight
+            # (only when admission could not pre-reserve the worst case)
+            for r in plan.spec:
+                seq = sched.rows[r]
+                if seq.draft_blocks:
+                    tables[r, :len(seq.block_ids)] = seq.block_ids
+                    tables_dev = None
+            if not plan.prefill and not plan.decode:
+                raise RuntimeError(
+                    "scheduler returned an empty step with work "
+                    "pending — admission deadlock")
+            # ---- (cap, W + meta) span batch; meta gains spec_lens -------
+            k_step = ctl.spec.k if plan.spec else 0
+            w = _pow2_bucket(max(plan.max_span, k_step + 1))
+            buf = np.zeros((cap, w + 4), np.int32)
+            for r, width in plan.prefill.items():
+                seq = sched.rows[r]
+                lo = seq.prefilled
+                buf[r, :width] = seq.req.tokens[lo:lo + width]
+                buf[r, -4] = lo
+                buf[r, -3] = width
+            for r in plan.decode:
+                seq = sched.rows[r]
+                kr = plan.spec.get(r, 0)
+                # span: [prev (device-spliced), kr draft slots]
+                buf[r, -4] = seq.prompt_len + seq.n_emitted - 1
+                buf[r, -3] = 1 + kr
+                buf[r, -2] = 1
+                buf[r, -1] = kr
+            if tables_dev is None:
+                tables_dev = tables.copy()
+            full_toks, n_acc, prev_toks, pool = ctl.step_fn(k_step)(
+                self.params, ctl.draft_params, pool, tables_dev, buf,
+                prev_toks)
+            steps += 1
+            spec_rounds += bool(plan.spec)
+            prefill_chunks += len(plan.prefill)
+            prefill_tokens += sum(plan.prefill.values())
+            mixed_steps += plan.is_mixed
+            # acceptance decides how far each row advanced: read back now
+            fv = np.asarray(full_toks)
+            na = np.asarray(n_acc)
+            now = time.time()
+            for r, width in plan.prefill.items():
+                sched.rows[r].prefilled += width
+            for r in list(plan.prefill) + plan.decode:
+                seq = sched.rows[r]
+                if not seq.prefill_done:
+                    continue        # mid-prompt: logits unused
+                if r in plan.prefill:
+                    # prompt finished this step: emit the last-valid-
+                    # position token (appended verify column k_step + 1)
+                    toks = fv[r, k_step + 1:k_step + 2]
+                else:
+                    # decode: accepted draft prefix + the full model's
+                    # own token at the first divergence (or the bonus)
+                    toks = fv[r, :int(na[r]) + 1]
+                rid = seq.req.rid
+                out_vals[rid].extend(int(t) for t in toks)
+                if first_tok_t[rid] is None:
+                    first_tok_t[rid] = now
+                seq.n_emitted += len(toks)
+                kr = plan.spec.get(r, 0)
+                if kr:
+                    drafted += kr
+                    accepted += len(toks) - 1
+                    if sched.commit_speculation(seq):
+                        # rollback released tail blocks: rewind the table
+                        tables[r] = 0
+                        tables[r, :len(seq.block_ids)] = seq.block_ids
+                        tables_dev = None
+                if seq.done:
+                    finish_t[rid] = now
+                    sched.finish(seq)
+                    tables[r] = 0
+                    tables_dev = None
+        return (steps, prefill_chunks, prefill_tokens, mixed_steps,
+                drafted, accepted, spec_rounds)
 
     def _pick(self, logits, key, sampling: SamplingParams) -> jnp.ndarray:
         """(B, 1) next tokens from (B, ..., V) last-position logits."""

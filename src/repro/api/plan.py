@@ -27,6 +27,8 @@ import dataclasses
 import json
 from typing import Iterable
 
+from repro.runtime.speculation import DraftSpec
+
 METHODS = ("none", "quant", "svd", "itera")
 _LOWRANK = ("svd", "itera")
 PLAN_FORMAT_VERSION = 1
@@ -73,6 +75,12 @@ class CompressionPlan:
     # packed and carrier plans generate identical tokens). W6/W8 stay
     # int8-carrier either way and are accounted at 8 bits.
     pack: bool = True
+    # Self-speculative decoding config (runtime/speculation.py): the
+    # draft model is the plan's own cascade truncated per this spec —
+    # part of the deployment artifact because the useful draft depth
+    # depends on the plan's ranks. None = engine serves non-speculatively
+    # unless build(speculate=...) overrides.
+    draft: DraftSpec | None = None
     meta: dict = dataclasses.field(default_factory=dict)
 
     # ------------------------------------------------------------ access --
@@ -93,7 +101,7 @@ class CompressionPlan:
 
     # ----------------------------------------------------- serialization --
     def to_dict(self) -> dict:
-        return {
+        d = {
             "format_version": PLAN_FORMAT_VERSION,
             "label": self.label,
             "act_wl": self.act_wl,
@@ -102,6 +110,9 @@ class CompressionPlan:
             "layers": [lp.to_dict() for lp in self.layers],
             "meta": self.meta,
         }
+        if self.draft is not None:
+            d["draft"] = self.draft.to_dict()
+        return d
 
     @classmethod
     def from_dict(cls, d: dict) -> "CompressionPlan":
@@ -115,6 +126,8 @@ class CompressionPlan:
             pack=bool(d.get("pack", True)),
             power_iters=int(d.get("power_iters", 24)),
             label=str(d.get("label", "")),
+            draft=(None if d.get("draft") is None
+                   else DraftSpec.from_dict(d["draft"])),
             meta=dict(d.get("meta", {})),
         )
 
@@ -243,8 +256,12 @@ class CompressionPlan:
         groups = Counter(f"{lp.method}_W{lp.wl}" for lp in self.layers)
         body = " ".join(f"{k}x{v}" for k, v in sorted(groups.items()))
         resid = "packed" if self.pack else "carrier"
+        spec = ""
+        if self.draft is not None:
+            spec = (f", draft k={self.draft.k} "
+                    f"r×{self.draft.rank_fraction:g}")
         return f"plan[{self.label or 'unlabeled'}] {len(self.layers)} " \
-               f"layers: {body} (A{self.act_wl}, {resid})"
+               f"layers: {body} (A{self.act_wl}, {resid}{spec})"
 
 
 def merge_plans(base: CompressionPlan,

@@ -38,6 +38,7 @@ from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.itera import LowRankQ, itera_decompose, svd_decompose
 from repro.core.quant import QuantizedTensor, pack_weights, quantize
@@ -174,6 +175,43 @@ def eligible_linears(
             continue
         out.append((p, leaf))
     return out
+
+
+def shape_spectra(params, alpha: float = 2.0,
+                  selector: CompressionConfig | None = None):
+    """Impose a power-law singular-value spectrum (s_i ∝ i^-alpha) on every
+    weight the selector picks, preserving each matrix's singular vectors
+    and Frobenius norm.
+
+    Proxy conditioning, not compression: the repo's random-init proxies
+    have near-FLAT spectra (Marchenko–Pastur), so truncating ANY rank
+    discards components as informative as those kept — low-rank error is
+    maximally adversarial and nothing like the trained weights the paper
+    compresses, whose spectra decay (the premise that makes rank
+    truncation work at all). Benchmarks that measure rank-truncation
+    quality trade-offs — e.g. the self-speculative draft's acceptance
+    rate — shape the proxy first so the trade-off is measured in the
+    decaying-spectrum regime the technique targets. Exact-identity tests
+    must NOT depend on this (they hold either way).
+
+    Runs on host (numpy SVD) at build time; batched leaves (L, K, N) are
+    shaped per matrix. Leaves the selector excludes (embeddings, norms,
+    biases) pass through untouched, shapes and dtypes are preserved.
+    """
+    if alpha < 0:
+        raise ValueError(f"alpha must be >= 0, got {alpha}")
+    sel = selector if selector is not None else CompressionConfig()
+    targets = {}
+    for p, w in eligible_linears(params, sel):
+        wn = np.asarray(w, np.float64)
+        u, s, vt = np.linalg.svd(wn, full_matrices=False)
+        t = np.arange(1, s.shape[-1] + 1, dtype=np.float64) ** -alpha
+        t = t * (np.linalg.norm(s, axis=-1, keepdims=True)
+                 / np.linalg.norm(t))
+        targets[p] = jnp.asarray(((u * t[..., None, :]) @ vt)
+                                 .astype(np.asarray(w).dtype))
+    return jax.tree_util.tree_map_with_path(
+        lambda p, x: targets.get(path_str(p), x), params)
 
 
 def _runtime_format(node, act_wl: int, pack: bool):

@@ -193,12 +193,15 @@ def truncate(lr: LowRankQ, rank: int) -> LowRankQ:
                          "unpack_weights the node first (packing happens "
                          "after rank selection, in compress_params)")
     # dataclasses.replace keeps the non-layout aux (act_wl) intact —
-    # truncation must not silently reset an A4/A6 plan back to A8
+    # truncation must not silently reset an A4/A6 plan back to A8.
+    # Ellipsis indexing makes this correct for scan-stacked leaves too:
+    # w1 is (..., K, r) and w2 is (..., r, N) whether or not a leading
+    # layer axis is present.
     return LowRankQ(
-        dataclasses.replace(lr.w1, values=lr.w1.values[:, :rank],
-                            scale=lr.w1.scale[:, :rank]),
-        dataclasses.replace(lr.w2, values=lr.w2.values[:rank, :],
-                            scale=lr.w2.scale[:rank, :]),
+        dataclasses.replace(lr.w1, values=lr.w1.values[..., :rank],
+                            scale=lr.w1.scale[..., :rank]),
+        dataclasses.replace(lr.w2, values=lr.w2.values[..., :rank, :],
+                            scale=lr.w2.scale[..., :rank, :]),
     )
 
 

@@ -248,3 +248,99 @@ def best_point(m, k, n, r=None, *, weight_wl=8, act_wl=8, hbm_bw=HBM_BW,
             if best is None or c.latency_s < best.latency_s:
                 best = c
     return best
+
+
+# ------------------------------------------------------------- speculation --
+
+@dataclasses.dataclass(frozen=True)
+class SpeculationPoint:
+    """Priced self-speculative decoding trade for one (k, accept_rate)
+    operating point (runtime/speculation.py is the thing being priced)."""
+
+    k: int
+    accept_rate: float
+    expected_tokens: float          # E[tokens emitted per round]
+    round_s: float                  # k draft steps + one verify step
+    tokens_per_s: float
+    baseline_tokens_per_s: float    # plain decode: 1 / full_step_s
+    speedup: float
+    breakeven_accept_rate: float    # min a where this k stops losing
+
+
+def expected_tokens_per_round(k: int, accept_rate: float) -> float:
+    """E[tokens emitted per speculative round] under i.i.d. per-token
+    draft acceptance probability a: the accepted prefix is geometric
+    truncated at k, and the verify pass always contributes one more
+    token (the full model's own token at the first divergence, or the
+    bonus token after a full accept):
+
+        E = 1 + a + a^2 + ... + a^k = (1 - a^(k+1)) / (1 - a)
+    """
+    if k < 0:
+        raise ValueError(f"k must be >= 0, got {k}")
+    if not 0.0 <= accept_rate <= 1.0:
+        raise ValueError(f"accept_rate must be in [0, 1], got {accept_rate}")
+    if accept_rate >= 1.0:
+        return float(k + 1)
+    return (1.0 - accept_rate ** (k + 1)) / (1.0 - accept_rate)
+
+
+def breakeven_accept_rate(k: int, *, draft_cost_ratio: float,
+                          verify_cost_ratio: float = 1.0) -> float:
+    """Smallest per-token acceptance rate at which drafting k tokens per
+    round emits tokens at least as fast as plain decode.
+
+    A round costs k * draft_cost_ratio + verify_cost_ratio full-model
+    steps and emits E(k, a) tokens, so the breakeven solves
+    E(k, a) = k * dc + vc. E is strictly increasing in a, so bisection
+    converges; the needed E grows linearly in k while E(k, a) saturates
+    at 1/(1-a), so the breakeven rate is monotone non-decreasing in k —
+    deeper drafts demand better drafts (asserted in tests). Returns 1.0
+    when even a perfect draft cannot pay for itself (draft as expensive
+    as the full model)."""
+    if k < 1:
+        raise ValueError(f"k must be >= 1, got {k}")
+    if draft_cost_ratio <= 0.0 or verify_cost_ratio <= 0.0:
+        raise ValueError("cost ratios must be positive")
+    target = k * draft_cost_ratio + verify_cost_ratio
+    if expected_tokens_per_round(k, 1.0) <= target:
+        return 1.0
+    lo, hi = 0.0, 1.0
+    for _ in range(60):
+        mid = 0.5 * (lo + hi)
+        if expected_tokens_per_round(k, mid) < target:
+            lo = mid
+        else:
+            hi = mid
+    return hi
+
+
+def speculation_point(k: int, accept_rate: float, *, full_step_s: float,
+                      draft_step_s: float,
+                      verify_step_s: float | None = None) -> SpeculationPoint:
+    """Price one self-speculative operating point so the DSE can weigh
+    draft depth k against a plan's measured/predicted acceptance rate.
+
+    full_step_s   — one plain full-model decode step (the baseline pays
+                    this per token; also the default verify cost).
+    draft_step_s  — one truncated-cascade draft step (from the cascade
+                    engine points at the draft rank).
+    verify_step_s — the (k+1)-wide verify pass; defaults to full_step_s
+                    (decode steps at serving widths are memory-bound, so
+                    widening the span is nearly free — the whole reason
+                    speculation pays).
+    """
+    if full_step_s <= 0.0 or draft_step_s <= 0.0:
+        raise ValueError("step times must be positive")
+    verify_step_s = full_step_s if verify_step_s is None else verify_step_s
+    e = expected_tokens_per_round(k, accept_rate)
+    round_s = k * draft_step_s + verify_step_s
+    tps = e / round_s
+    base = 1.0 / full_step_s
+    return SpeculationPoint(
+        k=int(k), accept_rate=float(accept_rate), expected_tokens=e,
+        round_s=round_s, tokens_per_s=tps, baseline_tokens_per_s=base,
+        speedup=tps / base,
+        breakeven_accept_rate=breakeven_accept_rate(
+            k, draft_cost_ratio=draft_step_s / full_step_s,
+            verify_cost_ratio=verify_step_s / full_step_s))

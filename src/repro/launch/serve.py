@@ -72,6 +72,18 @@ def main(argv=None):
                     help="serving attention over the blocked KV pool: "
                          "Pallas paged-attention kernel vs jnp gather "
                          "oracle (auto = kernel on TPU, oracle on CPU)")
+    ap.add_argument("--speculate", type=int, default=0, metavar="K",
+                    help="self-speculative decoding: draft K tokens per "
+                         "decode row with the truncated low-rank cascade, "
+                         "verify with the full model in the same dispatch "
+                         "(greedy outputs are unchanged; needs --ragged "
+                         "and a low-rank plan to actually save work)")
+    ap.add_argument("--draft-rank-fraction", type=float, default=0.5,
+                    help="fraction of each cascade's rank the draft model "
+                         "keeps (see runtime.speculation.DraftSpec)")
+    ap.add_argument("--draft-act-wl", type=int, default=None,
+                    help="optional activation word length override for "
+                         "the draft pass (default: inherit the plan's)")
     ap.add_argument("--ragged", action="store_true",
                     help="mixed-length demo: vary prompt lengths and serve "
                          "through the continuous-batching scheduler")
@@ -91,11 +103,19 @@ def main(argv=None):
     else:
         plan = None
 
+    speculate = None
+    if args.speculate > 0:
+        from repro.api import DraftSpec
+
+        speculate = DraftSpec(k=args.speculate,
+                              rank_fraction=args.draft_rank_fraction,
+                              act_wl=args.draft_act_wl)
     engine = InferenceEngine.build(cfg, plan, seed=args.seed, verbose=True,
                                    max_batch=args.max_batch,
                                    block_size=args.block_size,
                                    chunk_tokens=args.chunk_tokens,
-                                   paged_attn=args.paged_attn)
+                                   paged_attn=args.paged_attn,
+                                   speculate=speculate)
 
     task = pipeline.MarkovTask(cfg.vocab_size, seed=args.seed)
     prompts = task.batch(0, args.batch, args.prompt_len)["tokens"]
@@ -120,6 +140,10 @@ def main(argv=None):
         print(f"[serve] latency: TTFT p50 {res.ttft_p50 * 1e3:.0f}ms / "
               f"p95 {res.ttft_p95 * 1e3:.0f}ms, per-output-token p50 "
               f"{res.tpot_p50 * 1e3:.1f}ms / p95 {res.tpot_p95 * 1e3:.1f}ms")
+        if res.spec_k:
+            print(f"[serve] speculation: k={res.spec_k}, accept rate "
+                  f"{res.accept_rate:.2f} ({res.accepted}/{res.drafted} "
+                  f"draft tokens over {res.spec_rounds} rounds)")
         print("[serve] sample:", res.outputs[0][:16].tolist())
         return np.stack(res.outputs)
 

@@ -375,7 +375,8 @@ def prefill(params, inputs, cfg, *, max_len=None, cache_dtype=None,
     return logits, cache
 
 
-def unified_step(params, pool, block_tables, ctx_lens, q_lens, inputs, cfg):
+def unified_step(params, pool, block_tables, ctx_lens, q_lens, inputs, cfg,
+                 verify_width: int = 0):
     """ONE token-budget serving step over a blocked KV pool: every active
     row advances by a span of `q_lens[r]` tokens — a prefill chunk, a
     single decode token, or nothing — in a single forward pass.
@@ -404,6 +405,15 @@ def unified_step(params, pool, block_tables, ctx_lens, q_lens, inputs, cfg):
     ceil((ctx+q)/block_size) valid blocks — O(ctx) HBM bytes per step —
     and dequantizes int8 KV in VMEM; "ref" (the CPU default) runs the
     jnp gather oracle the kernel is identity-tested against.
+
+    verify_width > 0 is the multi-token speculative-verify mode
+    (runtime/speculation.py): logits come back for span positions
+    0..verify_width-1 PLUS each row's last-valid position appended —
+    shape (B, verify_width + 1, V) — so one step both verifies a k-token
+    draft span (positions 0..k-1 predict tokens 1..k) and still yields
+    the last-position logits prefill-finishing rows sample from. The lm
+    head runs on verify_width + 1 positions regardless of W, so wide
+    prefill chunks pay nothing extra. verify_width must be <= W.
     """
     from repro.runtime.kvblocks import check_paged_support
 
@@ -429,6 +439,11 @@ def unified_step(params, pool, block_tables, ctx_lens, q_lens, inputs, cfg):
     last = jnp.maximum(q_lens - 1, 0)[:, None, None]      # (B, 1, 1)
     h1 = jnp.take_along_axis(h, jnp.broadcast_to(
         last, (h.shape[0], 1, h.shape[2])), axis=1)       # (B, 1, D)
+    if verify_width:
+        if verify_width > h.shape[1]:
+            raise ValueError(f"verify_width {verify_width} exceeds span "
+                             f"width {h.shape[1]}")
+        h1 = jnp.concatenate([h[:, :verify_width], h1], axis=1)
     return logits_for(params, h1, cfg), pool
 
 

@@ -52,6 +52,13 @@ def blocks_needed(prompt_len: int, max_tokens: int, block_size: int) -> int:
     return -(-(prompt_len + max(max_tokens, 1) - 1) // block_size)
 
 
+def blocks_for_positions(n_positions: int, block_size: int) -> int:
+    """Block-table entries covering the first `n_positions` pool slots —
+    the committed-context footprint the speculative rollback rewinds to
+    (scheduler.Scheduler.commit_speculation)."""
+    return -(-max(n_positions, 0) // block_size)
+
+
 class BlockPool:
     """Host-side free-list allocator over `num_blocks` KV blocks.
 

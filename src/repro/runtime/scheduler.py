@@ -37,7 +37,8 @@ import dataclasses
 
 import numpy as np
 
-from repro.runtime.kvblocks import BlockPool, blocks_needed
+from repro.runtime.kvblocks import (BlockPool, blocks_for_positions,
+                                    blocks_needed)
 
 
 @dataclasses.dataclass
@@ -73,6 +74,11 @@ class Sequence:
     block_ids: list[int]
     prefilled: int = 0
     n_emitted: int = 0
+    # KV blocks provisionally allocated for a speculative draft span
+    # beyond the row's committed holdings (tail of block_ids, position
+    # order). Rolled back by commit_speculation after verify; empty
+    # whenever admission reserved the worst case up front.
+    draft_blocks: list[int] = dataclasses.field(default_factory=list)
 
     @property
     def prompt_len(self) -> int:
@@ -101,16 +107,24 @@ class ScheduleOutput:
     admitted: list[Sequence]
     prefill: dict[int, int]       # row -> prompt-chunk width this step
     decode: list[int]             # rows advancing by one decode token
+    # row -> draft tokens to speculate this step (subset of decode rows;
+    # the row's verify span is 1 + spec[row] wide). Empty dict when
+    # speculation is off or no budget was left for it.
+    spec: dict[int, int] = dataclasses.field(default_factory=dict)
 
     @property
     def total_tokens(self) -> int:
-        return sum(self.prefill.values()) + len(self.decode)
+        return (sum(self.prefill.values()) + len(self.decode)
+                + sum(self.spec.values()))
 
     @property
     def max_span(self) -> int:
         """Widest per-row span this step (the forward pass's W)."""
-        return max(max(self.prefill.values(), default=0),
-                   1 if self.decode else 0)
+        d = 0
+        if self.decode:
+            d = 1 + max((self.spec.get(r, 0) for r in self.decode),
+                        default=0)
+        return max(max(self.prefill.values(), default=0), d)
 
     @property
     def is_mixed(self) -> bool:
@@ -174,7 +188,7 @@ class Scheduler:
         return seq
 
     # ---------------------------------------------------------- schedule --
-    def schedule(self, token_budget: int) -> ScheduleOutput:
+    def schedule(self, token_budget: int, spec_k: int = 0) -> ScheduleOutput:
         """Plan one unified step: admit FCFS, then split `token_budget`
         tokens across the active rows. Decode rows (prompt fully in the
         pool, request unfinished) always advance — one token each, even
@@ -186,14 +200,22 @@ class Scheduler:
         other row's padding, while even chunks keep the span — and the
         step's compute — near the useful-token count. Budget a
         short-remaining row leaves unused simply idles this step; the
-        next step re-budgets from scratch."""
+        next step re-budgets from scratch.
+
+        spec_k > 0 offers each decode row up to spec_k speculative draft
+        tokens out of whatever budget prefill chunks left over — drafts
+        rank below admission latency, so speculation ramps up exactly
+        when the batch turns decode-bound (where it pays). Per-row
+        grants are clamped by `reserve_speculation` (never past the
+        request's final token, never past the block pool)."""
         if token_budget < 1:
             raise ValueError(f"token_budget must be >= 1, got {token_budget}")
         admitted = []
         while (seq := self.try_admit()) is not None:
             admitted.append(seq)
         live = [s for s in self.rows if s is not None]
-        decode = [s.row for s in live if s.prefill_done and not s.done]
+        decoding = [s for s in live if s.prefill_done and not s.done]
+        decode = [s.row for s in decoding]
         budget = max(0, token_budget - len(decode))
         prefill: dict[int, int] = {}
         filling = sorted((s for s in live if not s.prefill_done),
@@ -205,8 +227,70 @@ class Scheduler:
                 if chunk > 0:
                     prefill[seq.row] = chunk
                     budget -= chunk
+        spec: dict[int, int] = {}
+        if spec_k > 0:
+            for seq in decoding:
+                if budget <= 0:
+                    break
+                kr = self.reserve_speculation(seq, min(spec_k, budget))
+                if kr > 0:
+                    spec[seq.row] = kr
+                    budget -= kr
         return ScheduleOutput(admitted=admitted, prefill=prefill,
-                              decode=decode)
+                              decode=decode, spec=spec)
+
+    # ------------------------------------------------------- speculation --
+    def reserve_speculation(self, seq: Sequence, k: int) -> int:
+        """Clamp a draft offer to what the row can legally speculate and
+        provisionally allocate any KV blocks the draft span needs beyond
+        the row's current holdings. The clamp `k <= remaining - 1` keeps
+        the (k+1)-wide verify span from writing past position
+        prompt_len + max_tokens - 2 — inside the admission-time
+        worst-case reservation AND the static block-table width, so a
+        fully-accepted round never outruns either. Returns the granted k
+        (possibly shrunk to what the pool can back); newly allocated
+        blocks are recorded in `seq.draft_blocks` as the rollback
+        watermark for commit_speculation."""
+        k = max(0, min(int(k), seq.max_tokens - seq.n_emitted - 1))
+        while k > 0:
+            # last pool position the verify span writes: the span covers
+            # [C, C + k] and caches all but its newest token
+            end = seq.prompt_len + seq.n_emitted - 1 + k
+            need = (blocks_for_positions(end + 1, self.pool.block_size)
+                    - len(seq.block_ids))
+            if need <= 0:
+                return k
+            if self.pool.can_alloc(need):
+                got = self.pool.alloc(need)
+                seq.block_ids.extend(got)
+                seq.draft_blocks.extend(got)
+                return k
+            k -= 1          # shrink the draft until the pool can back it
+        return 0
+
+    def commit_speculation(self, seq: Sequence) -> list[int]:
+        """Accept/reject rollback after a verify: with `seq.n_emitted`
+        already advanced by the accepted tokens, free every provisional
+        draft block the committed context does not reach. Draft blocks
+        the accepted prefix DID reach become permanent holdings; the
+        rollback never releases below the row's pre-draft holdings (the
+        admission-time worst case, when it was reservable) and can never
+        touch the reserved trash block 0 (the pool never hands it out).
+        Returns the released block ids. Rejected positions need no data
+        rewind: span reads mask to `slot <= position` so stale K/V past
+        the committed context is never read, and the next span's
+        write-then-attend overwrites it."""
+        if not seq.draft_blocks:
+            return []
+        base = len(seq.block_ids) - len(seq.draft_blocks)
+        committed = max(seq.prompt_len + seq.n_emitted - 1, 0)
+        keep = max(blocks_for_positions(committed, self.pool.block_size),
+                   base)
+        released = seq.block_ids[keep:]
+        seq.block_ids = seq.block_ids[:keep]
+        seq.draft_blocks = []
+        self.pool.free(released)
+        return released
 
     # ---------------------------------------------------------- eviction --
     def finish(self, seq: Sequence) -> None:

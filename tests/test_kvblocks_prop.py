@@ -8,6 +8,12 @@ uphold:
     not currently held is a hard error (no double-free);
   * `available` always equals capacity minus blocks held — the free list
     never drifts from the allocation set.
+
+The speculative draft path adds provisional allocation on top
+(`Scheduler.reserve_speculation` / `commit_speculation`): under ANY
+sequence of reserve→accept→rollback rounds, rejected drafts must return
+every provisional block, the trash block must never be captured, and a
+row's holdings must stay consistent with its committed context.
 """
 import numpy as np
 import pytest
@@ -17,7 +23,9 @@ try:
 except ImportError:
     from hypothesis_fallback import given, settings, strategies as st
 
-from repro.runtime.kvblocks import BlockPool, span_slots
+from repro.runtime.kvblocks import (BlockPool, blocks_for_positions,
+                                    span_slots, valid_block_counts)
+from repro.runtime.scheduler import Request, Scheduler, Sequence
 
 settings.register_profile("ci", max_examples=40, deadline=None)
 settings.load_profile("ci")
@@ -94,3 +102,91 @@ def test_span_slots_route_every_valid_token_once(bsz, ctx, qlen):
     # valid slots are distinct (no token overwrites another)
     valid = [(int(blk[i]), int(off[i])) for i in range(qlen)]
     assert len(valid) == len(set(valid))
+
+
+@st.composite
+def spec_rounds(draw):
+    """A pool geometry, one under-provisioned decoding row, and a script
+    of speculative rounds: each round offers k draft tokens and then
+    accepts a (possibly empty) prefix of whatever was granted. The row
+    starts holding only its committed-context blocks — NOT the admission
+    worst case — so reserve_speculation genuinely has to allocate."""
+    block_size = draw(st.integers(1, 4))
+    prompt_len = draw(st.integers(1, 10))
+    max_tokens = draw(st.integers(2, 20))
+    # sometimes too small to back every draft: the shrink path must
+    # engage, never crash
+    num_blocks = draw(st.integers(2, 30))
+    rounds = [(draw(st.integers(1, 6)),    # k offered
+               draw(st.integers(0, 6)))    # acceptance draw
+              for _ in range(draw(st.integers(1, 12)))]
+    return block_size, prompt_len, max_tokens, num_blocks, rounds
+
+
+@given(spec_rounds())
+def test_speculative_rollback_never_leaks(case):
+    block_size, prompt_len, max_tokens, num_blocks, rounds = case
+    pool = BlockPool(num_blocks, block_size)
+    committed = prompt_len            # prompt cached, first token pending
+    base_need = blocks_for_positions(committed, block_size)
+    if base_need > pool.capacity:
+        return                        # config can't even hold the prompt
+    sched = Scheduler(pool, 1)
+    req = Request(tokens=np.ones(prompt_len, np.int32),
+                  max_tokens=max_tokens, rid=0)
+    seq = Sequence(req=req, row=0, block_ids=pool.alloc(base_need),
+                   prefilled=prompt_len, n_emitted=1)
+    for k_offer, acc_draw in rounds:
+        if seq.done:
+            break
+        avail_before = pool.available
+        held_before = len(seq.block_ids)
+        k = sched.reserve_speculation(seq, k_offer)
+        # grant is clamped inside the request and the pool
+        assert 0 <= k <= min(k_offer, seq.max_tokens - seq.n_emitted - 1)
+        assert 0 not in seq.draft_blocks, "trash block 0 captured"
+        assert len(set(seq.block_ids)) == len(seq.block_ids)
+        if k == 0:
+            # no grant -> no draft round; a plain decode step would lean
+            # on the admission-time worst-case reservation, which this
+            # deliberately under-provisioned row does not carry
+            assert seq.draft_blocks == []
+            assert pool.available == avail_before
+            continue
+        # the grant covers through the verify span's last written
+        # position (index end -> end + 1 slots)
+        end = seq.prompt_len + seq.n_emitted - 1 + k
+        assert len(seq.block_ids) >= \
+            blocks_for_positions(end + 1, block_size)
+        # kernel-walk safety: the paged-attention metadata for this
+        # row's verify span never exceeds the blocks actually held
+        ctx0 = seq.prompt_len + seq.n_emitted - 1
+        vb = int(valid_block_counts(np.asarray([ctx0], np.int32),
+                                    np.asarray([1 + k], np.int32),
+                                    block_size, 1 << 30)[0])
+        assert vb <= len(seq.block_ids)
+        # accept a prefix: 0..k drafts survive, plus the full model's own
+        # token (every verify emits at least one)
+        seq.n_emitted += min(acc_draw, k) + 1
+        released = sched.commit_speculation(seq)
+        assert seq.draft_blocks == []
+        assert 0 not in released
+        # reject-then-free leaks nothing: blocks either stayed with the
+        # row or went back to the pool, and the free list agrees
+        assert pool.available == \
+            pool.capacity - len(seq.block_ids), \
+            "pool accounting drifted across a speculative round"
+        # holdings rewound to the committed context (never below the
+        # pre-draft holdings, never past what the round allocated) —
+        # i.e. valid_block_counts for every future span over the cached
+        # context stays within the rewound table
+        ctx = seq.prompt_len + seq.n_emitted - 1
+        assert len(seq.block_ids) >= blocks_for_positions(ctx, block_size)
+        assert int(valid_block_counts(
+            np.asarray([max(ctx - 1, 0)], np.int32),
+            np.asarray([1], np.int32), block_size,
+            len(seq.block_ids))[0]) <= len(seq.block_ids)
+        assert held_before <= len(seq.block_ids) + len(released)
+        assert pool.available <= avail_before
+    sched.finish(seq)
+    assert pool.available == pool.capacity, "blocks leaked after finish"

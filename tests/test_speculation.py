@@ -1,0 +1,418 @@
+"""Self-speculative decoding tests (runtime/speculation.py + engine wiring).
+
+The load-bearing claims, per docs/serving.md and runtime/speculation.py:
+  * greedy speculative serve is token-identical to non-speculative serve
+    — the drafts only ever decide HOW MANY full-model tokens a dispatch
+    emits, never WHICH tokens (checked for fp32, bf16 and int8-KV
+    engines, on mixed prefill/decode batches with per-request
+    max_tokens);
+  * a draft that never matches costs throughput but not correctness
+    (forced-full-rejection: accepted == 0, outputs unchanged);
+  * the draft tree is free: dense leaves are shared by reference and
+    every cascade is the rank-truncated prefix of the served one;
+  * scheduling clamps draft spans inside the request's admission-time
+    reservation, and provisional KV blocks roll back without leaking;
+  * the TPU cost model prices the trade coherently (breakeven accept
+    rate monotone in draft depth);
+  * serve() is greedy-only and says so (temperature > 0 raises).
+"""
+import dataclasses
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.api import (CompressionPlan, DraftSpec, InferenceEngine,
+                       Request, SamplingParams)
+from repro.configs import get_config
+from repro.core import compress
+from repro.core.compress import CompressionConfig
+from repro.core.itera import LowRankQ
+from repro.core.quant import QuantizedTensor, unpack_weights
+from repro.hw import tpu_model
+from repro.models import transformer as tfm
+from repro.runtime import speculation
+from repro.runtime.kvblocks import BlockPool, blocks_for_positions
+from repro.runtime.scheduler import Scheduler, Sequence
+from repro.runtime.scheduler import Request as SchedRequest
+
+import jax
+import jax.numpy as jnp
+
+PLAN = CompressionConfig(method="itera", weight_wl=8, rank_fraction=0.75)
+SPEC = DraftSpec(k=3, rank_fraction=0.7)
+
+
+@pytest.fixture(scope="module")
+def engine():
+    """Low-rank smoke engine carrying its truncated-cascade draft.
+    chunk_tokens=8 forces real chunked prefill so speculative rounds mix
+    with mid-prompt rows."""
+    cfg = get_config("opus-mt", smoke=True)
+    return InferenceEngine.build(cfg, PLAN, max_batch=3, block_size=4,
+                                 chunk_tokens=8, speculate=SPEC)
+
+
+@pytest.fixture(scope="module")
+def dense_engine():
+    cfg = get_config("opus-mt", smoke=True)
+    return InferenceEngine.build(cfg, None, max_batch=3, block_size=4,
+                                 chunk_tokens=8)
+
+
+def _requests(engine, seed=0):
+    """Mixed workload: prompts longer than the chunk budget (chunked
+    prefill) next to short ones, with per-request max_tokens."""
+    rng = np.random.default_rng(seed)
+    lens = [5, 11, 3, 9, 14, 6]
+    gens = [6, 3, 8, 5, 2, 7]
+    return [Request(tokens=rng.integers(0, engine.cfg.vocab_size, size=n),
+                    max_tokens=g) for n, g in zip(lens, gens)]
+
+
+def _assert_identical(res_off, res_on):
+    for i, (a, b) in enumerate(zip(res_off.outputs, res_on.outputs)):
+        np.testing.assert_array_equal(
+            a, b, err_msg=f"request {i}: speculative != plain")
+
+
+# ----------------------------------------------------------- identity --
+def test_speculative_serve_token_identical(engine):
+    reqs = _requests(engine)
+    off = engine.serve(reqs, speculate=False)
+    on = engine.serve(reqs, speculate=True)
+    _assert_identical(off, on)
+    assert off.spec_k == 0 and off.drafted == 0
+    assert on.spec_k == SPEC.k
+    assert on.drafted > 0 and on.spec_rounds > 0
+    assert 0 <= on.accepted <= on.drafted
+    assert on.accept_rate == on.accepted / on.drafted
+    # speculation emits more tokens per dispatch whenever anything is
+    # accepted; it must never take MORE steps than plain decode
+    assert on.steps <= off.steps
+
+
+@pytest.mark.parametrize("variant", ["bf16", "int8kv"])
+def test_speculative_identity_dtype_variants(variant):
+    """Token identity is a property of the greedy accept rule, not of
+    the fp32 reference numerics: it must survive bf16 weights and int8
+    KV-cache quantization."""
+    cfg = get_config("opus-mt", smoke=True)
+    cfg = (dataclasses.replace(cfg, dtype="bfloat16") if variant == "bf16"
+           else dataclasses.replace(cfg, kv_cache_bits=8))
+    eng = InferenceEngine.build(cfg, PLAN, max_batch=3, block_size=4,
+                                chunk_tokens=8, speculate=SPEC)
+    reqs = _requests(eng, seed=1)
+    _assert_identical(eng.serve(reqs, speculate=False),
+                      eng.serve(reqs, speculate=True))
+
+
+def test_forced_full_rejection(dense_engine):
+    """A pathological draft (negated lm head: its argmax is the full
+    model's argmin at the identical hidden state) must reject every
+    draft token yet leave the outputs untouched."""
+    eng = dense_engine
+    bad = dict(eng.params)
+    bad["lm_head"] = -eng.params["lm_head"]
+    ctl = speculation.SpeculationController(DraftSpec(k=2), eng.cfg,
+                                            eng.params, draft_params=bad)
+    prev = eng.speculation
+    eng.speculation = ctl
+    try:
+        reqs = _requests(eng, seed=2)
+        off = eng.serve(reqs, speculate=False)
+        on = eng.serve(reqs, speculate=True)
+    finally:
+        eng.speculation = prev
+    _assert_identical(off, on)
+    assert on.drafted > 0
+    assert on.accepted == 0, "argmin drafts cannot match argmax verify"
+
+
+# -------------------------------------------------------- draft tree --
+def test_draft_rank_granularity():
+    assert speculation.draft_rank(512, 0.5) == 256
+    # large ranks floor to the kernels' 64-lane granularity
+    assert speculation.draft_rank(512, 0.9) == 448
+    assert speculation.draft_rank(256, 0.3) == 64
+    # small ranks round freely (the kernels accept any rank there)
+    assert speculation.draft_rank(100, 0.5) == 50
+    assert speculation.draft_rank(8, 0.01) == 1
+    assert speculation.draft_rank(48, 1.0) == 48
+
+
+def _lowrank_leaves(tree):
+    return [l for l in jax.tree_util.tree_leaves(
+        tree, is_leaf=lambda x: isinstance(x, LowRankQ))
+        if isinstance(l, LowRankQ)]
+
+
+def test_derive_draft_truncates_and_shares(engine):
+    draft = engine.speculation.draft_params
+    served = _lowrank_leaves(engine.params)
+    drafted = _lowrank_leaves(draft)
+    assert served and len(served) == len(drafted)
+    for s, d in zip(served, drafted):
+        r = int(unpack_weights(s.w2).values.shape[-2])
+        rd = int(unpack_weights(d.w2).values.shape[-2])
+        assert rd == speculation.draft_rank(r, SPEC.rank_fraction) < r
+        # prefix consistency: the draft cascade IS the first rd
+        # components of the served one, not a re-decomposition
+        np.testing.assert_array_equal(
+            np.asarray(unpack_weights(d.w2).values),
+            np.asarray(unpack_weights(s.w2).values)[..., :rd, :])
+    # dense leaves (embeddings, norms, lm head) are shared by reference:
+    # the draft model costs no extra HBM
+    flat_s = jax.tree_util.tree_leaves(engine.params)
+    flat_d = jax.tree_util.tree_leaves(draft)
+    shared = sum(a is b for a, b in zip(flat_s, flat_d))
+    assert shared > 0
+    assert not speculation.is_exact_draft(engine.params, draft)
+
+
+def test_exact_draft_detection(engine):
+    exact = speculation.derive_draft_params(
+        engine.params, DraftSpec(k=2, rank_fraction=1.0))
+    assert speculation.is_exact_draft(engine.params, exact)
+    lowered = speculation.derive_draft_params(
+        engine.params, DraftSpec(k=2, rank_fraction=1.0, act_wl=6))
+    assert not speculation.is_exact_draft(engine.params, lowered)
+    qs = [l for l in jax.tree_util.tree_leaves(
+        lowered, is_leaf=lambda x: isinstance(x, QuantizedTensor))
+        if isinstance(l, QuantizedTensor)]
+    assert qs and all(q.act_wl == 6 for q in qs)
+
+
+# -------------------------------------------------------- spec / plan --
+def test_draftspec_validation():
+    with pytest.raises(ValueError, match="k must be >= 1"):
+        DraftSpec(k=0)
+    with pytest.raises(ValueError, match="rank_fraction"):
+        DraftSpec(rank_fraction=0.0)
+    with pytest.raises(ValueError, match="rank_fraction"):
+        DraftSpec(rank_fraction=1.5)
+    with pytest.raises(ValueError, match="act_wl"):
+        DraftSpec(act_wl=1)
+    spec = DraftSpec(k=5, rank_fraction=0.25, act_wl=6)
+    assert DraftSpec.from_dict(spec.to_dict()) == spec
+
+
+def test_plan_carries_draft_spec_through_json():
+    spec = DraftSpec(k=3, rank_fraction=0.6)
+    plan = CompressionPlan(layers=(), draft=spec, label="specced")
+    back = CompressionPlan.loads(plan.dumps())
+    assert back.draft == spec
+    assert "draft k=3" in plan.summary()
+    # absent draft stays absent (no silent default materialization)
+    bare = CompressionPlan.loads(CompressionPlan(layers=()).dumps())
+    assert bare.draft is None
+
+
+def test_build_speculate_resolution(engine):
+    """build(speculate=...) resolution: False beats the plan's draft,
+    ints become DraftSpec(k), plan.draft is the default."""
+    cfg = get_config("opus-mt", smoke=True)
+    eng = InferenceEngine.build(cfg, None, speculate=2)
+    assert eng.speculation is not None and eng.speculation.spec.k == 2
+    off = InferenceEngine.build(cfg, None, speculate=False)
+    assert off.speculation is None
+
+
+# ------------------------------------------------------ serve guards --
+def test_serve_is_greedy_only(dense_engine):
+    with pytest.raises(NotImplementedError, match="greedy-only"):
+        dense_engine.serve([np.arange(4)],
+                           SamplingParams(max_tokens=2, temperature=0.7))
+
+
+def test_speculate_true_requires_draft(dense_engine):
+    with pytest.raises(ValueError, match="no draft model"):
+        dense_engine.serve([np.arange(4)], SamplingParams(max_tokens=2),
+                           speculate=True)
+
+
+# ------------------------------------------------ scheduler clamping --
+def _live_seq(pool, prompt_len, max_tokens, n_emitted):
+    """A decoding row holding exactly the blocks its committed context
+    needs (NOT the admission worst case) — the under-provisioned state
+    where reserve_speculation must actually allocate."""
+    req = SchedRequest(tokens=np.ones(prompt_len, np.int32),
+                       max_tokens=max_tokens, rid=0)
+    committed = prompt_len + max(n_emitted - 1, 0)
+    seq = Sequence(req=req, row=0,
+                   block_ids=pool.alloc(
+                       blocks_for_positions(committed, pool.block_size)))
+    seq.prefilled = prompt_len
+    seq.n_emitted = n_emitted
+    return seq
+
+
+def test_reserve_clamps_to_remaining_tokens():
+    pool = BlockPool(16, 4)
+    sched = Scheduler(pool, 1)
+    # one token left: the (k+1)-wide verify span would cross the final
+    # token, so no draft at all
+    seq = _live_seq(pool, 6, 4, 3)
+    assert sched.reserve_speculation(seq, 4) == 0
+    assert seq.draft_blocks == []
+    # two left -> k clamps to 1
+    seq2 = Sequence(req=seq.req, row=0, block_ids=list(seq.block_ids),
+                    prefilled=6, n_emitted=2)
+    assert sched.reserve_speculation(seq2, 4) == 1
+
+
+def test_reserve_and_commit_roll_back_blocks():
+    pool = BlockPool(16, 4)
+    sched = Scheduler(pool, 1)
+    seq = _live_seq(pool, 7, 8, 1)        # committed ctx 7 -> 2 blocks
+    base = list(seq.block_ids)
+    avail0 = pool.available
+    k = sched.reserve_speculation(seq, 4)
+    assert k == 4
+    assert seq.draft_blocks, "span past the boundary must grow the table"
+    assert 0 not in seq.draft_blocks
+    # full rejection: one emitted token, provisional blocks all return
+    seq.n_emitted += 1
+    released = sched.commit_speculation(seq)
+    assert released and pool.available == avail0
+    assert seq.block_ids == base and seq.draft_blocks == []
+    # idempotent: a second commit is a no-op
+    assert sched.commit_speculation(seq) == []
+
+
+def test_commit_keeps_blocks_the_accepted_prefix_reached():
+    pool = BlockPool(16, 2)
+    sched = Scheduler(pool, 1)
+    seq = _live_seq(pool, 4, 8, 1)        # committed ctx 4 -> 2 blocks
+    k = sched.reserve_speculation(seq, 3)
+    assert k == 3 and len(seq.draft_blocks) >= 1
+    held = len(seq.block_ids)
+    seq.n_emitted += 3                     # 2 accepted + 1 full-model
+    sched.commit_speculation(seq)
+    # committed ctx is now 4 + 3 = 7 -> ceil(7/2) = 4 blocks stay
+    assert len(seq.block_ids) == 4 <= held
+    assert seq.draft_blocks == []
+
+
+def test_reserve_shrinks_to_pool_capacity():
+    pool = BlockPool(4, 2)                 # 3 usable blocks
+    sched = Scheduler(pool, 1)
+    seq = _live_seq(pool, 4, 10, 1)        # committed 4 -> 2 blocks held
+    # span end for k=4 needs blocks the pool can't back; k shrinks
+    k = sched.reserve_speculation(seq, 4)
+    assert 0 < k < 4
+    assert len(seq.block_ids) <= 3
+
+
+# ------------------------------------------------------- cost model --
+def test_expected_tokens_per_round():
+    f = tpu_model.expected_tokens_per_round
+    assert f(3, 0.0) == pytest.approx(1.0)
+    assert f(3, 1.0) == pytest.approx(4.0)
+    assert f(2, 0.5) == pytest.approx(1.75)
+    assert f(0, 0.9) == pytest.approx(1.0)   # k=0: the plain step
+    with pytest.raises(ValueError):
+        f(-1, 0.5)
+    with pytest.raises(ValueError):
+        f(3, 1.5)
+
+
+def test_breakeven_monotone_in_k():
+    """Deeper drafts need a better draft model: the accept rate at which
+    speculation breaks even must be non-decreasing in k (asserted for
+    the DSE's pricing, see hw/tpu_model.speculation_point)."""
+    for dc in (0.1, 0.3, 0.6):
+        bs = [tpu_model.breakeven_accept_rate(k, draft_cost_ratio=dc)
+              for k in range(1, 9)]
+        assert all(b2 >= b1 - 1e-12 for b1, b2 in zip(bs, bs[1:])), \
+            f"breakeven not monotone at draft_cost_ratio={dc}: {bs}"
+        assert all(0.0 <= b <= 1.0 for b in bs)
+    # k=1 closed form: a >= dc (E = 1 + a vs cost 1 + dc)
+    assert tpu_model.breakeven_accept_rate(
+        1, draft_cost_ratio=0.3) == pytest.approx(0.3, abs=1e-9)
+
+
+def test_speculation_point_prices_the_trade():
+    pt = tpu_model.speculation_point(4, 0.8, full_step_s=1.0,
+                                     draft_step_s=0.3)
+    assert pt.expected_tokens == pytest.approx(
+        tpu_model.expected_tokens_per_round(4, 0.8))
+    assert pt.round_s == pytest.approx(4 * 0.3 + 1.0)
+    assert pt.speedup > 1.0
+    assert pt.tokens_per_s == pytest.approx(
+        pt.baseline_tokens_per_s * pt.speedup)
+    # below breakeven the same geometry must lose
+    lo = tpu_model.speculation_point(4, pt.breakeven_accept_rate * 0.5,
+                                     full_step_s=1.0, draft_step_s=0.3)
+    assert lo.speedup < 1.0
+
+
+# ------------------------------------------------------- bench row --
+def test_bench_serving_records_speculation():
+    """The committed BENCH_serving.json must carry a speculation row
+    showing the draft actually pays on the decode-heavy workload."""
+    path = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_serving.json")
+    rec = json.load(open(path))
+    spec = rec.get("speculation")
+    assert spec is not None, "BENCH_serving.json lacks a speculation row"
+    assert spec["k"] >= 1
+    assert spec["drafted"] > 0
+    assert spec["accept_rate"] > 0.0
+    assert spec["tokens_per_second"] >= spec["baseline_tokens_per_second"]
+
+
+# -------------------------------------------------- proxy conditioning --
+def test_shape_spectra_power_law():
+    """shape_spectra turns a flat random spectrum into the decaying one
+    trained weights carry (the regime where rank truncation — and hence
+    the draft's acceptance rate — is meaningful), preserving singular
+    vectors' span, Frobenius norm, shape, dtype, and excluded leaves."""
+    rng = np.random.default_rng(0)
+    params = {
+        "layer": {"proj": jnp.asarray(
+            rng.standard_normal((48, 64)), jnp.float32)},
+        "embed": {"table": jnp.asarray(
+            rng.standard_normal((64, 40)), jnp.float32)},
+    }
+    shaped = compress.shape_spectra(params, alpha=2.0)
+    w = np.asarray(shaped["layer"]["proj"])
+    assert w.shape == (48, 64) and w.dtype == np.float32
+    s = np.linalg.svd(w, compute_uv=False)
+    ratio = s[:-1] / s[1:]
+    expect = ((np.arange(2, len(s) + 1) / np.arange(1, len(s))) ** 2.0)
+    np.testing.assert_allclose(ratio, expect, rtol=1e-3)
+    assert np.linalg.norm(w) == pytest.approx(
+        float(np.linalg.norm(np.asarray(params["layer"]["proj"]))),
+        rel=1e-5)
+    # excluded leaves (embeddings et al.) pass through untouched
+    assert shaped["embed"]["table"] is params["embed"]["table"]
+    with pytest.raises(ValueError, match="alpha"):
+        compress.shape_spectra(params, alpha=-1.0)
+
+
+def test_shaped_proxy_drafts_accept():
+    """End-to-end rationale check: on a spectrum-shaped proxy the
+    truncated-rank draft agrees with the full model often enough to be a
+    useful draft (flat random-init spectra make acceptance collapse —
+    the artifact shape_spectra exists to remove)."""
+    cfg = get_config("opus-mt", smoke=True)
+    params = compress.shape_spectra(
+        tfm.init_params(jax.random.PRNGKey(0), cfg), alpha=2.0)
+    eng = InferenceEngine.build(
+        cfg, CompressionConfig(method="svd", weight_wl=8,
+                               rank_fraction=0.75),
+        params=params, max_batch=2, block_size=8, chunk_tokens=16,
+        speculate=DraftSpec(k=3, rank_fraction=0.84))
+    reqs = [Request(tokens=np.arange(1, 9, dtype=np.int32) * 3 % 512,
+                    max_tokens=24),
+            Request(tokens=np.arange(1, 6, dtype=np.int32) * 7 % 512,
+                    max_tokens=24)]
+    off = eng.serve(reqs, speculate=False)
+    on = eng.serve(reqs, speculate=True)
+    _assert_identical(off, on)
+    assert on.drafted > 0
+    assert on.accepted / on.drafted > 0.5, (
+        f"shaped-spectrum draft acceptance collapsed: "
+        f"{on.accepted}/{on.drafted}")

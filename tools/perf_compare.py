@@ -173,6 +173,14 @@ SERVING_METRICS = [
     ("TTFT p95 (ms)", ("continuous", "ttft_p95_s"), 1e3),
     ("TPOT p50 (ms)", ("continuous", "tpot_p50_s"), 1e3),
     ("TPOT p95 (ms)", ("continuous", "tpot_p95_s"), 1e3),
+    # self-speculative decoding section (fig13 --speculate K; rows print
+    # '-' for runs benchmarked without it)
+    ("spec tok/s", ("speculation", "tokens_per_second"), 1.0),
+    ("spec baseline tok/s",
+     ("speculation", "baseline_tokens_per_second"), 1.0),
+    ("spec speedup vs plain", ("speculation", "speedup_vs_plain"), 1.0),
+    ("spec accept rate", ("speculation", "accept_rate"), 1.0),
+    ("spec draft depth k", ("speculation", "k"), 1.0),
 ]
 
 
