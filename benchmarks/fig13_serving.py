@@ -192,6 +192,87 @@ def run_speculation(args):
     }
 
 
+TP_N = 8                  # requests in the TP section: identity + bytes
+TP_REPEAT = 2             # accounting, not a perf claim (see run_tp)
+
+
+def run_tp(args):
+    """Tensor-parallel serving section: the SAME weights served through
+    the shard_map engine on a (1, --mesh) device mesh vs the
+    single-device engine, greedy outputs hard-asserted token-identical
+    request by request on every run.
+
+    On CPU the "devices" are forced host-platform devices sharing one
+    processor (XLA_FLAGS=--xla_force_host_platform_device_count), so the
+    tok/s column is a bookkeeping canary, NOT a scaling claim — the row
+    that matters for the DSE is the communication side:
+    `hw.tpu_model.tp_point` prices the step's 2L boundary all-reduces
+    (ring wire bytes per chip, ICI seconds) at this geometry, which is
+    what a real multi-chip deployment pays."""
+    from repro.hw import tpu_model
+    from repro.launch.mesh import make_serving_mesh
+
+    if len(jax.devices()) < args.mesh:
+        raise SystemExit(
+            f"--mesh {args.mesh} needs {args.mesh} devices, have "
+            f"{len(jax.devices())}: run under XLA_FLAGS=--xla_force_"
+            f"host_platform_device_count={args.mesh}")
+    cfg = get_config("opus-mt", smoke=args.smoke)
+    params = tfm.init_params(jax.random.PRNGKey(args.seed), cfg)
+    n = min(args.n, TP_N)
+    reqs = make_workload(n, cfg.vocab_size, seed=args.seed)
+    kw = dict(params=params, max_batch=args.max_batch,
+              block_size=args.block_size, chunk_tokens=args.chunk_tokens)
+    solo = InferenceEngine.build(cfg, None, **kw)
+    tp = InferenceEngine.build(cfg, None, mesh=make_serving_mesh(args.mesh),
+                               **kw)
+    solo.serve(reqs)                                   # warmup both engines
+    tp.serve(reqs)
+    base = on = None
+    for _ in range(max(min(args.repeat, TP_REPEAT), 1)):
+        r0 = solo.serve(reqs)
+        r1 = tp.serve(reqs)
+        mism = [i for i in range(len(reqs))
+                if not np.array_equal(r0.outputs[i], r1.outputs[i])]
+        assert not mism, (
+            f"request {mism[0]}: tp={args.mesh} {r1.outputs[mism[0]]} "
+            f"!= single-device {r0.outputs[mism[0]]}")
+        if base is None or r0.seconds < base.seconds:
+            base = r0
+        if on is None or r1.seconds < on.seconds:
+            on = r1
+    import jax.numpy as jnp
+
+    point = tpu_model.tp_point(
+        batch=args.max_batch, span_w=1, d_model=cfg.d_model,
+        num_layers=cfg.num_layers, tp=args.mesh,
+        dtype_bytes=jnp.dtype(cfg.dtype).itemsize)
+    print(f"tp: mesh {args.mesh}, {on.tokens_per_second:.1f} tok/s vs "
+          f"{base.tokens_per_second:.1f} single-device, "
+          f"{point.allreduce_bytes / 1024:.1f} KiB all-reduce wire/chip/"
+          f"step ({point.boundaries} boundaries, "
+          f"{point.allreduce_s * 1e6:.1f}us ICI); "
+          f"{len(reqs)}/{len(reqs)} requests token-identical")
+    return {
+        "mesh": args.mesh,
+        "model": cfg.name,
+        "workload": {"n": n, "prompt_lens": list(PROMPT_LENS),
+                     "gen_lens": list(GEN_LENS), "seed": args.seed,
+                     "max_batch": args.max_batch,
+                     "block_size": args.block_size,
+                     "chunk_tokens": args.chunk_tokens},
+        "identical_requests": n,
+        "mismatched_requests": 0,
+        "steps": on.steps,
+        "tokens_per_second": on.tokens_per_second,
+        "baseline_tokens_per_second": base.tokens_per_second,
+        "allreduce_boundaries_per_step": point.boundaries,
+        "allreduce_payload_bytes": point.payload_bytes,
+        "allreduce_bytes_per_step": point.allreduce_bytes,
+        "allreduce_s_per_step": point.allreduce_s,
+    }
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--n", type=int, default=24, help="number of requests")
@@ -214,6 +295,14 @@ def main(argv=None):
                          "(dedicated dispatch-bound decode-heavy "
                          "regime, spec on vs off; outputs are asserted "
                          "token-identical)")
+    ap.add_argument("--mesh", type=int, default=0, metavar="N",
+                    help="also benchmark tensor-parallel serving on a "
+                         "(1, N) device mesh: greedy outputs are hard-"
+                         "asserted token-identical to the single-device "
+                         "engine and the step's all-reduce traffic is "
+                         "priced by hw.tpu_model.tp_point (needs N "
+                         "devices; on CPU force them with XLA_FLAGS=--"
+                         "xla_force_host_platform_device_count=N)")
     ap.add_argument("--draft-rank-fraction", type=float, default=0.17,
                     help="rank fraction the speculation draft keeps "
                          "(0.17 of the r0.75 plan's rank 48 = rank 8 at "
@@ -288,6 +377,8 @@ def main(argv=None):
     }
     if args.speculate > 0:
         report["speculation"] = run_speculation(args)
+    if args.mesh > 0:
+        report["tp"] = run_tp(args)
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2)
     print(f"static:     {static['tokens_per_second']:8.1f} tok/s "

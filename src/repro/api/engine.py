@@ -213,10 +213,18 @@ class InferenceEngine:
         self.plan = plan
         self.report = report
         self.mesh = mesh
+        # tensor-parallel serving: a mesh with a "model" axis shard-maps
+        # the unified step — params column/row-sliced, the KV pool
+        # head-sliced, one psum per attention/MLP boundary. The mesh
+        # model-axis size IS the TP degree (1 runs the same path).
+        self._tp = (int(mesh.shape["model"])
+                    if mesh is not None and "model" in mesh.axis_names
+                    else 0)
         # self-speculative decoding: derive the truncated-cascade draft
         # tree once at engine construction (it shares every dense array
         # with `params` by reference — no second checkpoint in HBM)
-        self.speculation = (SpeculationController(speculate, cfg, params)
+        self.speculation = (SpeculationController(speculate, cfg, params,
+                                                  mesh=mesh)
                             if speculate is not None else None)
         self.max_batch = max_batch      # serve(): batch-row capacity
         self.block_size = block_size    # serve(): KV block size (tokens)
@@ -251,6 +259,30 @@ class InferenceEngine:
         self._unified = jax.jit(
             lambda p, pool, bt, buf, prev: _serve_step(
                 p, pool, bt, buf, prev, cfg))
+        if self._tp:
+            # shard_map the SAME fused step: each shard runs it with the
+            # per-shard config (its slice of heads / hidden columns) over
+            # its head-slice of the pool; tokens / tables / buffers are
+            # replicated. tp_axis binds at trace time, so the boundary
+            # psums in transformer.unified_step land in this jaxpr only.
+            from jax.sharding import PartitionSpec as P
+
+            from repro.launch import sharding as shd
+            from repro.runtime import shardctx
+
+            shd.check_tp_geometry(cfg, self._tp)
+            lcfg = shd.tp_local_config(cfg, self._tp)
+            pspecs = shd.tp_param_specs(params, self._tp)
+            pool_specs = kvblocks.pool_pspecs(cfg)
+
+            def tp_body(p, pool, bt, buf, prev):
+                with shardctx.tp_axis("model"):
+                    return _serve_step(p, pool, bt, buf, prev, lcfg)
+
+            self._unified = jax.jit(shardctx.tp_shard_map(
+                tp_body, mesh,
+                in_specs=(pspecs, pool_specs, P(), P(), P()),
+                out_specs=(P(), P(), pool_specs)))
         # greedy sampling is the serving hot path: one fused jitted argmax
         # instead of a chain of eager ops + PRNG key splits per step.
         self._argmax = jax.jit(
@@ -311,8 +343,17 @@ class InferenceEngine:
         if mesh is not None:
             from repro.launch import sharding as shd
 
-            params = jax.device_put(params,
-                                    shd.param_shardings(params, mesh, cfg))
+            if "model" in mesh.axis_names:
+                # tensor-parallel serving placement: literal shard_map
+                # slices (launch.sharding._TP_RULES), so every leaf is
+                # already where its shard needs it and no per-dispatch
+                # resharding happens. Geometry must divide exactly.
+                shd.check_tp_geometry(cfg, int(mesh.shape["model"]))
+                params = jax.device_put(params,
+                                        shd.tp_param_shardings(params, mesh))
+            else:
+                params = jax.device_put(
+                    params, shd.param_shardings(params, mesh, cfg))
         if isinstance(speculate, DraftSpec):
             spec = speculate
         elif speculate is None:
@@ -436,10 +477,13 @@ class InferenceEngine:
         sampling = sampling or SamplingParams()
         if sampling.temperature > 0.0:
             raise NotImplementedError(
-                "serve() (in-flight batching) is greedy-only: speculative "
-                "verification and count-based scheduling rely on "
-                "deterministic argmax tokens. Use temperature=0, or "
-                "generate() on a rectangular batch for sampled decoding.")
+                f"serve() (in-flight batching) is greedy-only: speculative "
+                f"verification and count-based pipelined scheduling rely on "
+                f"deterministic argmax tokens, but "
+                f"SamplingParams.temperature={sampling.temperature} requests "
+                f"sampled decoding. Set SamplingParams.temperature=0 (the "
+                f"default, greedy), or use generate() on a rectangular "
+                f"batch, which does support temperature/top_k sampling.")
         ctl = self.speculation
         if speculate is False:
             ctl = None
@@ -472,6 +516,12 @@ class InferenceEngine:
             sched.submit(r)
 
         pool = kvblocks.init_paged_cache(self.cfg, num_blocks, bs)
+        if self._tp:
+            from jax.sharding import NamedSharding
+
+            pool = jax.device_put(
+                pool, {k: NamedSharding(self.mesh, s)
+                       for k, s in kvblocks.pool_pspecs(self.cfg).items()})
         tables = np.zeros((cap, mb), np.int32)
         out_vals: list[list[int]] = [[] for _ in reqs]
         first_tok_t = [None] * len(reqs)
@@ -481,7 +531,11 @@ class InferenceEngine:
 
         from repro.runtime import shardctx
 
-        ctx = (shardctx.use_mesh(self.mesh) if self.mesh is not None
+        # TP serving must NOT install the GSPMD mesh: the step is a
+        # shard_map program over manual axes, where maybe_shard's
+        # with_sharding_constraint is meaningless (and errors).
+        ctx = (shardctx.use_mesh(self.mesh)
+               if self.mesh is not None and not self._tp
                else contextlib.nullcontext())
         t0 = time.time()
 

@@ -26,7 +26,8 @@ import dataclasses
 from repro.core.quant import packed_pad_ok
 from repro.kernels.lowrank_qmm import vmem_bytes as lr_vmem
 from repro.kernels.quant_matmul import vmem_bytes as qm_vmem
-from repro.launch.mesh import HBM_BW, PEAK_OPS_INT8, VMEM_BYTES
+from repro.launch.mesh import (HBM_BW, ICI_BW_PER_LINK, ICI_LINKS,
+                               PEAK_OPS_INT8, VMEM_BYTES)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -344,3 +345,56 @@ def speculation_point(k: int, accept_rate: float, *, full_step_s: float,
         breakeven_accept_rate=breakeven_accept_rate(
             k, draft_cost_ratio=draft_step_s / full_step_s,
             verify_cost_ratio=verify_step_s / full_step_s))
+
+
+# -------------------------------------------------------- tensor parallel --
+
+@dataclasses.dataclass(frozen=True)
+class TpPoint:
+    """Priced tensor-parallel serving point: what the 2L boundary
+    all-reduces of the shard_map step (models/transformer.unified_step
+    under api.engine's TP wrapper) cost per step on the ICI fabric."""
+
+    tp: int
+    boundaries: int                 # psum sites per step (2 per layer)
+    payload_bytes: int              # logical bytes reduced per boundary
+    allreduce_bytes: int            # wire bytes per chip per step (all
+    #                                 boundaries, ring all-reduce)
+    allreduce_s: float              # ICI time per step
+    step_s: float | None            # single-device step, when supplied
+    tp_step_s: float | None         # modeled sharded step (compute/tp + ICI)
+    speedup: float | None           # step_s / tp_step_s
+
+
+def tp_point(*, batch: int, span_w: int, d_model: int, num_layers: int,
+             tp: int, dtype_bytes: int = 2, step_s: float | None = None,
+             ici_bw: float = ICI_BW_PER_LINK * ICI_LINKS) -> TpPoint:
+    """Price one TP serving configuration for the DSE.
+
+    The sharded step has exactly one all-reduce per attention boundary
+    and one per MLP boundary (2 * num_layers total), each over the
+    (batch, span_w, d_model) residual-stream activation. A ring
+    all-reduce moves 2 * (tp - 1) / tp of the payload over the wire per
+    chip, so tp = 1 prices to zero communication (it IS the
+    single-device engine). With `step_s` (the measured or modeled
+    single-device step) the point also reports the modeled sharded step
+    time — perfectly-scaled compute plus the all-reduce — and its
+    speedup; communication grows with tp while compute shrinks, which
+    is the crossover the DSE sweeps for."""
+    if tp < 1:
+        raise ValueError(f"tp must be >= 1, got {tp}")
+    if batch < 1 or span_w < 1 or d_model < 1 or num_layers < 1:
+        raise ValueError("batch/span_w/d_model/num_layers must be >= 1")
+    boundaries = 2 * num_layers
+    payload = batch * span_w * d_model * dtype_bytes
+    wire = int(boundaries * payload * 2 * (tp - 1) / tp)
+    allreduce_s = wire / ici_bw
+    tp_step_s = speedup = None
+    if step_s is not None:
+        if step_s <= 0.0:
+            raise ValueError(f"step_s must be positive, got {step_s}")
+        tp_step_s = step_s / tp + allreduce_s
+        speedup = step_s / tp_step_s
+    return TpPoint(tp=int(tp), boundaries=boundaries, payload_bytes=payload,
+                   allreduce_bytes=wire, allreduce_s=allreduce_s,
+                   step_s=step_s, tp_step_s=tp_step_s, speedup=speedup)

@@ -40,6 +40,16 @@ per query head.
 
 Like the matmul kernels, this runs compiled on TPU and bit-faithfully
 under `interpret=True` on CPU (how the identity tests drive it).
+
+Tensor parallelism: the kernel needs no TP awareness. Under the
+shard_map serving step (api.engine with a "model"-axis mesh) it is
+invoked per shard with the PER-SHARD config — `Hk` here is
+num_kv_heads / tp and the pool ref is that shard's head-slice
+(runtime.kvblocks.pool_pspecs), so the grid is (B, Hk/tp, MB) and each
+chip streams only its own heads' KV blocks. Attention is head-local,
+so no collective touches the kernel; the single psum per attention
+boundary happens outside, after the wo projection
+(models.transformer.unified_step).
 """
 from __future__ import annotations
 

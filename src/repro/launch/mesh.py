@@ -36,6 +36,30 @@ def make_test_mesh(data: int = 2, model: int = 4, *, pod: int = 0):
     return make_mesh((data, model), ("data", "model"))
 
 
+def make_serving_mesh(model: int, *, devices=None):
+    """A (data=1, model=N) mesh for tensor-parallel serving — the shape
+    `InferenceEngine.build(mesh=...)` shard-maps the unified step over.
+
+    Unlike `make_mesh`, this uses the FIRST `model` devices rather than
+    all of them, so a --xla_force_host_platform_device_count=8 test
+    process can build 1/2/4-way serving meshes side by side. N == 1 is
+    deliberately legal: it runs the same shard_map path (psum over one
+    device is the identity), so every mesh size exercises one code
+    path."""
+    import numpy as np
+
+    devices = list(jax.devices()) if devices is None else list(devices)
+    if model < 1:
+        raise ValueError(f"model axis must be >= 1, got {model}")
+    if len(devices) < model:
+        raise ValueError(
+            f"serving mesh needs {model} devices, have {len(devices)}: on "
+            f"CPU run under XLA_FLAGS=--xla_force_host_platform_device_"
+            f"count={model} (tests/test_tp_serving.py does exactly this)")
+    arr = np.asarray(devices[:model], dtype=object).reshape(1, model)
+    return jax.sharding.Mesh(arr, ("data", "model"))
+
+
 # TPU v5e hardware constants (per chip) for the roofline.
 PEAK_FLOPS_BF16 = 197e12      # FLOP/s
 PEAK_OPS_INT8 = 394e12        # OP/s

@@ -84,6 +84,14 @@ def main(argv=None):
     ap.add_argument("--draft-act-wl", type=int, default=None,
                     help="optional activation word length override for "
                          "the draft pass (default: inherit the plan's)")
+    ap.add_argument("--mesh", type=int, default=0, metavar="N",
+                    help="tensor-parallel serving: shard the engine over "
+                         "a (1, N) device mesh — attention/KV heads and "
+                         "MLP hidden dims split N ways, one all-reduce "
+                         "per layer boundary (greedy outputs unchanged; "
+                         "needs N devices — on CPU force them with "
+                         "XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=N)")
     ap.add_argument("--ragged", action="store_true",
                     help="mixed-length demo: vary prompt lengths and serve "
                          "through the continuous-batching scheduler")
@@ -110,7 +118,15 @@ def main(argv=None):
         speculate = DraftSpec(k=args.speculate,
                               rank_fraction=args.draft_rank_fraction,
                               act_wl=args.draft_act_wl)
+    mesh = None
+    if args.mesh > 0:
+        from repro.launch.mesh import make_serving_mesh
+
+        mesh = make_serving_mesh(args.mesh)
+        print(f"[serve] tensor-parallel over mesh (data=1, model="
+              f"{args.mesh})")
     engine = InferenceEngine.build(cfg, plan, seed=args.seed, verbose=True,
+                                   mesh=mesh,
                                    max_batch=args.max_batch,
                                    block_size=args.block_size,
                                    chunk_tokens=args.chunk_tokens,

@@ -197,6 +197,122 @@ def cache_shardings(cache, mesh, *, batch: int):
     return jax.tree_util.tree_map_with_path(visit, cache)
 
 
+# ---------------------------------------------------------------------------
+# shard_map tensor parallelism (serving).
+#
+# These rules are deliberately DIFFERENT from the GSPMD `_RULES` above:
+# shard_map hands each device a literal array slice, so there is no
+# implicit padding (GQA heads must divide exactly — `check_tp_geometry`
+# raises instead) and the slice axis must keep per-shard compute
+# *numerically* equal to a column/row block of the reference matmul.
+# N-sites (wq/wk/wv/gate/up: replicated input, sliced output columns)
+# are bit-exact per shard. K-sites (wo/down: sliced input features,
+# full output) produce partial sums the layer boundary psums restore.
+# For ITERA low-rank cascades that means w1 must NOT be R-sharded here
+# (the GSPMD rules R-shard it and let the compiler all-gather the
+# (B, R) intermediate): on an N-site the whole w1 is replicated and
+# only w2's output columns are sliced — bit-exact, the cascade's
+# intermediate activation quantization sees identical tensors on every
+# shard. On a K-site w1's input rows are sliced; its per-column scale
+# (1, R) stays replicated and w2 is replicated, and the cascade's
+# activation requant then runs over local features only — numerically
+# close but not bit-equal, which is why the TP identity tests compress
+# N-sites only.
+
+_TP_N = r"/(wq|wk|wv|gate|up)"
+_TP_K = r"/(wo|down)"
+
+# (regex, action): "col" slices the last dim, "row" the second-to-last,
+# "rep" replicates. First match wins.
+_TP_RULES = [
+    (_TP_N + r"/w1/(values|scale)$", "rep"),
+    (_TP_N + r"/w2/values$", "col"),
+    (_TP_N + r"/w2/scale$", "rep"),       # (R, 1) per-rank-row scale
+    (_TP_K + r"/w1/values$", "row"),
+    (_TP_K + r"/w1/scale$", "rep"),       # (1, R) per-column scale
+    (_TP_K + r"/w2/(values|scale)$", "rep"),
+    (_TP_N + r"(/values|/scale)?$", "col"),
+    (_TP_K + r"/values$", "row"),
+    (_TP_K + r"/scale$", "rep"),          # (1, N) per-output-column scale
+    (_TP_K + r"$", "row"),
+]
+
+
+def check_tp_geometry(cfg, tp: int) -> None:
+    """Raise unless `cfg` shards cleanly over a model axis of size `tp`.
+
+    shard_map cannot pad the way GSPMD does, so every sharded dimension
+    must divide exactly; the error names the ModelConfig field to fix."""
+    if tp <= 1:
+        return
+    if cfg.layout != "dense":
+        raise NotImplementedError(
+            f"tensor-parallel serving supports layout='dense' only, got "
+            f"layout={cfg.layout!r}")
+    bad = [f"ModelConfig.{name}={val}" for name, val in
+           (("num_heads", cfg.num_heads), ("num_kv_heads", cfg.num_kv_heads),
+            ("d_ff", cfg.d_ff)) if val % tp]
+    if bad:
+        raise ValueError(
+            f"model geometry does not divide the tensor-parallel axis "
+            f"(tp={tp}): {', '.join(bad)}. shard_map slices arrays "
+            f"literally — there is no GSPMD padding — so attention/KV "
+            f"heads and the MLP hidden dim must each be a multiple of "
+            f"the mesh 'model' axis size.")
+
+
+def tp_local_config(cfg, tp: int):
+    """The per-shard ModelConfig the shard_map body runs with: each
+    shard owns num_heads/tp query heads and num_kv_heads/tp KV heads.
+    head_dim is a concrete field after __post_init__, so it survives
+    the replace; d_model/d_ff are untouched (the weight slices carry
+    the hidden-dim split)."""
+    import dataclasses
+    if tp <= 1:
+        return cfg
+    return dataclasses.replace(cfg, num_heads=cfg.num_heads // tp,
+                               num_kv_heads=cfg.num_kv_heads // tp)
+
+
+def tp_spec_for(path: str, leaf, tp: int) -> P:
+    """shard_map PartitionSpec for one param leaf under `tp`-way TP."""
+    ndim = getattr(leaf, "ndim", 0)
+    if tp <= 1 or ndim < 2:
+        return P(*([None] * ndim))
+    action = "rep"
+    for pat, act in _TP_RULES:
+        if re.search(pat, path):
+            action = act
+            break
+    if action == "rep":
+        return P(*([None] * ndim))
+    dim = ndim - 1 if action == "col" else ndim - 2
+    if leaf.shape[dim] % tp:
+        raise ValueError(
+            f"TP cannot slice {path}: dim {dim} has size {leaf.shape[dim]}"
+            f", not divisible by tp={tp} (packed sub-8-bit leaves halve "
+            f"the packed axis — geometry must divide after packing)")
+    spec = [None] * ndim
+    spec[dim] = "model"
+    return P(*spec)
+
+
+def tp_param_specs(params, tp: int):
+    """PartitionSpec pytree (shard_map in_specs) for the serving params."""
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: tp_spec_for(path_str(p), l, tp), params)
+
+
+def tp_param_shardings(params, mesh):
+    """NamedSharding pytree placing params for the TP serving step, so
+    shard_map finds every leaf pre-sliced (no per-dispatch resharding)."""
+    tp = mesh.shape["model"]
+    specs = tp_param_specs(params, tp)
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
 def opt_shardings(opt_state, params, mesh, cfg=None, *, zero1=True):
     """Optimizer-state shardings.
 

@@ -352,7 +352,7 @@ def span_attention_paged(params, x, pool, block_table, ctx_lens, q_lens,
                             interpret=jax.default_backend() != "tpu")
     else:
         o = _span_attend_gather(q, pool, block_table, pos, cfg)
-    y = apply_linear(o.reshape(b, w, h * hd), params["wo"])
+    y = apply_linear(o.reshape(b, w, h * hd), params["wo"], reduce_tp=True)
     return y, pool
 
 

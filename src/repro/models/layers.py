@@ -32,9 +32,35 @@ def get_linear_mode() -> str:
     return _LINEAR_MODE
 
 
-def apply_linear(x: jax.Array, w, out_dtype=None) -> jax.Array:
-    """y = x @ w for w: Array | QuantizedTensor | LowRankQ."""
+def apply_linear(x: jax.Array, w, out_dtype=None, *,
+                 reduce_tp: bool = False) -> jax.Array:
+    """y = x @ w for w: Array | QuantizedTensor | LowRankQ.
+
+    reduce_tp marks the tensor-parallel REDUCTION sites (wo, mlp down):
+    under shard_map serving their input features are row-split across
+    shards, so the local product is a partial sum. With a TP axis bound
+    (runtime.shardctx.tp_axis) this computes the partial in f32, psums
+    it, and casts ONCE after the reduce — the same single rounding the
+    unsharded dot performs on its f32 accumulator, which is what keeps
+    bf16 TP serving token-identical to the single-device engine (bf16
+    partials rounded before the psum would drift). With no TP axis
+    bound (every non-serving path, single-device serving) the flag is
+    inert and this is the plain dispatch below.
+    """
     out_dtype = out_dtype or x.dtype
+    if reduce_tp:
+        from repro.runtime import shardctx
+
+        if shardctx.get_tp_axis() is not None:
+            if isinstance(w, (LowRankQ, QuantizedTensor)):
+                # compressed K-sites requantize activations over LOCAL
+                # features — numerically close, not bit-equal (see
+                # launch.sharding); still reduce in f32.
+                y = apply_linear(x, w, out_dtype=jnp.float32)
+            else:
+                y = jnp.matmul(x, w.astype(x.dtype),
+                               preferred_element_type=jnp.float32)
+            return shardctx.psum_tp(y).astype(out_dtype)
     if isinstance(w, LowRankQ):
         if _LINEAR_MODE == "ref" or (_LINEAR_MODE == "auto" and not kops.on_tpu()):
             return kops.lrmm(x, w, use_kernel=False, out_dtype=out_dtype)
@@ -95,7 +121,7 @@ def mlp_apply(x, p, act: str):
         h = jnp.square(jax.nn.relu(apply_linear(x, p["up"])))
     else:  # gelu
         h = jax.nn.gelu(apply_linear(x, p["up"]))
-    return apply_linear(h, p["down"])
+    return apply_linear(h, p["down"], reduce_tp=True)
 
 
 def mlp_init(key, d: int, d_ff: int, act: str, dtype):

@@ -414,6 +414,21 @@ def unified_step(params, pool, block_tables, ctx_lens, q_lens, inputs, cfg,
     the last-position logits prefill-finishing rows sample from. The lm
     head runs on verify_width + 1 positions regardless of W, so wide
     prefill chunks pay nothing extra. verify_width must be <= W.
+
+    Tensor parallelism: the step is shard_map-compatible. When
+    api.engine wraps it with `shardctx.tp_axis("model")` bound, `cfg`
+    is the PER-SHARD config (num_heads/num_kv_heads divided by the mesh
+    model axis), params arrive column/row-sliced per
+    launch.sharding._TP_RULES, and the pool arrives head-sliced
+    (kvblocks.pool_pspecs). Attention and MLP then compute partial
+    results over local heads / hidden columns, and exactly one
+    `shardctx.psum_tp` fires per attention/MLP boundary — inside the wo
+    and down projections (`apply_linear(..., reduce_tp=True)`), which
+    reduce their f32 partials BEFORE the single cast to the residual
+    dtype, keeping bf16 TP bit-identical to the unsharded step. 2L
+    psums per step, the only collectives. With no TP axis bound the
+    reduce_tp flag is inert and this is the single-device step
+    unchanged.
     """
     from repro.runtime.kvblocks import check_paged_support
 

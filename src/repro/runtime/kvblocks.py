@@ -125,6 +125,41 @@ def init_paged_cache(cfg, num_blocks: int, block_size: int, dtype=None):
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
 
+def pool_pspecs(cfg):
+    """shard_map PartitionSpecs for the paged pool under tensor-parallel
+    serving: every pool leaf — (L, NB, bs, Hk, Dh) codes and the int8
+    (L, NB, bs, Hk, 1) scale planes — is sliced on the KV-head axis 3
+    over the mesh "model" axis, so each shard owns the KV blocks for
+    exactly the heads it computes. Block tables, step buffers, and all
+    scheduler state stay host-side/replicated (P()); only the pool
+    shards. int8 KV quantization is per-(token, head), so head slicing
+    is bit-exact — shard r's codes and scales equal rows
+    [r*Hk/tp, (r+1)*Hk/tp) of the single-device pool."""
+    from jax.sharding import PartitionSpec as P
+    spec = P(None, None, None, "model", None)
+    keys = ("k", "v", "ks", "vs") if getattr(cfg, "kv_cache_bits", 16) == 8 \
+        else ("k", "v")
+    return {k: spec for k in keys}
+
+
+def shard_pool(pool, tp: int, shard: int):
+    """The head-slice of `pool` that TP shard `shard` of `tp` owns —
+    the reference the property tests compare shard_map's placement
+    against. Pure slicing, no device semantics."""
+    if not 0 <= shard < tp:
+        raise ValueError(f"shard {shard} out of range for tp={tp}")
+    out = {}
+    for key, leaf in pool.items():
+        hk = leaf.shape[3]
+        if hk % tp:
+            raise ValueError(
+                f"pool leaf {key!r} has {hk} KV heads, not divisible by "
+                f"tp={tp}")
+        n = hk // tp
+        out[key] = leaf[:, :, :, shard * n:(shard + 1) * n]
+    return out
+
+
 def valid_block_counts(ctx_lens, q_lens, block_size, max_blocks):
     """Per-row count of block-table entries holding valid context THIS
     step — the grid metadata the Pallas paged-attention kernel walks.

@@ -248,13 +248,38 @@ class SpeculationController:
     `speculative_step` per static draft width. Stateless across serve()
     calls — per-serve acceptance stats live in `ServeResult`."""
 
-    def __init__(self, spec: DraftSpec, cfg, params, draft_params=None):
+    def __init__(self, spec: DraftSpec, cfg, params, draft_params=None, *,
+                 mesh=None):
         self.spec = spec
         self.cfg = cfg
         self.draft_params = (derive_draft_params(params, spec)
                              if draft_params is None else draft_params)
         self.exact = is_exact_draft(params, self.draft_params)
         self._steps: dict[int, object] = {}
+        # tensor-parallel speculation: same recipe as the engine's plain
+        # TP step — shard-map the whole fused round (draft chain +
+        # verify + accept), draft params sliced with the SAME rules as
+        # the served params (truncate acts on the rank axis, the TP
+        # slice on heads/hidden columns — they commute), pool
+        # head-sliced, accept bookkeeping replicated.
+        self.mesh = mesh
+        self._tp = (int(mesh.shape["model"])
+                    if mesh is not None and "model" in mesh.axis_names
+                    else 0)
+        if self._tp:
+            from repro.launch import sharding as shd
+
+            shd.check_tp_geometry(cfg, self._tp)
+            self._local_cfg = shd.tp_local_config(cfg, self._tp)
+            self._pspecs = shd.tp_param_specs(params, self._tp)
+            self._dspecs = shd.tp_param_specs(self.draft_params, self._tp)
+            from jax.sharding import NamedSharding, PartitionSpec as P
+
+            self.draft_params = jax.device_put(
+                self.draft_params,
+                jax.tree_util.tree_map(
+                    lambda s: NamedSharding(mesh, s), self._dspecs,
+                    is_leaf=lambda x: isinstance(x, P)))
 
     def step_fn(self, k: int):
         """Jitted speculative_step specialized on draft width k (the
@@ -262,8 +287,27 @@ class SpeculationController:
         k == 0 otherwise, so at most two variants trace)."""
         fn = self._steps.get(k)
         if fn is None:
-            fn = jax.jit(
-                lambda p, dp, pool, bt, buf, prev, _k=k:
-                speculative_step(p, dp, pool, bt, buf, prev, self.cfg, _k))
+            if self._tp:
+                from jax.sharding import PartitionSpec as P
+
+                from repro.runtime import kvblocks, shardctx
+
+                pool_specs = kvblocks.pool_pspecs(self.cfg)
+
+                def tp_body(p, dp, pool, bt, buf, prev, _k=k):
+                    with shardctx.tp_axis("model"):
+                        return speculative_step(p, dp, pool, bt, buf, prev,
+                                                self._local_cfg, _k)
+
+                fn = jax.jit(shardctx.tp_shard_map(
+                    tp_body, self.mesh,
+                    in_specs=(self._pspecs, self._dspecs, pool_specs,
+                              P(), P(), P()),
+                    out_specs=(P(), P(), P(), pool_specs)))
+            else:
+                fn = jax.jit(
+                    lambda p, dp, pool, bt, buf, prev, _k=k:
+                    speculative_step(p, dp, pool, bt, buf, prev, self.cfg,
+                                     _k))
             self._steps[k] = fn
         return fn

@@ -14,7 +14,17 @@ The speculative draft path adds provisional allocation on top
 sequence of reserve→accept→rollback rounds, rejected drafts must return
 every provisional block, the trash block must never be captured, and a
 row's holdings must stay consistent with its committed context.
+
+Tensor-parallel serving head-shards the physical pool but keeps the
+allocator and block tables host-side REPLICATED — every shard indexes
+its head-slice with the same block ids. The TP invariants here pin
+that contract: the same op script driven against one allocator per
+shard never lets the shards drift (identical free lists, identical
+draft grants, trash block captured on no shard), and `shard_pool` is
+an exact head-partition of the single-device pool.
 """
+import dataclasses
+
 import numpy as np
 import pytest
 
@@ -24,7 +34,9 @@ except ImportError:
     from hypothesis_fallback import given, settings, strategies as st
 
 from repro.runtime.kvblocks import (BlockPool, blocks_for_positions,
-                                    span_slots, valid_block_counts)
+                                    init_paged_cache, pool_pspecs,
+                                    shard_pool, span_slots,
+                                    valid_block_counts)
 from repro.runtime.scheduler import Request, Scheduler, Sequence
 
 settings.register_profile("ci", max_examples=40, deadline=None)
@@ -190,3 +202,129 @@ def test_speculative_rollback_never_leaks(case):
         assert pool.available <= avail_before
     sched.finish(seq)
     assert pool.available == pool.capacity, "blocks leaked after finish"
+
+
+# ------------------------------------------------- head-sharded pool (TP) --
+
+@given(pool_and_ops(), st.sampled_from([2, 4]))
+def test_block_pool_replicated_across_shards(case, tp):
+    """Under TP the allocator is replicated host-side: one logical
+    BlockPool per shard fed the SAME op script. Whatever the script, the
+    per-shard free lists must stay identical step by step (a drifted
+    shard would scatter KV into different physical blocks than its
+    peers' block tables name) and the trash block is handed out on no
+    shard."""
+    num_blocks, block_size, ops = case
+    pools = [BlockPool(num_blocks, block_size) for _ in range(tp)]
+    live: list[list[list[int]]] = [[] for _ in range(tp)]
+    for op, arg in ops:
+        for s, pool in enumerate(pools):
+            if op == "alloc":
+                if pool.can_alloc(arg):
+                    ids = pool.alloc(arg)
+                    assert 0 not in ids, f"shard {s}: trash block captured"
+                    live[s].append(ids)
+                else:
+                    with pytest.raises(RuntimeError, match="exhausted"):
+                        pool.alloc(arg)
+            elif live[s]:
+                pool.free(live[s].pop(arg % len(live[s])))
+        # shards agree exactly: same groups, same free count
+        assert all(live[s] == live[0] for s in range(tp)), \
+            "per-shard allocations drifted"
+        assert all(p.available == pools[0].available for p in pools), \
+            "per-shard free lists drifted"
+    for s, pool in enumerate(pools):
+        for ids in live[s]:
+            pool.free(ids)
+        assert pool.available == pool.capacity
+
+
+@given(spec_rounds(), st.sampled_from([2, 4]))
+def test_speculative_rounds_replicated_across_shards(case, tp):
+    """reserve→accept→rollback rounds replayed on one Scheduler per
+    shard: every shard grants the same k, rewinds to the same holdings,
+    and valid_block_counts over the rewound table agree across shards
+    (the kernel walks the same number of blocks on every chip)."""
+    block_size, prompt_len, max_tokens, num_blocks, rounds = case
+    base_need = blocks_for_positions(prompt_len, block_size)
+    if base_need > num_blocks - 1:
+        return
+    pools = [BlockPool(num_blocks, block_size) for _ in range(tp)]
+    scheds = [Scheduler(p, 1) for p in pools]
+    reqs = [Request(tokens=np.ones(prompt_len, np.int32),
+                    max_tokens=max_tokens, rid=0) for _ in range(tp)]
+    seqs = [Sequence(req=reqs[s], row=0, block_ids=pools[s].alloc(base_need),
+                     prefilled=prompt_len, n_emitted=1) for s in range(tp)]
+    for k_offer, acc_draw in rounds:
+        if seqs[0].done:
+            break
+        grants = [scheds[s].reserve_speculation(seqs[s], k_offer)
+                  for s in range(tp)]
+        assert len(set(grants)) == 1, "draft grant differs across shards"
+        for s in range(tp):
+            assert 0 not in seqs[s].draft_blocks
+            assert seqs[s].block_ids == seqs[0].block_ids
+        k = grants[0]
+        adv = min(acc_draw, k) + 1 if k else 0
+        for s in range(tp):
+            seqs[s].n_emitted += adv
+            if k:
+                scheds[s].commit_speculation(seqs[s])
+        assert all(seqs[s].block_ids == seqs[0].block_ids
+                   for s in range(tp)), "rollback diverged across shards"
+        assert all(pools[s].available == pools[0].available
+                   for s in range(tp))
+        # per-shard kernel metadata agrees: same valid block walk
+        ctx = seqs[0].prompt_len + seqs[0].n_emitted - 1
+        counts = {int(valid_block_counts(
+            np.asarray([max(ctx - 1, 0)], np.int32),
+            np.asarray([1], np.int32), block_size,
+            len(seqs[s].block_ids))[0]) for s in range(tp)}
+        assert len(counts) == 1, "valid_block_counts differ across shards"
+    for s in range(tp):
+        scheds[s].finish(seqs[s])
+        assert pools[s].available == pools[s].capacity
+
+
+def test_shard_pool_partitions_heads_exactly():
+    """shard_pool is an exact partition: the per-shard head-slices
+    concatenate back to the single-device pool for every leaf (16-bit
+    and int8-with-scales layouts), per-shard shapes carry Hk/tp heads,
+    and non-dividing geometry / bad shard indices are hard errors."""
+    from repro.configs import get_config
+
+    cfg = get_config("opus-mt", smoke=True)
+    for kv_bits in (16, 8):
+        c = dataclasses.replace(cfg, kv_cache_bits=kv_bits)
+        pool = init_paged_cache(c, num_blocks=5, block_size=4)
+        hk = c.num_kv_heads
+        for tp in (1, 2, 4):
+            shards = [shard_pool(pool, tp, s) for s in range(tp)]
+            for key, leaf in pool.items():
+                for s in range(tp):
+                    assert shards[s][key].shape[3] == hk // tp
+                glued = np.concatenate(
+                    [np.asarray(s[key]) for s in shards], axis=3)
+                assert np.array_equal(glued, np.asarray(leaf)), key
+        with pytest.raises(ValueError, match="shard"):
+            shard_pool(pool, 2, 2)
+        with pytest.raises(ValueError, match="not divisible"):
+            shard_pool(pool, 3, 0)
+
+
+def test_pool_pspecs_shard_heads_only():
+    """pool_pspecs slices exactly the KV-head axis (3) over "model" for
+    every pool leaf, and names the int8 scale planes iff the config
+    carries int8 KV."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.configs import get_config
+
+    cfg = get_config("opus-mt", smoke=True)
+    specs = pool_pspecs(cfg)
+    assert set(specs) == {"k", "v"}
+    specs8 = pool_pspecs(dataclasses.replace(cfg, kv_cache_bits=8))
+    assert set(specs8) == {"k", "v", "ks", "vs"}
+    for spec in list(specs.values()) + list(specs8.values()):
+        assert spec == P(None, None, None, "model", None)

@@ -181,6 +181,13 @@ SERVING_METRICS = [
     ("spec speedup vs plain", ("speculation", "speedup_vs_plain"), 1.0),
     ("spec accept rate", ("speculation", "accept_rate"), 1.0),
     ("spec draft depth k", ("speculation", "k"), 1.0),
+    # tensor-parallel serving section (fig13 --mesh N; '-' without it)
+    ("tp mesh (model axis)", ("tp", "mesh"), 1.0),
+    ("tp tok/s", ("tp", "tokens_per_second"), 1.0),
+    ("tp single-device tok/s", ("tp", "baseline_tokens_per_second"), 1.0),
+    ("tp all-reduce KiB/chip/step", ("tp", "allreduce_bytes_per_step"),
+     1 / 1024),
+    ("tp all-reduce us/step (ICI)", ("tp", "allreduce_s_per_step"), 1e6),
 ]
 
 
