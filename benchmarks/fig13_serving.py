@@ -192,6 +192,139 @@ def run_speculation(args):
     }
 
 
+# the prefix-cache section models production traffic: most requests open
+# with the same long system prompt, so their full KV blocks are shared by
+# reference and prefill restarts at the first uncached position. A small
+# max_batch keeps first-step co-admissions (which cannot share: their
+# blocks are unwritten) from diluting the hit rate the workload offers.
+PC_PREFIX_LEN = 512
+PC_PREFIX_LEN_SMOKE = 48
+PC_SHARED_FRACTION = 0.9
+PC_TAIL_LENS = (4, 8, 12, 16)
+PC_GEN_LENS = (4, 8)
+PC_N = 32
+PC_MAX_BATCH = 3
+PC_REPEAT = 2             # cache-off prefills ~n*prefix tokens per run
+
+
+def make_shared_prefix_workload(n, vocab, prefix_len, seed=0,
+                                shared_fraction=PC_SHARED_FRACTION,
+                                tail_lens=PC_TAIL_LENS,
+                                gen_lens=PC_GEN_LENS):
+    """`shared_fraction` of n requests = the same `prefix_len`-token
+    system prompt + a private tail; the rest are short unrelated prompts
+    (arrival order shuffled, so sharers and strangers interleave)."""
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(0, vocab, size=prefix_len)
+    shared = np.zeros(n, bool)
+    shared[:round(n * shared_fraction)] = True
+    rng.shuffle(shared)
+    reqs = []
+    for s in shared:
+        tail = int(rng.choice(tail_lens))
+        toks = (np.concatenate([prefix, rng.integers(0, vocab, size=tail)])
+                if s else rng.integers(0, vocab, size=2 * tail))
+        reqs.append(Request(tokens=toks,
+                            max_tokens=int(rng.choice(gen_lens))))
+    return reqs
+
+
+def run_prefix_cache(engine, args):
+    """Prefix-caching section: the SAME engine serves the shared-prefix
+    workload with the cache on vs off. Identity is hard-asserted request
+    by request on every repeat (the cache must be a pure perf feature);
+    the full-size run also hard-asserts the acceptance bar — hit rate
+    > 0.8, better TTFT p50, higher tok/s — while --smoke only checks
+    identity and a nonzero hit rate (its workload is too small for the
+    0.8 bar). The pool gets headroom beyond the worst-case rows so the
+    shared prefix blocks survive request rotation instead of being
+    LRU-evicted the moment their holders finish."""
+    from repro.hw.tpu_model import prefix_cache_point
+
+    prefix_len = PC_PREFIX_LEN_SMOKE if args.smoke else PC_PREFIX_LEN
+    n = min(args.n, 8) if args.smoke else PC_N
+    cap = min(args.max_batch, PC_MAX_BATCH)
+    bs = args.block_size
+    cfg = engine.cfg
+    reqs = make_shared_prefix_workload(n, cfg.vocab_size, prefix_len,
+                                       seed=args.seed)
+    from repro.runtime.kvblocks import blocks_needed
+
+    mb = max(blocks_needed(r.tokens.size, r.max_tokens, bs) for r in reqs)
+    kw = dict(max_batch=cap, block_size=bs, chunk_tokens=args.chunk_tokens,
+              num_blocks=cap * mb + prefix_len // bs + 1)
+    engine.serve(reqs, prefix_cache=False, **kw)       # warmup both modes
+    engine.serve(reqs, prefix_cache=True, **kw)
+    base = on = None
+    ratios = []
+    for _ in range(max(min(args.repeat, PC_REPEAT), 1)):
+        r0 = engine.serve(reqs, prefix_cache=False, **kw)
+        r1 = engine.serve(reqs, prefix_cache=True, **kw)
+        mism = [i for i in range(len(reqs))
+                if not np.array_equal(r0.outputs[i], r1.outputs[i])]
+        assert not mism, (
+            f"request {mism[0]}: cache-on {r1.outputs[mism[0]]} "
+            f"!= cache-off {r0.outputs[mism[0]]}")
+        if base is None or r0.seconds < base.seconds:
+            base = r0
+        if on is None or r1.seconds < on.seconds:
+            on = r1
+        ratios.append(r1.tokens_per_second / r0.tokens_per_second)
+    hit_rate = on.cache_hit_token_rate
+    if args.smoke:
+        assert hit_rate > 0.0, "smoke shared-prefix workload never hit"
+    else:
+        assert hit_rate > 0.8, f"hit rate {hit_rate:.3f} <= 0.8"
+        assert on.ttft_p50 < base.ttft_p50, (
+            f"TTFT p50 did not improve: {on.ttft_p50:.3f}s cached vs "
+            f"{base.ttft_p50:.3f}s")
+        assert on.tokens_per_second > base.tokens_per_second, (
+            f"tok/s did not improve: {on.tokens_per_second:.1f} cached "
+            f"vs {base.tokens_per_second:.1f}")
+    point = prefix_cache_point(
+        prefix_len, hit_rate, num_layers=cfg.num_layers,
+        d_model=cfg.d_model, d_ff=cfg.d_ff, num_heads=cfg.num_heads,
+        num_kv_heads=cfg.num_kv_heads, head_dim=cfg.head_dim,
+        block_size=bs, kv_bits=getattr(cfg, "kv_cache_bits", 16))
+    print(f"prefix cache: hit rate {hit_rate:.2f} "
+          f"({on.cache_hit_blocks}/{on.cache_lookup_blocks} blocks, "
+          f"{on.cache_hit_tokens} prompt tokens skipped, "
+          f"{on.cache_blocks_saved} blocks saved, {on.cache_cow_blocks} "
+          f"COW), {on.tokens_per_second:.1f} tok/s vs "
+          f"{base.tokens_per_second:.1f} off "
+          f"({float(np.median(ratios)):.2f}x), TTFT p50 "
+          f"{on.ttft_p50 * 1e3:.0f}ms vs {base.ttft_p50 * 1e3:.0f}ms; "
+          f"{len(reqs)}/{len(reqs)} requests token-identical")
+    return {
+        "workload": {"n": n, "prefix_len": prefix_len,
+                     "shared_fraction": PC_SHARED_FRACTION,
+                     "tail_lens": list(PC_TAIL_LENS),
+                     "gen_lens": list(PC_GEN_LENS), "seed": args.seed,
+                     "max_batch": cap, "block_size": bs,
+                     "num_blocks": kw["num_blocks"]},
+        "hit_rate": hit_rate,
+        "hit_rate_blocks": on.cache_hit_rate,
+        "cache_hit_tokens": on.cache_hit_tokens,
+        "cache_hit_blocks": on.cache_hit_blocks,
+        "cache_lookup_blocks": on.cache_lookup_blocks,
+        "blocks_saved": on.cache_blocks_saved,
+        "cow_blocks": on.cache_cow_blocks,
+        "evictions": on.cache_evictions,
+        "preemptions": on.preemptions,
+        "mismatched_requests": 0,
+        "ttft_p50_s_on": on.ttft_p50, "ttft_p95_s_on": on.ttft_p95,
+        "ttft_p50_s_off": base.ttft_p50, "ttft_p95_s_off": base.ttft_p95,
+        "tokens_per_second_on": on.tokens_per_second,
+        "tokens_per_second_off": base.tokens_per_second,
+        "speedup_vs_off": float(np.median(ratios)),
+        "modeled": {"prefill_s": point.prefill_s,
+                    "prefill_s_nocache": point.prefill_s_nocache,
+                    "ttft_speedup": point.ttft_speedup,
+                    "macs_saved": point.macs_saved,
+                    "kv_bytes_saved": point.kv_bytes_saved},
+    }
+
+
 TP_N = 8                  # requests in the TP section: identity + bytes
 TP_REPEAT = 2             # accounting, not a perf claim (see run_tp)
 
@@ -303,6 +436,12 @@ def main(argv=None):
                          "priced by hw.tpu_model.tp_point (needs N "
                          "devices; on CPU force them with XLA_FLAGS=--"
                          "xla_force_host_platform_device_count=N)")
+    ap.add_argument("--shared-prefix", action="store_true",
+                    help="also benchmark prefix caching on a workload "
+                         "where 90%% of requests share a long system "
+                         "prompt: cache on vs off on the same engine, "
+                         "outputs hard-asserted token-identical, hit "
+                         "rate / blocks saved / TTFT / tok/s recorded")
     ap.add_argument("--draft-rank-fraction", type=float, default=0.17,
                     help="rank fraction the speculation draft keeps "
                          "(0.17 of the r0.75 plan's rank 48 = rank 8 at "
@@ -375,6 +514,8 @@ def main(argv=None):
         "continuous": cont,
         "speedup": speedup,
     }
+    if args.shared_prefix:
+        report["prefix_cache"] = run_prefix_cache(engine, args)
     if args.speculate > 0:
         report["speculation"] = run_speculation(args)
     if args.mesh > 0:

@@ -34,6 +34,7 @@ from __future__ import annotations
 import collections
 import contextlib
 import dataclasses
+import hashlib
 import time
 
 import jax
@@ -111,11 +112,44 @@ class ServeResult:
     drafted: int = 0
     accepted: int = 0
     spec_rounds: int = 0
+    # prefix-cache accounting (all zero when prefix_cache is False):
+    # admission looked up `cache_lookup_blocks` full prompt blocks in the
+    # pool's content index, mapped `cache_hit_blocks` of them by
+    # reference (skipping `cache_hit_tokens` prompt tokens of prefill),
+    # copy-on-wrote `cache_cow_blocks` final blocks of fully-cached
+    # prompts, and the pool evicted `cache_evictions` idle cached blocks
+    # under pressure. `preemptions` counts pool-pressure victim requeues.
+    prefix_cache: bool = False
+    cache_lookup_blocks: int = 0
+    cache_hit_blocks: int = 0
+    cache_hit_tokens: int = 0
+    cache_cow_blocks: int = 0
+    cache_evictions: int = 0
+    preemptions: int = 0
 
     @property
     def accept_rate(self) -> float:
         """Fraction of proposed draft tokens the full model kept."""
         return self.accepted / self.drafted if self.drafted else 0.0
+
+    @property
+    def cache_hit_rate(self) -> float:
+        """Fraction of looked-up full prompt blocks served by reference."""
+        return (self.cache_hit_blocks / self.cache_lookup_blocks
+                if self.cache_lookup_blocks else 0.0)
+
+    @property
+    def cache_hit_token_rate(self) -> float:
+        """Fraction of all prompt tokens whose prefill was skipped."""
+        total = sum(self.prompt_lens)
+        return self.cache_hit_tokens / total if total else 0.0
+
+    @property
+    def cache_blocks_saved(self) -> int:
+        """Physical blocks admission did not allocate thanks to sharing
+        (hit blocks mapped by reference; COW sources still cost a private
+        copy, so they don't count)."""
+        return self.cache_hit_blocks - self.cache_cow_blocks
 
     @property
     def total_tokens(self) -> int:
@@ -207,12 +241,27 @@ class InferenceEngine:
     def __init__(self, cfg: ModelConfig, params, *, plan=None, report=None,
                  mesh=None, max_batch: int = 8, block_size: int = 16,
                  chunk_tokens: int = 256, bucket_prompts: bool = True,
-                 speculate: DraftSpec | None = None):
+                 speculate: DraftSpec | None = None,
+                 prefix_cache: bool = True):
         self.cfg = cfg
         self.params = params
         self.plan = plan
         self.report = report
         self.mesh = mesh
+        # prefix caching (serve): share full KV blocks between requests
+        # with equal position-aligned prompt prefixes. The content-hash
+        # chain is seeded with a model+plan fingerprint so blocks can
+        # never be shared across engines whose K/V for the same tokens
+        # would differ (different weights, dtype, or KV residency).
+        self.prefix_cache = prefix_cache
+        try:
+            plan_id = plan.dumps() if plan is not None else "dense"
+        except TypeError:           # unserializable plan metadata
+            plan_id = repr(plan)
+        self._cache_fingerprint = hashlib.sha256(
+            (f"{getattr(cfg, 'name', 'model')}:{cfg.dtype}:"
+             f"{getattr(cfg, 'kv_cache_bits', 16)}:{plan_id}")
+            .encode()).digest()
         # tensor-parallel serving: a mesh with a "model" axis shard-maps
         # the unified step — params column/row-sliced, the KV pool
         # head-sliced, one psum per attention/MLP boundary. The mesh
@@ -288,6 +337,10 @@ class InferenceEngine:
         self._argmax = jax.jit(
             lambda lg: jnp.argmax(lg[:, -1], axis=-1)[:, None]
             .astype(jnp.int32))
+        # copy-on-write block duplication for fully-cached prompts; block
+        # indices are traced scalars so one trace covers every copy, and
+        # the op moves along the (unsharded) block axis so it is TP-inert.
+        self._cow_copy = jax.jit(kvblocks.copy_block)
 
     @staticmethod
     def _can_bucket(cfg) -> bool:
@@ -307,7 +360,8 @@ class InferenceEngine:
               max_batch: int = 8, block_size: int = 16,
               chunk_tokens: int = 256,
               paged_attn: str | None = None,
-              speculate=None) -> "InferenceEngine":
+              speculate=None, prefix_cache: bool = True
+              ) -> "InferenceEngine":
         """arch: config name (see repro.configs) or a ModelConfig.
         plan: CompressionPlan | legacy CompressionConfig | None (dense).
         params: pre-trained weights; freshly initialized when omitted.
@@ -320,7 +374,9 @@ class InferenceEngine:
         speculate: self-speculative decoding config. None defers to
         `plan.draft`; a `DraftSpec` (or int draft depth k, or True for
         the defaults) turns it on regardless of the plan; False/0 forces
-        it off even when the plan carries a draft spec."""
+        it off even when the plan carries a draft spec.
+        prefix_cache: serve() default for KV prefix sharing (overridable
+        per serve call)."""
         cfg = get_config(arch, smoke=smoke) if isinstance(arch, str) else arch
         if paged_attn is not None:
             cfg = dataclasses.replace(cfg, paged_attn_impl=paged_attn)
@@ -367,7 +423,8 @@ class InferenceEngine:
             spec = DraftSpec(k=int(speculate))
         return cls(cfg, params, plan=plan, report=report, mesh=mesh,
                    max_batch=max_batch, block_size=block_size,
-                   chunk_tokens=chunk_tokens, speculate=spec)
+                   chunk_tokens=chunk_tokens, speculate=spec,
+                   prefix_cache=prefix_cache)
 
     # ---------------------------------------------------------- generate --
     def generate(self, requests, sampling: SamplingParams | None = None
@@ -429,7 +486,8 @@ class InferenceEngine:
               max_batch: int | None = None, block_size: int | None = None,
               num_blocks: int | None = None,
               chunk_tokens: int | None = None,
-              speculate: bool | None = None) -> ServeResult:
+              speculate: bool | None = None,
+              prefix_cache: bool | None = None) -> ServeResult:
         """In-flight batching with chunked prefill: ragged prompts,
         per-request max_tokens, one jitted token-budget step.
 
@@ -473,6 +531,17 @@ class InferenceEngine:
         argmax tokens, so SamplingParams.temperature > 0 raises instead
         of being silently ignored (rectangular `generate` batches do
         sample).
+
+        prefix_cache (default: the engine's build-time setting) shares
+        KV blocks between requests with equal full-block prompt
+        prefixes: admission maps cached blocks by reference and prefill
+        starts at the first uncached position. Greedy serve is
+        token-identical with the cache on or off — K/V at position p
+        depends only on tokens <= p, never on how prefill was chunked,
+        so a cached block holds bit-for-bit what recomputation would
+        write (int8 KV quantizes per (token, head), which block
+        boundaries preserve). The cache lives for this serve call (the
+        pool is per-call); hit/COW/eviction counts land in the result.
         """
         sampling = sampling or SamplingParams()
         if sampling.temperature > 0.0:
@@ -510,8 +579,10 @@ class InferenceEngine:
         mb = max(max(need), 1)              # block-table width (static)
         if num_blocks is None:
             num_blocks = cap * mb + 1       # +1: reserved trash block
+        use_cache = self.prefix_cache if prefix_cache is None else prefix_cache
         pool_alloc = kvblocks.BlockPool(num_blocks, bs)
-        sched = Scheduler(pool_alloc, cap)
+        sched = Scheduler(pool_alloc, cap, prefix_cache=use_cache,
+                          fingerprint=self._cache_fingerprint)
         for r in reqs:
             sched.submit(r)
 
@@ -565,10 +636,20 @@ class InferenceEngine:
             prev_toks = jnp.zeros((cap, 1), jnp.int32)
             while not sched_done and sched.has_work():
                 plan = sched.schedule(budget)
+                for r in plan.preempted:    # victim rows: table to trash
+                    tables[r] = 0           # (before any admission that
+                    tables_dev = None       # reuses the row below)
                 for seq in plan.admitted:
                     tables[seq.row] = 0
                     tables[seq.row, :len(seq.block_ids)] = seq.block_ids
                     tables_dev = None
+                    if seq.cow_dst is not None:
+                        # fully-cached prompt: materialize a private copy
+                        # of the last matched block before this step's
+                        # span write recomputes its final position
+                        pool = self._cow_copy(pool, jnp.int32(seq.cow_src),
+                                              jnp.int32(seq.cow_dst))
+                        sched.release_cow(seq)
                 if not plan.prefill and not plan.decode:
                     raise RuntimeError(
                         "scheduler returned an empty step with work "
@@ -613,7 +694,10 @@ class InferenceEngine:
                 # of the device)
                 emits = []
                 for r, width in plan.prefill.items():
-                    sched.rows[r].prefilled += width
+                    # advance + register newly completed full prompt
+                    # blocks into the content index (dispatch order =
+                    # device order, so later readers see the writes)
+                    sched.advance_prefill(sched.rows[r], width)
                 for r in list(plan.prefill) + plan.decode:
                     seq = sched.rows[r]
                     if not seq.prefill_done:
@@ -649,7 +733,14 @@ class InferenceEngine:
             max_queue_depth=sched.max_queue_depth, max_batch=cap,
             block_size=bs, num_blocks=num_blocks, ttft=ttft, tpot=tpot,
             spec_k=(ctl.spec.k if ctl is not None else 0),
-            drafted=drafted, accepted=accepted, spec_rounds=spec_rounds)
+            drafted=drafted, accepted=accepted, spec_rounds=spec_rounds,
+            prefix_cache=use_cache,
+            cache_lookup_blocks=sched.cache_lookup_blocks,
+            cache_hit_blocks=sched.cache_hit_blocks,
+            cache_hit_tokens=sched.cache_hit_tokens,
+            cache_cow_blocks=sched.cache_cow_blocks,
+            cache_evictions=pool_alloc.evictions,
+            preemptions=sched.preemptions)
 
     def _spec_loop(self, reqs, sched, pool, tables, cap, budget, ctl,
                    out_vals, first_tok_t, finish_t):
@@ -674,10 +765,17 @@ class InferenceEngine:
         prev_toks = jnp.zeros((cap, 1), jnp.int32)
         while sched.has_work():
             plan = sched.schedule(budget, spec_k=ctl.spec.k)
+            for r in plan.preempted:
+                tables[r] = 0
+                tables_dev = None
             for seq in plan.admitted:
                 tables[seq.row] = 0
                 tables[seq.row, :len(seq.block_ids)] = seq.block_ids
                 tables_dev = None
+                if seq.cow_dst is not None:
+                    pool = self._cow_copy(pool, jnp.int32(seq.cow_src),
+                                          jnp.int32(seq.cow_dst))
+                    sched.release_cow(seq)
             # draft-block reservations can grow a row's table mid-flight
             # (only when admission could not pre-reserve the worst case)
             for r in plan.spec:
@@ -722,7 +820,7 @@ class InferenceEngine:
             na = np.asarray(n_acc)
             now = time.time()
             for r, width in plan.prefill.items():
-                sched.rows[r].prefilled += width
+                sched.advance_prefill(sched.rows[r], width)
             for r in list(plan.prefill) + plan.decode:
                 seq = sched.rows[r]
                 if not seq.prefill_done:

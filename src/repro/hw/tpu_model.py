@@ -398,3 +398,89 @@ def tp_point(*, batch: int, span_w: int, d_model: int, num_layers: int,
     return TpPoint(tp=int(tp), boundaries=boundaries, payload_bytes=payload,
                    allreduce_bytes=wire, allreduce_s=allreduce_s,
                    step_s=step_s, tp_step_s=tp_step_s, speedup=speedup)
+
+
+# ----------------------------------------------------------- prefix cache --
+
+@dataclasses.dataclass(frozen=True)
+class PrefixCachePoint:
+    """Priced prefix-cache operating point: prefill work a serving engine
+    skips at a given cache hit rate (runtime/kvblocks + scheduler
+    admission are the thing being priced). Savings have two ports, same
+    as every engine here: MACs not run (linear layers + attention scores
+    for the cached positions) and KV bytes not written back to HBM —
+    int8-KV residency writes fewer bytes per cached token than bf16, so
+    the cache and the paper's sub-8-bit story compound multiplicatively
+    on capacity but the *bandwidth* saving per hit is smaller."""
+
+    hit_rate: float
+    tokens_cached: int              # block-aligned prompt tokens skipped
+    tokens_computed: int
+    macs: float                     # prefill MACs actually run
+    macs_nocache: float
+    macs_saved: float
+    kv_bytes_written: float         # KV writeback for computed tokens
+    kv_bytes_saved: float           # writeback skipped for cached tokens
+    prefill_s: float                # max(compute, writeback) with cache
+    prefill_s_nocache: float
+    ttft_speedup: float             # prefill_s_nocache / prefill_s
+
+
+def prefix_cache_point(prompt_len: int, hit_rate: float, *, num_layers: int,
+                       d_model: int, d_ff: int, num_heads: int,
+                       num_kv_heads: int, head_dim: int, block_size: int = 16,
+                       kv_bits: int = 16,
+                       hbm_bw: float = HBM_BW) -> PrefixCachePoint:
+    """Price one (prompt_len, hit_rate) prefix-cache point.
+
+    hit_rate is the fraction of prompt tokens served from cached blocks;
+    the model rounds it down to whole blocks (only full blocks are ever
+    shared) and keeps at least the final position computed (its logits
+    seed decoding — the scheduler's copy-on-write rule). Cached
+    positions cost nothing: no QKV/MLP MACs, no causal-attention score
+    MACs, no KV writeback. Computed positions still attend over the
+    whole (cached + computed) context — those reads happen either way,
+    so they cancel out of the comparison and are not priced. Monotone by
+    construction: more hits => fewer MACs, fewer bytes, never-slower
+    prefill (asserted in tests)."""
+    if prompt_len < 1:
+        raise ValueError(f"prompt_len must be >= 1, got {prompt_len}")
+    if not 0.0 <= hit_rate <= 1.0:
+        raise ValueError(f"hit_rate must be in [0, 1], got {hit_rate}")
+    if kv_bits not in (8, 16):
+        raise ValueError(f"kv_bits must be 8 or 16, got {kv_bits}")
+    h, hk, dh = num_heads, num_kv_heads, head_dim
+    cached = min((int(hit_rate * prompt_len) // block_size) * block_size,
+                 prompt_len - 1)
+    # per-token linear MACs across all layers: QKV + output proj + MLP
+    # (gate/up/down)
+    lin = num_layers * (d_model * h * dh + 2 * d_model * hk * dh
+                        + h * dh * d_model + 3 * d_model * d_ff)
+    # causal attention scores: position p costs 2(p+1)·h·dh MACs (QK^T
+    # and PV); cached positions skip theirs entirely
+    tri = lambda n: n * (n + 1) // 2
+
+    def _macs(n_cached: int) -> float:
+        u = prompt_len - n_cached
+        attn = 2 * num_layers * h * dh * (tri(prompt_len) - tri(n_cached))
+        return u * lin + attn
+
+    # KV writeback per token: int8 codes + f32 per-(token, head) scales,
+    # or 2 B/element bf16
+    kv_tok = num_layers * 2 * hk * (dh + 4 if kv_bits == 8 else 2 * dh)
+
+    def _seconds(n_cached: int) -> float:
+        u = prompt_len - n_cached
+        compute = 2 * _macs(n_cached) / PEAK_OPS_INT8
+        return max(compute, u * kv_tok / hbm_bw)
+
+    with_cache, nocache = _seconds(cached), _seconds(0)
+    return PrefixCachePoint(
+        hit_rate=float(hit_rate), tokens_cached=cached,
+        tokens_computed=prompt_len - cached,
+        macs=_macs(cached), macs_nocache=_macs(0),
+        macs_saved=_macs(0) - _macs(cached),
+        kv_bytes_written=(prompt_len - cached) * kv_tok,
+        kv_bytes_saved=cached * kv_tok,
+        prefill_s=with_cache, prefill_s_nocache=nocache,
+        ttft_speedup=nocache / with_cache)

@@ -95,6 +95,13 @@ def main(argv=None):
     ap.add_argument("--ragged", action="store_true",
                     help="mixed-length demo: vary prompt lengths and serve "
                          "through the continuous-batching scheduler")
+    ap.add_argument("--prefix-cache", dest="prefix_cache",
+                    action="store_true", default=True,
+                    help="share KV blocks between requests with equal "
+                         "full-block prompt prefixes (on by default; "
+                         "greedy outputs are unchanged)")
+    ap.add_argument("--no-prefix-cache", dest="prefix_cache",
+                    action="store_false")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="<= 0 -> greedy decode")
     ap.add_argument("--top-k", type=int, default=0)
@@ -131,7 +138,8 @@ def main(argv=None):
                                    block_size=args.block_size,
                                    chunk_tokens=args.chunk_tokens,
                                    paged_attn=args.paged_attn,
-                                   speculate=speculate)
+                                   speculate=speculate,
+                                   prefix_cache=args.prefix_cache)
 
     task = pipeline.MarkovTask(cfg.vocab_size, seed=args.seed)
     prompts = task.batch(0, args.batch, args.prompt_len)["tokens"]
@@ -160,6 +168,15 @@ def main(argv=None):
             print(f"[serve] speculation: k={res.spec_k}, accept rate "
                   f"{res.accept_rate:.2f} ({res.accepted}/{res.drafted} "
                   f"draft tokens over {res.spec_rounds} rounds)")
+        if res.prefix_cache:
+            print(f"[serve] prefix cache: hit rate "
+                  f"{res.cache_hit_rate:.2f} "
+                  f"({res.cache_hit_blocks}/{res.cache_lookup_blocks} "
+                  f"blocks, {res.cache_hit_tokens} prompt tokens "
+                  f"skipped), {res.cache_blocks_saved} blocks saved, "
+                  f"{res.cache_cow_blocks} COW, "
+                  f"{res.cache_evictions} evictions, "
+                  f"{res.preemptions} preemptions")
         print("[serve] sample:", res.outputs[0][:16].tolist())
         return np.stack(res.outputs)
 

@@ -1,4 +1,4 @@
-"""Elastic scaling: resume a checkpoint on a different mesh.
+"""Elastic capacity: resume on a different mesh; yield KV under pressure.
 
 A checkpoint stores *global* arrays (path-keyed npz). Resuming on a new
 mesh is therefore only a question of (a) rebuilding shardings for the new
@@ -15,6 +15,24 @@ pytree. This module adds the policy layer:
 
 Tests exercise save-on-mesh-A / restore-on-mesh-B with different axis
 sizes and check bit-identical global arrays.
+
+The same "shrink to fit, then recover" idea applies one level down, to
+KV-pool pressure during serving: when admission cannot claim enough
+blocks even after evicting every refcount-0 cached block, the scheduler
+preempts a live sequence and requeues its request rather than stalling
+the queue behind a full pool. The victim-selection policy lives here
+(`preemption_victims`, `reclaimable_blocks`) and is deliberately dumb
+and bounded:
+
+  * newest request first (max rid) — it has the least sunk prefill work
+    and, with prefix caching on, its completed prompt blocks stay in the
+    cache so re-admission resumes from the last registered block;
+  * only sequences that have emitted nothing — dropping a pure-prefill
+    row loses no user-visible output and keeps the engine's count-based
+    pipeline bookkeeping exact;
+  * each request yields at most once (`Request.requeued`), so the FCFS
+    inversion a preemption introduces is bounded and two requests can
+    never ping-pong each other's blocks.
 """
 from __future__ import annotations
 
@@ -23,6 +41,33 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding
 
 from repro.checkpoint import ckpt as ckpt_lib
+
+
+def preemption_victims(live_seqs):
+    """Live sequences eligible for pool-pressure preemption, in eviction
+    order (newest request first). Eligibility: zero emitted tokens, no
+    in-flight speculative draft, not already requeued once."""
+    eligible = [s for s in live_seqs
+                if s is not None and s.n_emitted == 0
+                and not s.draft_blocks
+                and not getattr(s.req, "requeued", False)]
+    return sorted(
+        eligible,
+        key=lambda s: -1 if s.req.rid is None else s.req.rid,
+        reverse=True)
+
+
+def reclaimable_blocks(pool, seq) -> int:
+    """Blocks the pool gets back if `seq` is preempted now: holdings (and
+    any copy-on-write pin) no other sequence shares. Shared prefix blocks
+    with refcount > 1 stay resident for their other holders, so they do
+    not count."""
+    held = set(seq.block_ids)
+    n = sum(1 for b in held if pool.refcount(b) == 1)
+    cow = getattr(seq, "cow_src", None)
+    if cow is not None and cow not in held and pool.refcount(cow) == 1:
+        n += 1
+    return n
 
 
 def viable_meshes(n_devices: int):

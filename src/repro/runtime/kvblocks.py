@@ -14,7 +14,16 @@ TensorRT-LLM style):
     reads it back, so the jitted step needs no control flow;
   * per-sequence block tables mapping logical position `p` to physical
     slot `(table[p // block_size], p % block_size)`. Tables are dense,
-    append-only, and padded with the trash block.
+    append-only, and padded with the trash block;
+  * refcounted prefix sharing: a fully-written block can be *registered*
+    under a chained content digest (`prefix_digests`), after which later
+    sequences with the same token prefix `share` it by reference instead
+    of recomputing it. Freeing decrements the refcount; a registered
+    block whose refcount reaches zero is parked in an LRU side pool (it
+    still counts as `available`) and is evicted — digest dropped, block
+    reused — only when the free list runs dry. `copy_block` is the
+    copy-on-write primitive: the scheduler materializes a private copy
+    before the first divergent write into a shared block.
 
 Tokens enter the pool a *span* at a time: `span_slots` maps a batch of
 per-row token spans (a chunk of prompt during chunked prefill, or a
@@ -29,7 +38,11 @@ decode state is O(window) / O(1) per row, so paging buys much less).
 """
 from __future__ import annotations
 
+import hashlib
+from collections import OrderedDict
+
 import jax.numpy as jnp
+import numpy as np
 
 
 def check_paged_support(cfg) -> None:
@@ -60,12 +73,26 @@ def blocks_for_positions(n_positions: int, block_size: int) -> int:
 
 
 class BlockPool:
-    """Host-side free-list allocator over `num_blocks` KV blocks.
+    """Host-side refcounting allocator over `num_blocks` KV blocks.
 
     Block 0 is reserved (the trash block for inactive rows) and is never
-    handed out, so `capacity == num_blocks - 1`. Double-alloc and
-    double-free are hard errors — the scheduler tests lean on this to
-    prove admit/evict sequences never leak.
+    handed out, so `capacity == num_blocks - 1`. Freeing a block nobody
+    holds is a hard error — the scheduler tests lean on this to prove
+    admit/evict sequences never leak.
+
+    Prefix caching layers three states on top of the plain free list:
+
+      free      — on `_free`, content unknown, refcount 0;
+      live      — refcount >= 1 holder (one owner, or owner + sharers);
+      idle      — refcount 0 but *registered* under a content digest.
+                  Idle blocks sit in an LRU (`_idle`), still answer
+                  `lookup`/`share`, still count as `available`, and are
+                  evicted oldest-first only when `alloc` drains the free
+                  list.
+
+    With no `register` calls the pool degenerates to the PR-2 free-list
+    allocator: every alloc returns refcount-1 blocks and every free
+    returns them straight to the free list.
     """
 
     def __init__(self, num_blocks: int, block_size: int):
@@ -77,7 +104,11 @@ class BlockPool:
         self.num_blocks = num_blocks
         self.block_size = block_size
         self._free = list(range(num_blocks - 1, 0, -1))
-        self._allocated: set[int] = set()
+        self._ref: dict[int, int] = {}          # block -> refcount >= 1
+        self._index: dict[bytes, int] = {}      # digest -> block
+        self._digest: dict[int, bytes] = {}     # block -> digest
+        self._idle: OrderedDict[int, None] = OrderedDict()  # LRU, old first
+        self.evictions = 0
 
     @property
     def capacity(self) -> int:
@@ -85,7 +116,17 @@ class BlockPool:
 
     @property
     def available(self) -> int:
-        return len(self._free)
+        """Blocks an alloc can claim right now: free + evictable idle."""
+        return len(self._free) + len(self._idle)
+
+    @property
+    def cached_blocks(self) -> int:
+        """Blocks currently indexed by digest (live sharers + idle)."""
+        return len(self._index)
+
+    @property
+    def idle_cached_blocks(self) -> int:
+        return len(self._idle)
 
     def can_alloc(self, n: int) -> bool:
         return n <= self.available
@@ -95,16 +136,99 @@ class BlockPool:
             raise RuntimeError(
                 f"block pool exhausted: want {n}, have {self.available} "
                 f"(callers must check can_alloc and queue instead)")
-        ids = [self._free.pop() for _ in range(n)]
-        self._allocated.update(ids)
+        ids = []
+        for _ in range(n):
+            if self._free:
+                b = self._free.pop()
+            else:  # evict the least-recently-idle cached block
+                b, _ = self._idle.popitem(last=False)
+                del self._index[self._digest.pop(b)]
+                self.evictions += 1
+            self._ref[b] = 1
+            ids.append(b)
         return ids
 
     def free(self, ids) -> None:
+        """Drop one reference per listed block. The last holder's free
+        parks registered blocks in the idle LRU (newest end) and returns
+        unregistered ones to the free list."""
         for b in ids:
-            if b not in self._allocated:
+            if self._ref.get(b, 0) < 1:
                 raise RuntimeError(f"double free / foreign block {b}")
-            self._allocated.remove(b)
-            self._free.append(b)
+            self._ref[b] -= 1
+            if self._ref[b] == 0:
+                del self._ref[b]
+                if b in self._digest:
+                    self._idle[b] = None
+                else:
+                    self._free.append(b)
+
+    def refcount(self, block_id: int) -> int:
+        return self._ref.get(block_id, 0)
+
+    def register(self, block_id: int, digest: bytes) -> bool:
+        """Index a fully-written, currently-held block under its content
+        digest. First writer wins: if the digest is already indexed (or
+        the block already registered) this is a no-op returning False —
+        the duplicate block simply stays private. Trash block 0 can never
+        get here because it is never handed out by `alloc`."""
+        if self._ref.get(block_id, 0) < 1:
+            raise RuntimeError(
+                f"register of unheld block {block_id} (only live blocks "
+                f"can be indexed)")
+        if digest in self._index or block_id in self._digest:
+            return False
+        self._index[digest] = block_id
+        self._digest[block_id] = digest
+        return True
+
+    def lookup(self, digest: bytes):
+        """Block currently indexed under `digest`, or None. Does not take
+        a reference — pair with `share` before relying on the block."""
+        return self._index.get(digest)
+
+    def share(self, digest: bytes):
+        """Take one reference on the block cached under `digest`,
+        reviving it from the idle LRU if nobody holds it. None on miss."""
+        b = self._index.get(digest)
+        if b is None:
+            return None
+        if b in self._idle:
+            del self._idle[b]
+        self._ref[b] = self._ref.get(b, 0) + 1
+        return b
+
+
+def prefix_digests(tokens, block_size: int, fingerprint: bytes = b"") \
+        -> list[bytes]:
+    """Chained content digests for every FULL block of a token prefix.
+
+    digest[i] commits to (fingerprint, block_size, tokens[0 : (i+1)*bs]):
+    the chain folds each block's token ids into the previous digest, so
+    equal digests mean equal position-aligned prefixes under the same
+    model/plan fingerprint. Partial tail blocks get no digest — they are
+    never shared. Host-side only (SHA-256 over int64 token bytes)."""
+    toks = np.asarray(tokens, dtype=np.int64)
+    if toks.ndim != 1:
+        raise ValueError(f"tokens must be 1-D, got shape {toks.shape}")
+    prev = hashlib.sha256(
+        b"kvprefix:%d:" % block_size + fingerprint).digest()
+    out = []
+    for i in range(toks.size // block_size):
+        blk = toks[i * block_size:(i + 1) * block_size]
+        prev = hashlib.sha256(prev + blk.astype("<i8").tobytes()).digest()
+        out.append(prev)
+    return out
+
+
+def copy_block(pool, src, dst):
+    """Copy-on-write primitive: duplicate physical block `src` into `dst`
+    across every pool leaf (codes and int8 scale planes alike). jit-safe
+    with traced src/dst, and TP-safe — the copy moves along the block
+    axis 1 while `pool_pspecs` shards the KV-head axis 3, so each shard
+    copies exactly its own head slice."""
+    return {key: leaf.at[:, dst].set(leaf[:, src])
+            for key, leaf in pool.items()}
 
 
 def init_paged_cache(cfg, num_blocks: int, block_size: int, dtype=None):

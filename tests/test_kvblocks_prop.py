@@ -15,6 +15,15 @@ sequence of reserve→accept→rollback rounds, rejected drafts must return
 every provisional block, the trash block must never be captured, and a
 row's holdings must stay consistent with its committed context.
 
+Prefix caching layers refcounts and a content index on top: under ANY
+interleaving of admissions (with shared/duplicated prompts), chunked
+prefill, decode, speculation rounds, preemptions, and finishes, the
+refcounts must exactly mirror the live holders (no leak, never
+negative), the trash block is never held or cached, a block held by
+more than one sequence is never a prefill scatter target (shared
+payload never mutated in place), and draining every sequence returns
+the pool to full availability.
+
 Tensor-parallel serving head-shards the physical pool but keeps the
 allocator and block tables host-side REPLICATED — every shard indexes
 its head-slice with the same block ids. The TP invariants here pin
@@ -23,6 +32,7 @@ shard never lets the shards drift (identical free lists, identical
 draft grants, trash block captured on no shard), and `shard_pool` is
 an exact head-partition of the single-device pool.
 """
+import collections
 import dataclasses
 
 import numpy as np
@@ -33,9 +43,10 @@ try:
 except ImportError:
     from hypothesis_fallback import given, settings, strategies as st
 
+from repro.runtime import elastic
 from repro.runtime.kvblocks import (BlockPool, blocks_for_positions,
-                                    init_paged_cache, pool_pspecs,
-                                    shard_pool, span_slots,
+                                    blocks_needed, init_paged_cache,
+                                    pool_pspecs, shard_pool, span_slots,
                                     valid_block_counts)
 from repro.runtime.scheduler import Request, Scheduler, Sequence
 
@@ -311,6 +322,126 @@ def test_shard_pool_partitions_heads_exactly():
             shard_pool(pool, 2, 2)
         with pytest.raises(ValueError, match="not divisible"):
             shard_pool(pool, 3, 0)
+
+
+# ---------------------------------------------- prefix-cache refcounts --
+
+@st.composite
+def cache_scripts(draw):
+    """A pool geometry plus a random script over the prefix-caching
+    scheduler: submissions drawn from two shared prompt prefixes (tail
+    length 0 makes a fully-cached, copy-on-write candidate), interleaved
+    with admission, prefill chunks, decode/speculation rounds, pool-
+    pressure preemptions, and finishes."""
+    num_blocks = draw(st.integers(6, 24))
+    block_size = draw(st.integers(1, 4))
+    max_batch = draw(st.integers(1, 3))
+    ops = []
+    for _ in range(draw(st.integers(5, 45))):
+        kind = draw(st.sampled_from(
+            ["submit", "admit", "chunk", "decode", "spec", "finish",
+             "preempt"]))
+        ops.append((kind, draw(st.integers(0, 7))))
+    return num_blocks, block_size, max_batch, ops
+
+
+@given(cache_scripts())
+def test_prefix_cache_refcounts_mirror_holders_exactly(case):
+    num_blocks, bs, max_batch, ops = case
+    pool = BlockPool(num_blocks, bs)
+    sched = Scheduler(pool, max_batch, prefix_cache=True, fingerprint=b"prop")
+    rid = 0
+
+    def live():
+        return [s for s in sched.rows if s is not None]
+
+    for kind, arg in ops:
+        if kind == "submit":
+            p = arg % 2                             # two shared prefixes
+            plen = (1 + p) * bs                     # 1 or 2 full blocks
+            tail = (arg >> 1) % (bs + 2)            # 0 -> COW candidate
+            toks = np.concatenate([
+                np.full(plen, 17 + p, np.int32),
+                np.arange(1000 + 10 * rid, 1000 + 10 * rid + tail,
+                          dtype=np.int32)])
+            req = Request(tokens=toks, max_tokens=1 + arg % 3, rid=rid)
+            rid += 1
+            if blocks_needed(toks.size, req.max_tokens, bs) <= pool.capacity:
+                sched.submit(req)
+        elif kind == "admit":
+            s = sched.try_admit()
+            if s is not None and s.cow_dst is not None:
+                # engine contract: dispatch the device copy, then drop
+                # the source pin
+                assert s.cow_src is not None and s.cow_src != s.cow_dst
+                sched.release_cow(s)
+        elif kind == "chunk":
+            cands = [s for s in live() if not s.prefill_done]
+            if cands:
+                s = cands[arg % len(cands)]
+                width = min(1 + arg, s.prompt_len - s.prefilled)
+                span = range(s.prefilled, s.prefilled + width)
+                assert all(p // bs >= s.n_shared for p in span), \
+                    "prefill chunk aimed inside the shared prefix"
+                for b in {s.block_ids[p // bs] for p in span}:
+                    assert pool.refcount(b) == 1, \
+                        "prefill chunk would write a shared block"
+                shared_before = s.block_ids[:s.n_shared]
+                sched.advance_prefill(s, width)
+                assert s.block_ids[:s.n_shared] == shared_before
+        elif kind == "decode":
+            cands = [s for s in live() if s.prefill_done and not s.done]
+            if cands:
+                cands[arg % len(cands)].n_emitted += 1
+        elif kind == "spec":
+            cands = [s for s in live()
+                     if s.prefill_done and not s.done and s.n_emitted]
+            if cands:
+                s = cands[arg % len(cands)]
+                shared_before = s.block_ids[:s.n_shared]
+                k = sched.reserve_speculation(s, 1 + arg % 3)
+                if k:
+                    s.n_emitted += min(arg % (k + 1), k) + 1
+                    sched.commit_speculation(s)
+                assert s.block_ids[:s.n_shared] == shared_before, \
+                    "speculative rollback rewound into shared blocks"
+        elif kind == "finish":
+            if live():
+                sched.finish(live()[arg % len(live())])
+        elif kind == "preempt":
+            victims = elastic.preemption_victims(sched.rows)
+            if victims:
+                sched.preempt(victims[0])
+        # ------ global invariants after EVERY op ------
+        expect = collections.Counter()
+        for s in live():
+            assert 0 not in s.block_ids, "trash block held by a sequence"
+            assert s.cow_src != 0 and s.cow_dst != 0
+            assert len(set(s.block_ids)) == len(s.block_ids)
+            assert s.prefilled >= s.n_shared * bs, \
+                "write watermark fell inside the shared prefix"
+            expect.update(s.block_ids)
+            if s.cow_src is not None:
+                expect[s.cow_src] += 1
+        for b, c in expect.items():
+            assert pool.refcount(b) == c, f"refcount drift on block {b}"
+        assert pool.refcount(0) == 0
+        assert pool.available == pool.capacity - len(expect), \
+            "pool accounting drifted (leak or double count)"
+        priv = collections.Counter()
+        for s in live():
+            priv.update(s.block_ids[s.n_shared:])
+        assert all(c == 1 for c in priv.values()), \
+            "privately-held block appears in two sequences"
+    for s in list(sched.rows):
+        if s is not None:
+            sched.finish(s)
+    assert pool.available == pool.capacity, "blocks leaked after drain"
+    # refcounts can never go negative: the first over-free is an error
+    ids = pool.alloc(1)
+    pool.free(ids)
+    with pytest.raises(RuntimeError, match="double free"):
+        pool.free(ids)
 
 
 def test_pool_pspecs_shard_heads_only():

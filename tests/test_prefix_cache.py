@@ -1,0 +1,426 @@
+"""Prefix caching: refcounted copy-on-write KV-block sharing tests.
+
+The contract, per docs/serving.md:
+  * `kvblocks.prefix_digests` chains full-block digests — equal digests
+    iff equal position-aligned prefixes under the same fingerprint;
+  * `BlockPool` register/share/free keeps a content index over the
+    free-list allocator: idle cached blocks still count as available and
+    are LRU-evicted only when the free list runs dry;
+  * scheduler admission maps the longest cached prefix by reference,
+    charges only new blocks, and copy-on-writes the final block of a
+    fully-cached prompt so its last position's logits are recomputed
+    into a private block;
+  * greedy serve with the cache ON is TOKEN-IDENTICAL to cache OFF for
+    every request — across dtypes, KV precisions, speculation, and
+    tensor-parallel meshes. Cached K/V equals recomputed K/V bit for bit
+    (same tokens, same positions, same per-(token, head) int8 scales),
+    so this is an exactness property, not a tolerance;
+  * `hw.tpu_model.prefix_cache_point` prices the skipped prefill work
+    monotonically in the hit rate.
+
+Mesh cases run in a subprocess (forced host devices) exactly like
+tests/test_tp_serving.py, so this process keeps seeing one device.
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import (CompressionPlan, DraftSpec, InferenceEngine,
+                       Request, SamplingParams)
+from repro.configs import get_config
+from repro.core.compress import CompressionConfig
+from repro.hw import tpu_model
+from repro.models import init_params
+from repro.runtime.kvblocks import BlockPool, blocks_needed, prefix_digests
+from repro.runtime.scheduler import Scheduler
+from repro.runtime.scheduler import Request as SchedRequest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_sub(code: str):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, timeout=900, env=env)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    return r.stdout
+
+
+# -------------------------------------------------------- prefix_digests --
+
+def test_prefix_digests_chain_commits_to_whole_prefix():
+    """digest[i] pins tokens[0 : (i+1)*bs]: flipping ANY earlier token
+    changes every digest from that block on, while a tail change leaves
+    earlier digests alone. Partial tail blocks get no digest."""
+    toks = np.arange(1, 15, dtype=np.int32)           # 14 tokens, bs 4
+    d = prefix_digests(toks, 4)
+    assert len(d) == 3                                # 14 // 4 full blocks
+    assert len({*d}) == 3                             # chain never repeats
+    mut = toks.copy()
+    mut[1] += 1                                       # inside block 0
+    d2 = prefix_digests(mut, 4)
+    assert all(a != b for a, b in zip(d, d2)), "early flip must cascade"
+    mut = toks.copy()
+    mut[9] += 1                                       # inside block 2
+    d3 = prefix_digests(mut, 4)
+    assert d3[:2] == d[:2] and d3[2] != d[2]
+    # partial tail (tokens 12..13) is never digested
+    assert prefix_digests(toks[:12], 4) == d
+
+
+def test_prefix_digests_fingerprint_and_block_size_disjoint():
+    """Same tokens under a different model fingerprint or block size must
+    never collide — cached K/V is only reusable for the exact engine
+    geometry that wrote it."""
+    toks = np.arange(8, dtype=np.int32)
+    base = prefix_digests(toks, 4)
+    assert prefix_digests(toks, 4, b"other-plan") != base
+    assert set(prefix_digests(toks, 2)).isdisjoint(base)
+    with pytest.raises(ValueError, match="1-D"):
+        prefix_digests(toks.reshape(2, 4), 4)
+
+
+# ------------------------------------------------------------ BlockPool --
+
+def test_register_share_free_lifecycle():
+    """register indexes a held block; free parks it idle (still
+    available, still shareable); share revives it with refcount 1;
+    register of an unheld block is a hard error; first writer wins."""
+    pool = BlockPool(num_blocks=6, block_size=4)
+    d = prefix_digests(np.arange(4), 4)
+    (b,) = pool.alloc(1)
+    assert pool.register(b, d[0]) is True
+    assert pool.refcount(b) == 1 and pool.lookup(d[0]) == b
+    # duplicate content from another writer stays private
+    (b2,) = pool.alloc(1)
+    assert pool.register(b2, d[0]) is False
+    # a block carries at most one digest
+    assert pool.register(b, prefix_digests(np.arange(9, 13), 4)[0]) is False
+    pool.free([b])                                    # -> idle, not free
+    assert pool.refcount(b) == 0
+    assert pool.idle_cached_blocks == 1
+    assert pool.available == pool.capacity - 1        # b2 still live
+    got = pool.share(d[0])
+    assert got == b and pool.refcount(b) == 1
+    assert pool.idle_cached_blocks == 0
+    assert pool.share(b"\x00" * 32) is None
+    pool.free([b, b2])
+    with pytest.raises(RuntimeError, match="double free"):
+        pool.free([b2])
+    with pytest.raises(RuntimeError, match="unheld"):
+        pool.register(b2, prefix_digests(np.arange(20, 24), 4)[0])
+
+
+def test_idle_blocks_evict_lru_when_free_list_dry():
+    """alloc prefers the free list; once dry it evicts idle cached
+    blocks oldest-idle-first, dropping their digests and counting
+    evictions. Shared (refcount >= 1) cached blocks are never evicted."""
+    pool = BlockPool(num_blocks=5, block_size=2)      # capacity 4
+    ds = prefix_digests(np.arange(8), 2)              # 4 digests
+    ids = pool.alloc(4)
+    for b, d in zip(ids, ds):
+        pool.register(b, d)
+    keep = pool.share(ds[0])                          # rc 2: pinned
+    pool.free(ids)                                    # ids[1:] idle; keep live
+    assert pool.idle_cached_blocks == 3
+    assert pool.available == 3
+    got = pool.alloc(2)                               # evicts oldest two idles
+    assert pool.evictions == 2
+    assert got == [ids[1], ids[2]], "eviction must be oldest-idle-first"
+    assert pool.lookup(ds[1]) is None and pool.lookup(ds[2]) is None
+    assert pool.lookup(ds[0]) == keep, "held cached block evicted"
+    assert pool.lookup(ds[3]) == ids[3]
+    with pytest.raises(RuntimeError, match="exhausted"):
+        pool.alloc(2)                                 # only ids[3] evictable
+    pool.free(got + [keep])
+
+
+# -------------------------------------------------- scheduler admission --
+
+def _drain_prefill(sched, seq):
+    """Chunk-prefill a sequence to completion, registering its blocks
+    the way the engine does (advance_prefill at dispatch time)."""
+    while not seq.prefill_done:
+        sched.advance_prefill(seq, min(4, seq.prompt_len - seq.prefilled))
+
+
+def test_admission_maps_cached_prefix_by_reference():
+    pool = BlockPool(num_blocks=32, block_size=4)
+    sched = Scheduler(pool, max_batch=2, prefix_cache=True)
+    prefix = np.arange(1, 13, dtype=np.int32)               # 3 full blocks
+    a = SchedRequest(tokens=np.concatenate([prefix, [90, 91]]),
+                     max_tokens=2, rid=0)
+    sched.submit(a)
+    sa = sched.try_admit()
+    assert sa.n_shared == 0 and sa.cow_src is None
+    _drain_prefill(sched, sa)
+    assert pool.cached_blocks == 3
+    prefix_ids = sa.block_ids[:3]
+    sched.finish(sa)
+    assert pool.available == pool.capacity              # idle counts free
+    b = SchedRequest(tokens=np.concatenate([prefix, [70, 71, 72]]),
+                     max_tokens=2, rid=1)
+    sched.submit(b)
+    sb = sched.try_admit()
+    assert sb.n_shared == 3
+    assert sb.prefilled == 12, "prefill must resume at first uncached pos"
+    assert sb.block_ids[:3] == prefix_ids, "cached blocks not mapped by ref"
+    assert all(pool.refcount(x) == 1 for x in sb.block_ids[:3])
+    assert sched.cache_hit_blocks == 3 and sched.cache_hit_tokens == 12
+    assert sched.cache_cow_blocks == 0
+    # worst case charged minus the shared blocks
+    need = blocks_needed(b.tokens.size, 2, 4)
+    assert len(sb.block_ids) == need
+    _drain_prefill(sched, sb)
+    sched.finish(sb)
+    assert pool.available == pool.capacity
+
+
+def test_fully_cached_prompt_takes_cow_block():
+    """An exact-duplicate prompt shares all but its last matched block,
+    pins the last one as cow_src, allocates a private cow_dst, and
+    prefills exactly one position (prompt_len - 1) for its logits."""
+    pool = BlockPool(num_blocks=16, block_size=4)
+    sched = Scheduler(pool, max_batch=2, prefix_cache=True)
+    toks = np.arange(1, 9, dtype=np.int32)                  # exactly 2 blocks
+    a = SchedRequest(tokens=toks, max_tokens=3, rid=0)
+    sched.submit(a)
+    sa = sched.try_admit()
+    _drain_prefill(sched, sa)
+    first, second = sa.block_ids[0], sa.block_ids[1]
+    sched.finish(sa)
+    dup = SchedRequest(tokens=toks.copy(), max_tokens=3, rid=1)
+    sched.submit(dup)
+    sd = sched.try_admit()
+    assert sd.n_shared == 1 and sd.block_ids[0] == first
+    assert sd.cow_src == second and sd.cow_dst == sd.block_ids[1]
+    assert sd.cow_dst != second, "COW must be a private block"
+    assert sd.prefilled == 7, "only the final position is recomputed"
+    assert sched.cache_cow_blocks == 1 and sched.cache_hit_blocks == 2
+    assert pool.refcount(second) == 1                       # the pin
+    sched.release_cow(sd)
+    assert sd.cow_src is None and pool.refcount(second) == 0
+    # the dup's private final block must NOT be re-registered over the
+    # cached one: first writer won
+    sched.advance_prefill(sd, 1)
+    assert pool.lookup(sd.digests[1]) == second
+    sched.finish(sd)
+    assert pool.available == pool.capacity
+
+
+def test_admission_unwinds_shares_when_pool_cannot_back_rest():
+    """If the uncached remainder does not fit, the head stays queued and
+    its provisional shares/pins are returned (no refcount leak)."""
+    pool = BlockPool(num_blocks=8, block_size=4)            # capacity 7
+    sched = Scheduler(pool, max_batch=3, prefix_cache=True, preempt=False)
+    prefix = np.arange(1, 9, dtype=np.int32)                # 2 blocks
+    a = SchedRequest(tokens=prefix, max_tokens=2, rid=0)
+    sched.submit(a)
+    sa = sched.try_admit()
+    _drain_prefill(sched, sa)
+    # hog the rest of the pool so the next admit can't take new blocks
+    hog = pool.alloc(pool.available - 2)
+    b = SchedRequest(tokens=np.concatenate([prefix, np.arange(40, 48)]),
+                     max_tokens=4, rid=1)            # 2 cached + 3 new blocks
+    sched.submit(b)
+    assert sched.try_admit() is None
+    assert all(pool.refcount(x) == 1 for x in sa.block_ids[:2]), \
+        "failed admission leaked share refcounts"
+    pool.free(hog)
+    sched.finish(sa)
+    assert pool.available == pool.capacity
+
+
+# ------------------------------------------------------ engine identity --
+
+@pytest.fixture(scope="module")
+def base():
+    cfg = get_config("opus-mt", smoke=True)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _shared_workload(vocab, seed=0):
+    """9 requests: 6 share a 12-token prefix (3 full blocks at bs=4) with
+    distinct tails, 1 is an exact duplicate of the first, 1 is unrelated,
+    and the last IS the bare prefix — a fully-cached prompt, so its
+    admission must take the copy-on-write path (prompt_len a multiple of
+    the block size, every block already registered by then)."""
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(1, vocab, size=12).astype(np.int32)
+    reqs = [np.concatenate([prefix,
+                            rng.integers(1, vocab, size=2 + i % 4)
+                            .astype(np.int32)])
+            for i in range(6)]
+    reqs.append(np.concatenate([prefix, reqs[0][12:]]))     # duplicate
+    reqs.append(rng.integers(1, vocab, size=9).astype(np.int32))
+    reqs.append(prefix.copy())                              # COW trigger
+    return reqs
+
+
+def test_cache_on_matches_cache_off_dtype_kv_matrix(base):
+    """The headline exactness claim: for every request, cache-on greedy
+    output equals cache-off, across fp32/bf16 models and bf16/int8 KV —
+    and the cache actually engaged (hits and at least one COW)."""
+    cfg0, params = base
+    sp = SamplingParams(max_tokens=5)
+    for dtype in ("float32", "bfloat16"):
+        for kv_bits in (16, 8):
+            cfg = dataclasses.replace(cfg0, dtype=dtype,
+                                      kv_cache_bits=kv_bits)
+            eng = InferenceEngine(cfg, params, max_batch=3, block_size=4,
+                                  chunk_tokens=8)
+            prompts = _shared_workload(cfg.vocab_size)
+            off = eng.serve(prompts, sp, prefix_cache=False)
+            on = eng.serve(prompts, sp, prefix_cache=True)
+            assert not off.prefix_cache and on.prefix_cache
+            assert off.cache_lookup_blocks == 0
+            assert on.cache_hit_blocks > 0, (dtype, kv_bits)
+            assert on.cache_cow_blocks >= 1, "duplicate prompt skipped COW"
+            assert on.cache_hit_tokens == sum(
+                p.size for p in prompts) - on.prefill_tokens
+            for i, (a, b) in enumerate(zip(off.outputs, on.outputs)):
+                np.testing.assert_array_equal(
+                    b, a, err_msg=f"{dtype}/kv{kv_bits} request {i}")
+
+
+def test_cache_hits_across_serve_calls_do_not_exist(base):
+    """Each serve call builds a fresh pool: nothing leaks between calls
+    (a stale cross-call hit would reuse K/V from freed device memory)."""
+    cfg, params = base
+    eng = InferenceEngine(cfg, params, max_batch=2, block_size=4,
+                          chunk_tokens=8)
+    p = [np.arange(1, 14, dtype=np.int32)]
+    r1 = eng.serve(p, SamplingParams(max_tokens=3))
+    r2 = eng.serve(p, SamplingParams(max_tokens=3))
+    assert r1.cache_hit_blocks == 0 and r2.cache_hit_blocks == 0
+    np.testing.assert_array_equal(r1.outputs[0], r2.outputs[0])
+
+
+def test_speculative_serve_identical_with_cache_on(base):
+    """Speculation + prefix cache compose: greedy outputs unchanged, and
+    speculative rollback never rewinds into a shared block."""
+    cfg, _ = base
+    plan = CompressionConfig(method="itera", weight_wl=8, rank_fraction=0.75)
+    eng = InferenceEngine.build(cfg, plan, max_batch=3, block_size=4,
+                                chunk_tokens=8,
+                                speculate=DraftSpec(k=3, rank_fraction=0.7))
+    prompts = _shared_workload(cfg.vocab_size, seed=3)
+    sp = SamplingParams(max_tokens=6)
+    off = eng.serve(prompts, sp, prefix_cache=False)
+    on = eng.serve(prompts, sp, prefix_cache=True)
+    assert on.spec_rounds > 0 and on.cache_hit_blocks > 0
+    for i, (a, b) in enumerate(zip(off.outputs, on.outputs)):
+        np.testing.assert_array_equal(b, a, err_msg=f"request {i}")
+
+
+def test_preemption_under_pool_pressure_keeps_outputs_exact(base):
+    """A pool sized so a co-admitted prefill row must yield its blocks:
+    the victim requeues, everyone still finishes with solo-identical
+    output, and the preemption is surfaced in ServeResult."""
+    cfg, params = base
+    eng = InferenceEngine(cfg, params, max_batch=3, block_size=4,
+                          chunk_tokens=16)
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(1, cfg.vocab_size, size=n).astype(np.int32)
+               for n in (20, 18, 16)]
+    gen = 3
+    need = [blocks_needed(p.size, gen, 4) for p in prompts]
+    # two rows' worth of blocks minus one: co-admitted prefills collide
+    res = eng.serve(prompts, SamplingParams(max_tokens=gen),
+                    num_blocks=need[0] + need[1])
+    assert res.preemptions >= 1, "pool pressure never triggered preemption"
+    solo = InferenceEngine(cfg, params, max_batch=3, block_size=4,
+                           chunk_tokens=16)
+    for i, p in enumerate(prompts):
+        want = solo.generate(p[None], SamplingParams(max_tokens=gen)).tokens[0]
+        np.testing.assert_array_equal(res.outputs[i], np.asarray(want),
+                                      err_msg=f"request {i}")
+
+
+def test_tp_serve_cache_identity_mesh2():
+    """Cache-on == cache-off on a forced 2-device mesh (bf16 + int8 KV):
+    the COW device copy moves along the block axis while the pool shards
+    heads, so every shard copies exactly its own slice."""
+    out = run_sub("""
+        import dataclasses
+        import numpy as np
+        import jax
+        from repro.api.engine import InferenceEngine, SamplingParams
+        from repro.configs import get_config
+        from repro.launch.mesh import make_serving_mesh
+        from repro.models import transformer as tfm
+
+        rng = np.random.default_rng(0)
+        sp = SamplingParams(max_tokens=5)
+        cfg = dataclasses.replace(get_config("opus-mt", smoke=True),
+                                  dtype="bfloat16", kv_cache_bits=8)
+        params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+        prefix = rng.integers(1, cfg.vocab_size, size=12).astype(np.int32)
+        prompts = [np.concatenate([prefix,
+                                   rng.integers(1, cfg.vocab_size,
+                                                size=2 + i % 3)
+                                   .astype(np.int32)]) for i in range(5)]
+        prompts.append(prefix.copy())     # fully-cached prompt -> COW
+        eng = InferenceEngine.build(cfg, params=params,
+                                    mesh=make_serving_mesh(2),
+                                    max_batch=3, block_size=4,
+                                    chunk_tokens=8)
+        off = eng.serve(prompts, sp, prefix_cache=False)
+        on = eng.serve(prompts, sp, prefix_cache=True)
+        assert on.cache_hit_blocks > 0 and on.cache_cow_blocks >= 1
+        for i, (a, b) in enumerate(zip(off.outputs, on.outputs)):
+            assert np.array_equal(a, b), f"tp2 request {i}: {b} != {a}"
+        print("TP_CACHE_OK")
+        """)
+    assert "TP_CACHE_OK" in out
+
+
+# ----------------------------------------------------- analytical model --
+
+def test_prefix_cache_point_monotone_in_hit_rate():
+    """More cache hits never cost more: MACs and KV writeback saved are
+    non-decreasing, priced prefill time non-increasing, TTFT speedup
+    >= 1 — over the whole hit-rate range at several prompt lengths."""
+    geom = dict(num_layers=4, d_model=256, d_ff=1024, num_heads=8,
+                num_kv_heads=4, head_dim=32, block_size=16)
+    for plen in (17, 256, 2048):
+        prev = None
+        for hr in np.linspace(0.0, 1.0, 9):
+            pt = tpu_model.prefix_cache_point(plen, float(hr), **geom)
+            assert pt.tokens_cached + pt.tokens_computed == plen
+            assert pt.tokens_cached <= plen - 1, "last position always runs"
+            assert pt.macs + pt.macs_saved == pytest.approx(pt.macs_nocache)
+            assert pt.ttft_speedup >= 1.0
+            if prev is not None:
+                assert pt.macs_saved >= prev.macs_saved
+                assert pt.kv_bytes_saved >= prev.kv_bytes_saved
+                assert pt.prefill_s <= prev.prefill_s + 1e-12
+            prev = pt
+        assert prev.tokens_cached > 0, "full hit rate cached nothing"
+
+
+def test_prefix_cache_point_kv_bits_and_validation():
+    """int8 KV writes fewer bytes per token, so the bandwidth saved per
+    cached token is smaller than bf16's; bad inputs are hard errors."""
+    geom = dict(num_layers=4, d_model=256, d_ff=1024, num_heads=8,
+                num_kv_heads=4, head_dim=32, block_size=16)
+    p16 = tpu_model.prefix_cache_point(512, 0.75, kv_bits=16, **geom)
+    p8 = tpu_model.prefix_cache_point(512, 0.75, kv_bits=8, **geom)
+    assert p8.tokens_cached == p16.tokens_cached
+    assert p8.kv_bytes_saved < p16.kv_bytes_saved
+    assert p8.macs_saved == pytest.approx(p16.macs_saved)
+    with pytest.raises(ValueError, match="prompt_len"):
+        tpu_model.prefix_cache_point(0, 0.5, **geom)
+    with pytest.raises(ValueError, match="hit_rate"):
+        tpu_model.prefix_cache_point(64, 1.5, **geom)
+    with pytest.raises(ValueError, match="kv_bits"):
+        tpu_model.prefix_cache_point(64, 0.5, kv_bits=4, **geom)

@@ -220,6 +220,73 @@ def test_oversized_request_fails_loudly():
         sched.submit(Request(tokens=np.arange(1, 4)))  # max_tokens=None
 
 
+def test_pool_pressure_preempts_newest_zero_output_row():
+    """When the head request cannot admit even with a free row, schedule()
+    preempts the newest zero-output sequence: its blocks are freed, its
+    request requeues immediately behind the head, the head admits in the
+    same step, and the victim — having yielded once — is never preempted
+    again."""
+    pool = BlockPool(num_blocks=13, block_size=4)       # capacity 12
+    sched = Scheduler(pool, max_batch=3)
+    a = Request(tokens=np.arange(1, 18), max_tokens=4, rid=0)   # 5 blocks
+    b = Request(tokens=np.arange(1, 14), max_tokens=4, rid=1)   # 4 blocks
+    c = Request(tokens=np.arange(1, 16), max_tokens=4, rid=2)   # 5 blocks
+    for r in (a, b, c):
+        sched.submit(r)
+    plan = sched.schedule(token_budget=32)      # a, b admitted; c waits
+    assert [s.req.rid for s in plan.admitted] == [0, 1]
+    assert not plan.preempted and sched.num_waiting == 1
+    row_a = plan.admitted[0].row
+    sched.rows[row_a].prefilled = 17            # a decoded once: protected
+    sched.rows[row_a].n_emitted = 1
+    plan2 = sched.schedule(token_budget=32)     # pool can't back c (5 > 3)
+    # victim = b (newest zero-output); a is mid-decode and untouchable
+    assert plan2.preempted == [plan.admitted[1].row]
+    assert [s.req.rid for s in plan2.admitted] == [2]
+    assert sched.preemptions == 1 and b.requeued
+    assert sched.waiting[0] is b, "victim must requeue at the queue head"
+    assert pool.available == pool.capacity - 5 - 5      # b's blocks freed
+    # b re-admits once a row frees, and never yields again
+    sched.finish(sched.rows[row_a])
+    plan3 = sched.schedule(token_budget=32)
+    assert [s.req.rid for s in plan3.admitted] == [1]
+    row_c = plan2.admitted[0].row
+    sched.rows[row_c].prefilled = 15            # c decoding now: protected
+    sched.rows[row_c].n_emitted = 1
+    sched.submit(Request(tokens=np.arange(1, 30), max_tokens=4, rid=3))
+    plan4 = sched.schedule(token_budget=32)     # rid 3 needs 8: can't fit
+    assert not plan4.admitted and not plan4.preempted, \
+        "a once-requeued request was preempted again"
+    assert sched.preemptions == 1
+    for s in list(sched.rows):
+        if s is not None:
+            sched.finish(s)
+    assert pool.available == pool.capacity
+
+
+def test_preemption_declined_when_it_cannot_fit_the_head():
+    """No victim set that provably fits the head => no preemption at all
+    (churn without progress is worse than waiting)."""
+    pool = BlockPool(num_blocks=13, block_size=4)       # capacity 12
+    sched = Scheduler(pool, max_batch=3)
+    big = Request(tokens=np.arange(1, 18), max_tokens=4, rid=0)   # 5 blocks
+    small = Request(tokens=np.arange(1, 5), max_tokens=1, rid=1)  # 1 block
+    for r in (big, small):
+        sched.submit(r)
+    plan = sched.schedule(token_budget=32)
+    assert len(plan.admitted) == 2
+    plan.admitted[0].prefilled = 17             # big is decoding: protected
+    plan.admitted[0].n_emitted = 1
+    # head needs 8; 6 free + 1 reclaimable from the only victim < 8
+    sched.submit(Request(tokens=np.arange(1, 30), max_tokens=4, rid=2))
+    plan2 = sched.schedule(token_budget=32)
+    assert not plan2.admitted and not plan2.preempted
+    assert sched.preemptions == 0 and not small.requeued
+    for s in list(sched.rows):
+        if s is not None:
+            sched.finish(s)
+
+
 def test_scheduler_fcfs_head_of_line():
     """Admission is FCFS: a small later request does not jump a head
     request that is waiting on blocks."""

@@ -181,6 +181,20 @@ SERVING_METRICS = [
     ("spec speedup vs plain", ("speculation", "speedup_vs_plain"), 1.0),
     ("spec accept rate", ("speculation", "accept_rate"), 1.0),
     ("spec draft depth k", ("speculation", "k"), 1.0),
+    # prefix-caching section (fig13 --shared-prefix; '-' without it)
+    ("prefix-cache hit rate (tokens)", ("prefix_cache", "hit_rate"), 1.0),
+    ("prefix-cache tok/s (on)",
+     ("prefix_cache", "tokens_per_second_on"), 1.0),
+    ("prefix-cache tok/s (off)",
+     ("prefix_cache", "tokens_per_second_off"), 1.0),
+    ("prefix-cache speedup vs off",
+     ("prefix_cache", "speedup_vs_off"), 1.0),
+    ("prefix-cache TTFT p50 on (ms)",
+     ("prefix_cache", "ttft_p50_s_on"), 1e3),
+    ("prefix-cache TTFT p50 off (ms)",
+     ("prefix_cache", "ttft_p50_s_off"), 1e3),
+    ("prefix-cache blocks saved", ("prefix_cache", "blocks_saved"), 1.0),
+    ("prefix-cache COW blocks", ("prefix_cache", "cow_blocks"), 1.0),
     # tensor-parallel serving section (fig13 --mesh N; '-' without it)
     ("tp mesh (model axis)", ("tp", "mesh"), 1.0),
     ("tp tok/s", ("tp", "tokens_per_second"), 1.0),
