@@ -12,8 +12,6 @@ decomposition is the expensive step.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
 import os
 import sys
 import time
@@ -27,7 +25,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 from repro.checkpoint import ckpt as ckpt_lib                 # noqa: E402
 from repro.configs.base import ModelConfig                    # noqa: E402
 from repro.core.compress import (                             # noqa: E402
-    CompressionConfig, compress_params, eligible_linears,
+    CompressionConfig, eligible_linears,
 )
 from repro.core.itera import itera_decompose, svd_decompose   # noqa: E402
 from repro.core.quant import quantize                         # noqa: E402

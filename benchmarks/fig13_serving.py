@@ -34,9 +34,8 @@ from __future__ import annotations
 import argparse
 import json
 
-import numpy as np
-
 import jax
+import numpy as np
 
 from repro.api import DraftSpec, InferenceEngine, Request, SamplingParams
 from repro.configs import get_config

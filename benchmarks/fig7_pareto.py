@@ -5,8 +5,6 @@ paper's claims checked here:
   * SRA adds the biggest gains at lower compression;
   * at W4A8 / comparable ratio, ITERA(+SRA) beats quant-only.
 """
-import numpy as np
-
 from common import BLOCK_LINEARS, DecompCache, train_proxy, token_accuracy, csv_row
 from repro.core.compress import CompressionConfig
 from repro.core.sra import sra_allocate, uniform_allocation

@@ -4,7 +4,7 @@ the comparison at compression ratio ~8 (W4A8) mirrors the paper's bars:
 quant-only vs ITERA (+1.2% claimed) vs ITERA+SRA (up to +4.9% claimed)."""
 from common import BLOCK_LINEARS, DecompCache, train_proxy, token_accuracy, csv_row
 from repro.core.compress import CompressionConfig
-from repro.core.sra import sra_allocate, uniform_allocation
+from repro.core.sra import sra_allocate
 
 
 def matched_ratio_ranks(dc, L, full, target_ratio):

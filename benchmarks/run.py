@@ -5,11 +5,9 @@ wall-time axis report 0.0 and carry their numbers in `derived`).
   PYTHONPATH=src python -m benchmarks.run            # everything
   PYTHONPATH=src python -m benchmarks.run fig7 fig10 # subset
 """
-import importlib
 import os
 import sys
 import time
-import traceback
 
 sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
 

@@ -23,8 +23,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.itera import LowRankQ      # registered pytree nodes appear
-from repro.core.quant import QuantizedTensor  # in compressed checkpoints
+from repro.core.itera import LowRankQ      # noqa: F401  (registers pytree
+from repro.core.quant import QuantizedTensor  # noqa: F401   nodes appearing
+                                              # in compressed checkpoints)
 
 _SEP = "|"
 

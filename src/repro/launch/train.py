@@ -26,7 +26,6 @@ from repro.configs import get_config
 from repro.data import pipeline
 from repro.launch import mesh as mesh_lib
 from repro.launch import sharding as shd
-from repro.launch import steps as steps_lib
 from repro.models import transformer as tfm
 from repro.optim import adamw
 from repro.runtime import shardctx

@@ -36,11 +36,13 @@ and bounded:
 """
 from __future__ import annotations
 
-import jax
 import numpy as np
-from jax.sharding import Mesh, NamedSharding
 
-from repro.checkpoint import ckpt as ckpt_lib
+# jax (and the checkpoint module, which imports it) is pulled in lazily
+# by the mesh-surgery functions below: the preemption-policy half of
+# this module sits on the scheduler's per-step hot path, and
+# `from repro.runtime.elastic import preemption_victims` must stay
+# importable — and fast — without initializing a device runtime.
 
 
 def preemption_victims(live_seqs):
@@ -82,6 +84,9 @@ def viable_meshes(n_devices: int):
 
 
 def make_mesh(shape, axes):
+    import jax
+    from jax.sharding import Mesh
+
     devs = np.array(jax.devices()[: int(np.prod(shape))]).reshape(shape)
     return Mesh(devs, axes)
 
@@ -93,6 +98,8 @@ def shrink_mesh(mesh: Mesh, *, drop_axis: str):
     disappear entirely) — the single-process analog of re-forming the ICI
     mesh around a dead pod.
     """
+    from jax.sharding import Mesh
+
     names = list(mesh.axis_names)
     sizes = dict(zip(names, mesh.devices.shape))
     if sizes[drop_axis] <= 1:
@@ -108,6 +115,11 @@ def shrink_mesh(mesh: Mesh, *, drop_axis: str):
 def elastic_restore(ckpt_dir: str, like, mesh: Mesh, spec_fn, step=None):
     """Restore `like`-shaped state onto `mesh` using spec_fn(path, leaf)->
     PartitionSpec. Raises if any global shape does not divide."""
+    import jax
+    from jax.sharding import NamedSharding
+
+    from repro.checkpoint import ckpt as ckpt_lib
+
     flat = jax.tree_util.tree_flatten_with_path(like)
     shardings = []
     for path, leaf in flat[0]:

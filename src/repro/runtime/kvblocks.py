@@ -41,8 +41,14 @@ from __future__ import annotations
 import hashlib
 from collections import OrderedDict
 
-import jax.numpy as jnp
 import numpy as np
+
+# jax.numpy is imported lazily inside the device-facing functions
+# (init_paged_cache, valid_block_counts, span_slots): the allocator /
+# digest half of this module is on the scheduler's host path, and
+# `from repro.runtime.kvblocks import BlockPool` must not initialize a
+# device runtime. Function-local imports are trace-safe — they run at
+# trace time, not per step.
 
 
 def check_paged_support(cfg) -> None:
@@ -236,6 +242,8 @@ def init_paged_cache(cfg, num_blocks: int, block_size: int, dtype=None):
     (L, num_blocks, block_size, Hk, Dh), plus {"ks","vs"} f32 scale planes
     when cfg.kv_cache_bits == 8 (same int8 code + scale convention as
     attention.init_kv_cache)."""
+    import jax.numpy as jnp
+
     check_paged_support(cfg)
     dtype = dtype or jnp.dtype(cfg.dtype)
     L, hk, hd = cfg.num_layers, cfg.num_kv_heads, cfg.head_dim
@@ -295,6 +303,8 @@ def valid_block_counts(ctx_lens, q_lens, block_size, max_blocks):
     (q_lens == 0) count zero — the kernel skips them entirely. jit-safe
     (pure index math); clamped to the table width for caller-supplied
     out-of-range metadata."""
+    import jax.numpy as jnp
+
     total = ctx_lens + q_lens
     nb = (total + block_size - 1) // block_size
     nb = jnp.where(q_lens > 0, nb, 0)
@@ -314,6 +324,8 @@ def span_slots(block_table, ctx_lens, q_lens, width, block_size):
     rectangle with no control flow. jit-safe (pure index math, static
     shapes).
     """
+    import jax.numpy as jnp
+
     pos = ctx_lens[:, None] + jnp.arange(width)[None, :]        # (B, W)
     valid = jnp.arange(width)[None, :] < q_lens[:, None]        # (B, W)
     mb = block_table.shape[1]

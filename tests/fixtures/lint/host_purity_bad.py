@@ -1,0 +1,21 @@
+"""BAD: a host-pure scheduler module touching jax.
+# iteralint: host-pure-module
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def admit(queue, pool):
+    # device op in the admission hot path
+    order = jnp.argsort(jnp.asarray([r.rid for r in queue]))
+    return [queue[i] for i in np.asarray(order)]
+
+
+def evict(pool):
+    import jax.numpy as lazy_jnp   # even lazily: pure modules ban jax
+    return lazy_jnp.zeros(())
+
+
+def count(pool):
+    return jax.device_count()

@@ -1,0 +1,18 @@
+"""GOOD: a host-pure scheduler module — numpy/stdlib only.
+# iteralint: host-pure-module
+"""
+import collections
+
+import numpy as np
+
+
+def admit(queue, pool):
+    order = np.argsort([r.rid for r in queue])
+    return [queue[i] for i in order]
+
+
+def evict(pool, n):
+    victims = collections.deque(maxlen=n)
+    for b in pool:
+        victims.append(b)
+    return list(victims)

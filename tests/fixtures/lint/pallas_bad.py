@@ -1,0 +1,32 @@
+"""BAD: pallas_call violating grid/BlockSpec/scratch contracts."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def kernel(x_ref, w_ref, o_ref, acc_ref):
+    acc_ref[...] += jnp.dot(x_ref[...], w_ref[...])
+    o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def matmul(x, w, *, bm=128, bk=128, bn=128, w_packed=False):
+    m, k = x.shape
+    _, n = w.shape
+    # missing: assert m % bm == 0 (grid divides m // bm below)
+    # missing: packed `% 256` guard for w_packed
+    assert k % bk == 0 and n % bn == 0
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn, k // bk),
+        in_specs=[
+            # index map takes 2 args for a rank-3 grid
+            pl.BlockSpec((bm, bk), lambda i, j: (i, j)),
+            # index map returns 3 coords for a rank-2 block
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        # bf16 accumulator scratch loses mantissa across the K loop
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.bfloat16)],
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+    )(x, w, w)  # 3 operands vs 2 in_specs

@@ -1,0 +1,20 @@
+"""BAD: arrays / unhashables in registered pytree aux_data."""
+import dataclasses
+
+import jax
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantBlob:
+    values: jax.Array
+    scale: jax.Array
+    wl: int
+    tags: list
+
+
+jax.tree_util.register_pytree_with_keys(
+    QuantBlob,
+    # `scale` is an array and `tags` a list — both poison the jit cache
+    lambda q: ((("values", q.values),), (q.wl, q.scale, q.tags, [1])),
+    lambda aux, ch: QuantBlob(ch[0], aux[1], aux[0], aux[2]),
+)

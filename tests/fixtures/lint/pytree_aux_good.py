@@ -1,0 +1,21 @@
+"""GOOD: arrays in children, static hashable scalars in aux_data."""
+import dataclasses
+
+import jax
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantBlob:
+    values: jax.Array
+    scale: jax.Array
+    wl: int
+    axis: int
+    packed: bool
+
+
+jax.tree_util.register_pytree_with_keys(
+    QuantBlob,
+    lambda q: ((("values", q.values), ("scale", q.scale)),
+               (q.wl, q.axis, q.packed)),
+    lambda aux, ch: QuantBlob(ch[0], ch[1], *aux),
+)

@@ -1,0 +1,20 @@
+"""BAD: unmarked static params; per-step scalars into jitted calls."""
+import jax
+import jax.numpy as jnp
+
+
+# `n` drives a range() and a shape but is not static -> retrace per value
+step = jax.jit(lambda x, n: sum(jnp.zeros((n,)) + x for _ in range(n)))
+
+
+class Engine:
+
+    def __init__(self):
+        self._step = jax.jit(lambda x: x * 2)
+
+    def serve(self, reqs):
+        out = []
+        for r in reqs:
+            # fresh python scalar per iteration -> one trace per length
+            out.append(self._step(jnp.ones(4), len(r)))
+        return out

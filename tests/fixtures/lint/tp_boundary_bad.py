@@ -1,0 +1,34 @@
+"""BAD: boundary projections without reduce_tp; stray collectives."""
+import jax
+
+
+def apply_linear(x, w, *, reduce_tp=False):
+    out = x @ w
+    if reduce_tp:
+        out = jax.lax.psum(out, "model")  # iteralint: disable=tp-boundary
+    return out
+
+
+# iteralint: tp-root
+def serving_step(x, params):
+    h = attention_block(x, params)
+    return mlp_block(h, params)
+
+
+def attention_block(x, params):
+    # boundary projection missing reduce_tp=True: shards stay partial
+    return apply_linear(x, params["wo"])
+
+
+def mlp_block(x, params):
+    h = apply_linear(x, params["up"])
+    # raw collective instead of the sanctioned wrapper, outside shard_map
+    h = jax.lax.psum(h, "model")
+    return apply_linear(h, params["down"])
+
+
+def double_reduce(x, params):
+    # two all-reduces in one boundary function
+    a = apply_linear(x, params["wo"], reduce_tp=True)
+    b = apply_linear(a, params["down"], reduce_tp=True)
+    return b

@@ -1,0 +1,28 @@
+"""GOOD: exactly one reduce_tp per boundary, collectives stay caged."""
+
+
+def apply_linear(x, w, *, reduce_tp=False):
+    out = x @ w
+    if reduce_tp:
+        out = psum_tp(out)
+    return out
+
+
+def psum_tp(x):
+    return x
+
+
+# iteralint: tp-root
+def serving_step(x, params):
+    h = attention_block(x, params)
+    return mlp_block(h, params)
+
+
+def attention_block(x, params):
+    # the wo projection carries the block's single all-reduce
+    return apply_linear(x, params["wo"], reduce_tp=True)
+
+
+def mlp_block(x, params):
+    h = apply_linear(x, params["up"])
+    return apply_linear(h, params["down"], reduce_tp=True)

@@ -1,0 +1,24 @@
+"""BAD: host control flow and syncs on traced values inside jit."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def branchy(x):
+    s = jnp.sum(x)
+    if s > 0:                       # traced `if`
+        s = s + 1
+    while s < 10:                   # traced `while`
+        s = s * 2
+    assert s != 0                   # traced `assert`
+    return s
+
+
+@jax.jit
+def syncy(x):
+    y = jnp.abs(x)
+    n = len(y)                      # len() of traced array
+    v = float(jnp.max(y))           # float() host sync
+    host = np.asarray(y)            # numpy materialization
+    return y.item() + n + v + host.sum()

@@ -1,0 +1,26 @@
+"""GOOD: static branching, shape reads, device-side reductions."""
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@partial(jax.jit, static_argnames=("width",))
+def sanctioned(x, width=4):
+    # branching on a declared-static parameter is fine
+    if width:
+        x = x[:, :width]
+    # .shape is static under tracing
+    assert x.shape[-1] <= 8
+    b = x.shape[0]
+    s = jnp.sum(x)
+    # data-dependent select stays on device
+    return jnp.where(s > 0, s, -s) / b
+
+
+def host_wrapper(x):
+    # host code may branch on values freely — it is not traced
+    y = sanctioned(x)
+    if y.shape[0] > 1:
+        return y
+    return y[None]

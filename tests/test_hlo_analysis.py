@@ -2,7 +2,6 @@
 and with XLA's cost_analysis on loop-free programs."""
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.hw.hlo_analysis import HloModule, analyze
 

@@ -1,0 +1,223 @@
+"""iteralint test suite: per-rule fixtures, golden CLI output, baseline
+gating, suppression syntax, and the repo-tree gate itself.
+
+The fixtures under tests/fixtures/lint/ are parse-only — they are never
+imported, so they may reference jax APIs freely and deliberately
+violate every rule.
+"""
+import json
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+FIXTURES = REPO / "tests" / "fixtures" / "lint"
+sys.path.insert(0, str(REPO))
+
+from tools.iteralint import baseline as baseline_mod          # noqa: E402
+from tools.iteralint.analyzers import ALL, BY_NAME            # noqa: E402
+from tools.iteralint.framework import (Project,               # noqa: E402
+                                       run_analyzers)
+
+RULES = [a.name for a in ALL]
+FIXTURE_STEM = {
+    "trace-safety": "trace_safety",
+    "recompile-hazard": "recompile",
+    "pallas-contract": "pallas",
+    "pytree-aux": "pytree_aux",
+    "tp-boundary": "tp_boundary",
+    "host-purity": "host_purity",
+}
+
+
+def lint_paths(paths, rules=None):
+    project = Project(REPO, [pathlib.Path(p) for p in paths],
+                      use_default_excludes=False)
+    analyzers = [BY_NAME[r] for r in rules] if rules else ALL
+    return run_analyzers(project, analyzers)
+
+
+def run_cli(*args, cwd=REPO):
+    return subprocess.run(
+        [sys.executable, "-m", "tools.iteralint", *args],
+        cwd=cwd, capture_output=True, text=True)
+
+
+# ---------------------------------------------------------------------------
+# per-rule fixtures
+
+@pytest.mark.parametrize("rule", RULES)
+def test_bad_fixture_fires(rule):
+    bad = FIXTURES / f"{FIXTURE_STEM[rule]}_bad.py"
+    findings = lint_paths([bad])
+    hits = [f for f in findings if f.rule == rule]
+    assert hits, f"{bad.name} produced no {rule} findings"
+    for f in hits:
+        assert f.path.endswith(f"{FIXTURE_STEM[rule]}_bad.py")
+        assert f.line > 0
+
+
+@pytest.mark.parametrize("rule", RULES)
+def test_good_fixture_is_clean(rule):
+    good = FIXTURES / f"{FIXTURE_STEM[rule]}_good.py"
+    findings = lint_paths([good])
+    hits = [f for f in findings if f.rule == rule]
+    assert not hits, \
+        f"{good.name} false positives: {[f.render() for f in hits]}"
+
+
+def test_good_fixtures_clean_under_all_rules():
+    goods = sorted(FIXTURES.glob("*_good.py"))
+    assert len(goods) == len(RULES)
+    findings = lint_paths(goods)
+    assert not findings, [f.render() for f in findings]
+
+
+# ---------------------------------------------------------------------------
+# rule-specific behaviors worth pinning beyond fire/no-fire
+
+def test_trace_safety_findings_name_the_construct():
+    findings = lint_paths([FIXTURES / "trace_safety_bad.py"],
+                          rules=["trace-safety"])
+    blob = " ".join(f.message for f in findings)
+    for needle in ("`if`", "`while`", "`assert`", "len()", ".item()",
+                   "numpy call"):
+        assert needle in blob, f"missing {needle!r} finding"
+
+
+def test_pallas_contract_covers_each_check():
+    findings = lint_paths([FIXTURES / "pallas_bad.py"],
+                          rules=["pallas-contract"])
+    blob = " ".join(f.message for f in findings)
+    for needle in ("index map takes", "returns 3 coordinates",
+                   "never asserts `m % bm == 0`", "bfloat16",
+                   "packed flag `w_packed`", "2 in_specs"):
+        assert needle in blob, f"missing {needle!r} finding"
+
+
+def test_tp_boundary_counts_and_reachability():
+    findings = lint_paths([FIXTURES / "tp_boundary_bad.py"],
+                          rules=["tp-boundary"])
+    msgs = [f.message for f in findings]
+    assert any("`wo` boundary" in m for m in msgs)
+    assert any("`down` boundary" in m for m in msgs)
+    assert any("2 reduce_tp=True call sites" in m for m in msgs)
+    assert any("raw collective" in m for m in msgs)
+    # the suppressed psum inside apply_linear stays suppressed
+    assert not any(f.line == 8 for f in findings)
+
+
+def test_host_purity_flags_lazy_imports_in_pure_modules():
+    findings = lint_paths([FIXTURES / "host_purity_bad.py"],
+                          rules=["host-purity"])
+    assert any("imports `jax.numpy` — this path must stay host-pure"
+               in f.message for f in findings)
+
+
+def test_suppression_comment_silences_rule(tmp_path):
+    src = FIXTURES / "pytree_aux_bad.py"
+    patched = src.read_text().replace(
+        "    lambda q: ((",
+        "    # iteralint: disable=pytree-aux\n    lambda q: ((")
+    f = tmp_path / "pytree_aux_bad.py"
+    f.write_text(patched)
+    findings = lint_paths([f], rules=["pytree-aux"])
+    assert not findings, [x.render() for x in findings]
+
+
+# ---------------------------------------------------------------------------
+# the repo tree itself must be clean (the CI gate, in-process)
+
+def test_repo_tree_has_no_new_findings():
+    project = Project(REPO, [REPO / "src", REPO / "tests"])
+    findings = run_analyzers(project, ALL)
+    base_keys, base_errors = baseline_mod.load()
+    assert not base_errors, base_errors
+    new = [f for f in findings if f.key not in base_keys]
+    assert not new, "new lint findings:\n" + "\n".join(
+        f.render() for f in new)
+
+
+def test_scheduler_import_path_is_jax_free():
+    code = ("import sys; "
+            "import repro.runtime.scheduler, repro.runtime.elastic, "
+            "repro.runtime.kvblocks; "
+            "sys.exit(1 if 'jax' in sys.modules else 0)")
+    r = subprocess.run([sys.executable, "-c", code], cwd=REPO,
+                       env={"PYTHONPATH": str(REPO / "src"),
+                            "PATH": "/usr/bin:/bin"},
+                       capture_output=True, text=True)
+    assert r.returncode == 0, \
+        f"scheduler import pulled in jax\n{r.stderr}"
+
+
+# ---------------------------------------------------------------------------
+# CLI: golden output, exit codes, baseline modes
+
+def test_cli_golden_json_on_fixtures():
+    r = run_cli("tests/fixtures/lint", "--no-default-excludes", "--json")
+    assert r.returncode == 1, r.stdout + r.stderr
+    got = json.loads(r.stdout)
+    golden = json.loads((FIXTURES / "expected.json").read_text())
+    assert got["findings"] == golden["findings"], (
+        "fixture findings drifted from tests/fixtures/lint/expected.json"
+        " — regenerate with: python -m tools.iteralint tests/fixtures/lint"
+        " --no-default-excludes --json > tests/fixtures/lint/expected.json")
+    assert got["summary"]["new"] == golden["summary"]["new"]
+
+
+def test_cli_clean_tree_exits_zero():
+    r = run_cli("src", "tests", "--fail-on-new")
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "0 new" in r.stdout
+
+
+def test_cli_planted_violation_fails(tmp_path):
+    plant = tmp_path / "scratch.py"
+    plant.write_text(
+        "import jax\nimport jax.numpy as jnp\n\n"
+        "@jax.jit\n"
+        "def f(x):\n"
+        "    s = jnp.sum(x)\n"
+        "    if s > 0:\n"
+        "        s = s + 1\n"
+        "    return s\n")
+    r = run_cli(str(plant), "--fail-on-new")
+    assert r.returncode == 1
+    assert "[trace-safety]" in r.stdout
+    assert "scratch.py:7" in r.stdout
+
+
+def test_cli_baseline_tolerates_known_findings(tmp_path):
+    plant = tmp_path / "scratch.py"
+    plant.write_text(
+        "import jax\nimport jax.numpy as jnp\n"
+        "f = jax.jit(lambda x, n: jnp.zeros((n,)) + x)\n")
+    r = run_cli(str(plant), "--fail-on-new")
+    assert r.returncode == 1
+    # baseline it (with a justification), and the gate opens
+    base = tmp_path / "baseline.json"
+    r = run_cli(str(plant), "--update-baseline", "--baseline", str(base))
+    assert r.returncode == 0
+    data = json.loads(base.read_text())
+    for e in data["entries"]:
+        e["justification"] = "demo: accepted retrace"
+    base.write_text(json.dumps(data))
+    r = run_cli(str(plant), "--fail-on-new", "--baseline", str(base))
+    assert r.returncode == 0, r.stdout + r.stderr
+    # but an entry without justification is itself an error
+    for e in data["entries"]:
+        e["justification"] = ""
+    base.write_text(json.dumps(data))
+    r = run_cli(str(plant), "--fail-on-new", "--baseline", str(base))
+    assert r.returncode == 1
+    assert "no justification" in r.stderr
+
+
+def test_cli_list_rules():
+    r = run_cli("--list-rules")
+    assert r.returncode == 0
+    for rule in RULES:
+        assert rule in r.stdout

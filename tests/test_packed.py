@@ -3,8 +3,6 @@ storage (halved device bytes, asserted against `.nbytes`), packed and
 carrier engines generate identical tokens through `engine.serve`, the
 honest accounting reports what is actually resident, and checkpoints
 round-trip the packed layout."""
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -31,7 +31,7 @@ import jax
 import numpy as np
 import pytest
 
-from repro.api import (CompressionPlan, DraftSpec, InferenceEngine,
+from repro.api import (DraftSpec, InferenceEngine,
                        Request, SamplingParams)
 from repro.configs import get_config
 from repro.core.compress import CompressionConfig

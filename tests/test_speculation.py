@@ -20,6 +20,8 @@ import dataclasses
 import json
 import os
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -36,9 +38,6 @@ from repro.runtime import speculation
 from repro.runtime.kvblocks import BlockPool, blocks_for_positions
 from repro.runtime.scheduler import Scheduler, Sequence
 from repro.runtime.scheduler import Request as SchedRequest
-
-import jax
-import jax.numpy as jnp
 
 PLAN = CompressionConfig(method="itera", weight_wl=8, rank_fraction=0.75)
 SPEC = DraftSpec(k=3, rank_fraction=0.7)

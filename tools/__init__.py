@@ -1,0 +1,1 @@
+"""Repo tooling namespace (perf_compare, check_links, iteralint)."""

@@ -1,0 +1,13 @@
+"""iteralint: repo-aware static analysis for the ITERA serving stack.
+
+Six analyzers over a shared `ast` framework enforce the invariants the
+runtime tests only catch after the fact: trace-safety, recompile
+hazards, Pallas launch contracts, pytree aux staticness, the
+one-all-reduce TP boundary, and scheduler host-purity. Stdlib only —
+the linter runs where jax cannot.
+
+    python -m tools.iteralint src tests --fail-on-new
+
+See docs/static_analysis.md for the rule catalog.
+"""
+__version__ = "1.0"

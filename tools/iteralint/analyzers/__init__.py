@@ -1,0 +1,19 @@
+"""The iteralint rule set. Each analyzer is independent; `ALL` is the
+registry the CLI iterates (rule name -> analyzer instance)."""
+from tools.iteralint.analyzers.host_purity import HostPurityAnalyzer
+from tools.iteralint.analyzers.pallas_contract import PallasContractAnalyzer
+from tools.iteralint.analyzers.pytree_aux import PytreeAuxAnalyzer
+from tools.iteralint.analyzers.recompile import RecompileHazardAnalyzer
+from tools.iteralint.analyzers.tp_boundary import TPBoundaryAnalyzer
+from tools.iteralint.analyzers.trace_safety import TraceSafetyAnalyzer
+
+ALL = [
+    TraceSafetyAnalyzer(),
+    RecompileHazardAnalyzer(),
+    PallasContractAnalyzer(),
+    PytreeAuxAnalyzer(),
+    TPBoundaryAnalyzer(),
+    HostPurityAnalyzer(),
+]
+
+BY_NAME = {a.name: a for a in ALL}

@@ -1,0 +1,188 @@
+"""host-purity: the scheduler tier must not touch jax.
+
+Admission / eviction / preemption policy runs on the host between every
+engine step; importing jax there drags device runtime initialization
+into scheduler unit tests and tempts device ops into the hot loop. Three
+strictness levels:
+
+  * **pure** modules (`runtime/scheduler.py`, `runtime/fault.py`, and
+    any file marked `# iteralint: host-pure-module`): no jax import or
+    use anywhere — not even function-local — and no top-level import of
+    a first-party module that transitively imports jax at its top level;
+  * **boundary** modules (`runtime/elastic.py`): the mesh-surgery half
+    legitimately needs jax, but only lazily — module-level jax (or
+    transitively-jax first-party) imports are flagged, function-local
+    imports are fine, so `from repro.runtime.elastic import
+    preemption_victims` stays jax-free;
+  * **host symbols** of mixed modules (`runtime/kvblocks.py`): the
+    allocator / digest half (BlockPool, blocks_needed,
+    blocks_for_positions, prefix_digests, check_paged_support) must not
+    reference jax names; the pool-array half may, via local imports —
+    module level is held to boundary rules.
+
+The transitive check is computed over the parsed project itself, so a
+future `import repro.checkpoint.ckpt` at the top of the scheduler is
+caught even though the jax import is two hops away.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.iteralint.framework import Analyzer, import_table
+
+PURE_MODULES = {"repro.runtime.scheduler", "repro.runtime.fault"}
+BOUNDARY_MODULES = {"repro.runtime.elastic", "repro.runtime.kvblocks"}
+HOST_SYMBOLS = {
+    "repro.runtime.kvblocks": {
+        "BlockPool", "blocks_needed", "blocks_for_positions",
+        "prefix_digests", "check_paged_support",
+    },
+}
+
+
+def _toplevel_imports(tree):
+    """(module, node) pairs imported at module scope (incl. try blocks)."""
+    out = []
+    stmts = list(tree.body)
+    i = 0
+    while i < len(stmts):
+        node = stmts[i]
+        i += 1
+        if isinstance(node, ast.Try):
+            stmts.extend(node.body + node.orelse + node.finalbody)
+            for h in node.handlers:
+                stmts.extend(h.body)
+        elif isinstance(node, ast.If):
+            # skip `if TYPE_CHECKING:` guards; anything else descends
+            t = node.test
+            name = t.id if isinstance(t, ast.Name) else (
+                t.attr if isinstance(t, ast.Attribute) else None)
+            if name != "TYPE_CHECKING":
+                stmts.extend(node.body + node.orelse)
+        elif isinstance(node, ast.Import):
+            out.extend((a.name, node) for a in node.names)
+        elif isinstance(node, ast.ImportFrom) and node.module \
+                and node.level == 0:
+            out.append((node.module, node))
+            # `from pkg import sub` may bind a submodule: record the
+            # qualified name too so transitive deps resolve through it.
+            out.extend((f"{node.module}.{a.name}", node)
+                       for a in node.names if a.name != "*")
+    return out
+
+
+class HostPurityAnalyzer(Analyzer):
+
+    name = "host-purity"
+    description = ("no jax imports or device ops in host-side scheduler "
+                   "modules (direct or transitive)")
+
+    def run(self, project):
+        findings = []
+        jaxful = self._transitively_jaxful(project)
+        for sf in project.analysis_files:
+            pure = sf.module in PURE_MODULES \
+                or "host-pure-module" in sf.file_markers
+            boundary = sf.module in BOUNDARY_MODULES
+            if pure or boundary:
+                self._check_toplevel(sf, jaxful, findings)
+            if pure:
+                top = {id(node) for _, node in _toplevel_imports(sf.tree)}
+                self._check_usage(sf, sf.tree, "module", findings, top)
+            for sym in HOST_SYMBOLS.get(sf.module, ()):
+                node = self._find_symbol(sf.tree, sym)
+                if node is not None:
+                    self._check_usage(sf, node, f"host symbol `{sym}`",
+                                      findings)
+        return findings
+
+    # -- transitive first-party jax imports --------------------------------
+
+    def _transitively_jaxful(self, project) -> set[str]:
+        deps: dict[str, set[str]] = {}
+        direct: set[str] = set()
+        for mod, sf in project.by_module.items():
+            d = set()
+            for target, _ in _toplevel_imports(sf.tree):
+                if target == "jax" or target.startswith("jax."):
+                    direct.add(mod)
+                elif target.startswith("repro."):
+                    # `from repro.x import y` may name a symbol; fall back
+                    # to the longest known module prefix.
+                    t = target
+                    while t and t not in project.by_module:
+                        t = t.rpartition(".")[0]
+                    if t:
+                        d.add(t)
+            deps[mod] = d
+        jaxful = set(direct)
+        changed = True
+        while changed:
+            changed = False
+            for mod, d in deps.items():
+                if mod not in jaxful and d & jaxful:
+                    jaxful.add(mod)
+                    changed = True
+        return jaxful
+
+    # -- checks ------------------------------------------------------------
+
+    def _check_toplevel(self, sf, jaxful, findings):
+        seen = set()
+        for target, node in _toplevel_imports(sf.tree):
+            if target == "jax" or target.startswith("jax."):
+                if (id(node), "jax") in seen:
+                    continue
+                seen.add((id(node), "jax"))
+                findings.append(self.finding(
+                    sf, node,
+                    f"host-side module imports `{target}` at module "
+                    "level — import lazily inside the device-touching "
+                    "function so the scheduler path stays jax-free"))
+            elif target.startswith("repro."):
+                t = target
+                while t and t not in jaxful:
+                    t = t.rpartition(".")[0]
+                if t and (id(node), t) not in seen:
+                    seen.add((id(node), t))
+                    findings.append(self.finding(
+                        sf, node,
+                        f"host-side module imports `{t}`, which "
+                        "transitively imports jax at module level"))
+
+    def _check_usage(self, sf, scope, where, findings, skip=frozenset()):
+        table = getattr(sf, "imports", None)
+        if table is None:
+            table = sf.imports = import_table(sf.tree)
+        jax_aliases = {a for a, t in table.items()
+                       if t == "jax" or t.startswith("jax.")}
+        seen: set[str] = set()
+        for node in ast.walk(scope):
+            if isinstance(node, (ast.Import, ast.ImportFrom)) \
+                    and id(node) not in skip:
+                mods = [a.name for a in node.names] \
+                    if isinstance(node, ast.Import) \
+                    else [node.module or ""]
+                for m in mods:
+                    if m == "jax" or m.startswith("jax."):
+                        findings.append(self.finding(
+                            sf, node,
+                            f"{where} imports `{m}` — this path must "
+                            "stay host-pure"))
+            elif isinstance(node, ast.Name) and node.id in jax_aliases \
+                    and node.id not in seen:
+                seen.add(node.id)
+                findings.append(self.finding(
+                    sf, node,
+                    f"{where} references `{node.id}` "
+                    f"(= {table[node.id]}) — this path must stay "
+                    "host-pure"))
+        return findings
+
+    @staticmethod
+    def _find_symbol(tree, name):
+        for node in tree.body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)) and node.name == name:
+                return node
+        return None

@@ -1,0 +1,289 @@
+"""pallas-contract: static checks on every `pl.pallas_call` site.
+
+The kernels guard their launch contracts with runtime asserts
+(`choose_blocks` / `packed_pad_ok` keep them true in production); this
+analyzer proves the guards are present and the specs are internally
+consistent without running anything:
+
+  * index-map arity must equal grid rank (+ num_scalar_prefetch for
+    PrefetchScalarGridSpec index maps, which receive the prefetched
+    scalar refs first);
+  * index-map return tuple length must equal the BlockSpec block-shape
+    rank;
+  * accumulator scratch must not be a sub-f32 float dtype (f32 and i32
+    are the MXU accumulator types; bf16/f16 scratch silently loses
+    mantissa across the K loop);
+  * every `dim // factor` appearing in the grid needs a matching
+    `dim % factor == 0` assert in the enclosing function (BlockSpec
+    shape divisibility against the declared grid);
+  * a `*_packed` parameter (packed-nibble W4 path) requires a `% 256`
+    lane-alignment assert mentioning it (`bn % 256`, `r % 256`);
+  * when the pallas_call result is invoked inline, the positional
+    operand count must match len(in_specs).
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.iteralint.framework import Analyzer, dotted_name
+
+BAD_SCRATCH_DTYPES = {"float16", "bfloat16", "float8_e4m3fn",
+                      "float8_e5m2"}
+
+
+def _ends_with(node, suffix):
+    dn = dotted_name(node)
+    return dn is not None and dn.split(".")[-1] == suffix
+
+
+def _kw(call, name):
+    for k in call.keywords:
+        if k.arg == name:
+            return k.value
+    return None
+
+
+class _Site:
+    """One pallas_call plus its resolved grid/specs/prefetch."""
+
+    def __init__(self, call, enclosing_fn):
+        self.call = call
+        self.fn = enclosing_fn
+        self.prefetch = 0
+        grid = _kw(call, "grid")
+        self.in_specs = _kw(call, "in_specs")
+        self.out_specs = _kw(call, "out_specs")
+        self.scratch = _kw(call, "scratch_shapes")
+        spec = _kw(call, "grid_spec")
+        if isinstance(spec, ast.Call):
+            grid = _kw(spec, "grid") or grid
+            self.in_specs = _kw(spec, "in_specs") or self.in_specs
+            self.out_specs = _kw(spec, "out_specs") or self.out_specs
+            self.scratch = _kw(spec, "scratch_shapes") or self.scratch
+            npf = _kw(spec, "num_scalar_prefetch")
+            if isinstance(npf, ast.Constant) and isinstance(npf.value, int):
+                self.prefetch = npf.value
+        self.grid = grid
+
+    def grid_rank(self):
+        if isinstance(self.grid, (ast.Tuple, ast.List)):
+            return len(self.grid.elts)
+        return None
+
+    def blockspecs(self):
+        out = []
+        for container in (self.in_specs, self.out_specs):
+            if container is None:
+                continue
+            elts = container.elts if isinstance(
+                container, (ast.Tuple, ast.List)) else [container]
+            for e in elts:
+                if isinstance(e, ast.Call) and _ends_with(e.func,
+                                                          "BlockSpec"):
+                    shape = e.args[0] if e.args else _kw(e, "block_shape")
+                    imap = (e.args[1] if len(e.args) > 1
+                            else _kw(e, "index_map"))
+                    out.append((e, shape, imap))
+        return out
+
+
+def _local_defs(fn):
+    return {n.name: n for n in ast.walk(fn)
+            if isinstance(n, ast.FunctionDef)}
+
+
+def _imap_signature(imap, fn):
+    """(arity, return tuple length) of an index map, best effort."""
+    target = imap
+    if isinstance(imap, ast.Name) and fn is not None:
+        target = _local_defs(fn).get(imap.id)
+    if isinstance(target, ast.Lambda):
+        arity = len(target.args.posonlyargs) + len(target.args.args)
+        body = target.body
+        ret = len(body.elts) if isinstance(body, ast.Tuple) else 1
+        return arity, ret
+    if isinstance(target, ast.FunctionDef):
+        arity = len(target.args.posonlyargs) + len(target.args.args)
+        rets = [n.value for n in ast.walk(target)
+                if isinstance(n, ast.Return) and n.value is not None]
+        ret = None
+        if rets:
+            ret = (len(rets[0].elts)
+                   if isinstance(rets[0], ast.Tuple) else 1)
+        return arity, ret
+    return None, None
+
+
+def _assign_map(fn):
+    out = {}
+    if fn is None:
+        return out
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1:
+            tgt, val = node.targets[0], node.value
+            if isinstance(tgt, ast.Name):
+                out[tgt.id] = val
+            elif isinstance(tgt, ast.Tuple) and isinstance(val, ast.Tuple) \
+                    and len(tgt.elts) == len(val.elts):
+                for t, v in zip(tgt.elts, val.elts):
+                    if isinstance(t, ast.Name):
+                        out[t.id] = v
+    return out
+
+
+def _mod_facts(fn):
+    """(set of (a, b) `a % b` name pairs, set of names asserted % 256)."""
+    pairs, mod256 = set(), set()
+    if fn is None:
+        return pairs, mod256
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Assert):
+            continue
+        names = {n.id for n in ast.walk(node.test)
+                 if isinstance(n, ast.Name)}
+        for b in ast.walk(node.test):
+            if isinstance(b, ast.BinOp) and isinstance(b.op, ast.Mod):
+                if isinstance(b.left, ast.Name) \
+                        and isinstance(b.right, ast.Name):
+                    pairs.add((b.left.id, b.right.id))
+                if isinstance(b.right, ast.Constant) \
+                        and b.right.value == 256:
+                    mod256 |= names
+    return pairs, mod256
+
+
+class PallasContractAnalyzer(Analyzer):
+
+    name = "pallas-contract"
+    description = ("BlockSpec/grid consistency, scratch dtypes, "
+                   "divisibility and packed-axis guards at pallas_call "
+                   "sites")
+
+    def run(self, project):
+        findings = []
+        for sf in project.analysis_files:
+            fn_stack = []
+
+            def walk(node):
+                is_fn = isinstance(node, (ast.FunctionDef,
+                                          ast.AsyncFunctionDef))
+                if is_fn:
+                    fn_stack.append(node)
+                for child in ast.iter_child_nodes(node):
+                    if isinstance(child, ast.Call) and _ends_with(
+                            child.func, "pallas_call"):
+                        fn = fn_stack[-1] if fn_stack else None
+                        self._check_site(sf, _Site(child, fn), findings)
+                    if isinstance(child, ast.Call) and isinstance(
+                            child.func, ast.Call) and _ends_with(
+                            child.func.func, "pallas_call"):
+                        self._check_operands(sf, child, findings)
+                    walk(child)
+                if is_fn:
+                    fn_stack.pop()
+
+            walk(sf.tree)
+        return findings
+
+    def _check_site(self, sf, site, findings):
+        rank = site.grid_rank()
+        specs = site.blockspecs()
+        for call, shape, imap in specs:
+            arity, ret = _imap_signature(imap, site.fn)
+            if rank is not None and arity is not None:
+                want = rank + site.prefetch
+                if arity != want:
+                    expect = (f"rank {rank} + {site.prefetch} "
+                              f"scalar-prefetch refs = {want}"
+                              if site.prefetch else f"rank {rank}")
+                    findings.append(self.finding(
+                        sf, call,
+                        f"BlockSpec index map takes {arity} args but the "
+                        f"grid has {expect}"))
+            if ret is not None and isinstance(shape, (ast.Tuple, ast.List)):
+                if ret != len(shape.elts):
+                    findings.append(self.finding(
+                        sf, call,
+                        f"BlockSpec index map returns {ret} coordinates "
+                        f"for a rank-{len(shape.elts)} block shape"))
+        self._check_scratch(sf, site, findings)
+        self._check_divisibility(sf, site, findings)
+        self._check_packed(sf, site, findings)
+
+    def _check_scratch(self, sf, site, findings):
+        if site.scratch is None:
+            return
+        elts = site.scratch.elts if isinstance(
+            site.scratch, (ast.Tuple, ast.List)) else [site.scratch]
+        for e in elts:
+            if not (isinstance(e, ast.Call) and _ends_with(e.func, "VMEM")):
+                continue
+            for arg in e.args[1:] + [k.value for k in e.keywords]:
+                dn = dotted_name(arg)
+                if dn and dn.split(".")[-1] in BAD_SCRATCH_DTYPES:
+                    findings.append(self.finding(
+                        sf, e,
+                        f"accumulator scratch declared {dn.split('.')[-1]}"
+                        " — accumulate in f32/i32 and cast once on the "
+                        "final K step"))
+
+    def _check_divisibility(self, sf, site, findings):
+        if not isinstance(site.grid, (ast.Tuple, ast.List)):
+            return
+        assigns = _assign_map(site.fn)
+        pairs, _ = _mod_facts(site.fn)
+
+        def div_pairs(expr, depth=0):
+            if depth > 3:
+                return
+            if isinstance(expr, ast.Name) and expr.id in assigns:
+                yield from div_pairs(assigns[expr.id], depth + 1)
+            elif isinstance(expr, ast.BinOp):
+                if isinstance(expr.op, ast.FloorDiv) and isinstance(
+                        expr.left, ast.Name) and isinstance(
+                        expr.right, ast.Name):
+                    yield expr.left.id, expr.right.id
+                else:
+                    yield from div_pairs(expr.left, depth + 1)
+                    yield from div_pairs(expr.right, depth + 1)
+
+        for elt in site.grid.elts:
+            for dim, factor in div_pairs(elt):
+                if (dim, factor) not in pairs:
+                    findings.append(self.finding(
+                        sf, site.call,
+                        f"grid divides `{dim} // {factor}` but the kernel "
+                        f"wrapper never asserts `{dim} % {factor} == 0` — "
+                        "a ragged tail block reads out of bounds"))
+
+    def _check_packed(self, sf, site, findings):
+        if site.fn is None:
+            return
+        params = [p.arg for p in site.fn.args.posonlyargs
+                  + site.fn.args.args + site.fn.args.kwonlyargs]
+        packed = [p for p in params if "packed" in p]
+        if not packed:
+            return
+        _, mod256 = _mod_facts(site.fn)
+        for p in packed:
+            if p not in mod256:
+                findings.append(self.finding(
+                    sf, site.fn,
+                    f"kernel wrapper takes packed flag `{p}` but has no "
+                    "`% 256` lane-alignment assert mentioning it (packed "
+                    "int4 pairs two values per int8 lane; the packed "
+                    "block axis must stay a multiple of 256)"))
+
+    def _check_operands(self, sf, outer, findings):
+        if any(isinstance(a, ast.Starred) for a in outer.args):
+            return
+        site = _Site(outer.func, None)
+        if site.in_specs is None or not isinstance(
+                site.in_specs, (ast.Tuple, ast.List)):
+            return
+        n_specs = len(site.in_specs.elts)
+        if len(outer.args) != n_specs:
+            findings.append(self.finding(
+                sf, outer,
+                f"pallas_call declares {n_specs} in_specs but is invoked "
+                f"with {len(outer.args)} positional operands"))

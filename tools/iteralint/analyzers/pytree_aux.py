@@ -1,0 +1,127 @@
+"""pytree-aux: registered pytrees must keep aux_data static & hashable.
+
+jit caches key on the aux treedef: an array in aux defeats tracing
+(every step is a cache miss — or worse, a stale constant baked into the
+trace), and an unhashable aux (list/dict) raises at dispatch. The
+serving stack's QuantizedTensor contract is exactly "arrays in
+children, static ints/bools in aux".
+
+Checked at every `register_pytree_node` / `register_pytree_with_keys`
+call where the flatten function is visible in the same file:
+
+  * aux elements that are attribute reads of the registered class are
+    resolved against the class's annotations — Array/ndarray-annotated
+    fields in aux are flagged;
+  * aux elements that are list/dict/set literals (or list()/dict()/
+    set() calls) are flagged as unhashable.
+"""
+from __future__ import annotations
+
+import ast
+import re
+
+from tools.iteralint.framework import Analyzer, dotted_name
+
+REGISTER_FNS = {"register_pytree_node", "register_pytree_with_keys",
+                "register_pytree_node_class",
+                "register_pytree_with_keys_class"}
+ARRAY_ANN_RE = re.compile(
+    r"\b(jax\.Array|Array|jnp\.ndarray|np\.ndarray|ndarray|ArrayLike)\b")
+UNHASHABLE_ANN_RE = re.compile(r"\b(list|dict|set|List|Dict|Set)\b")
+UNHASHABLE_CALLS = {"list", "dict", "set", "bytearray"}
+
+
+def _class_annotations(tree, cls_name):
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ClassDef) and node.name == cls_name:
+            anns = {}
+            for stmt in node.body:
+                if isinstance(stmt, ast.AnnAssign) and isinstance(
+                        stmt.target, ast.Name):
+                    anns[stmt.target.id] = ast.unparse(stmt.annotation)
+            return anns
+    return {}
+
+
+def _flatten_aux_expr(flatten):
+    """The aux expression of a flatten callable: second element of the
+    returned pair."""
+    if isinstance(flatten, ast.Lambda):
+        body = flatten.body
+        if isinstance(body, ast.Tuple) and len(body.elts) == 2:
+            return body.elts[1]
+    if isinstance(flatten, ast.FunctionDef):
+        for node in ast.walk(flatten):
+            if isinstance(node, ast.Return) and isinstance(
+                    node.value, ast.Tuple) and len(node.value.elts) == 2:
+                return node.value.elts[1]
+    return None
+
+
+class PytreeAuxAnalyzer(Analyzer):
+
+    name = "pytree-aux"
+    description = ("registered pytrees must not carry arrays or "
+                   "unhashable values in aux_data")
+
+    def run(self, project):
+        findings = []
+        for sf in project.analysis_files:
+            local_defs = {n.name: n for n in ast.walk(sf.tree)
+                          if isinstance(n, ast.FunctionDef)}
+            for call in ast.walk(sf.tree):
+                if not isinstance(call, ast.Call):
+                    continue
+                dn = dotted_name(call.func)
+                if dn is None or dn.split(".")[-1] not in REGISTER_FNS:
+                    continue
+                if len(call.args) < 2:
+                    continue
+                cls = dotted_name(call.args[0]) or "?"
+                flatten = call.args[1]
+                if isinstance(flatten, ast.Name):
+                    flatten = local_defs.get(flatten.id)
+                aux = _flatten_aux_expr(flatten)
+                if aux is None:
+                    continue
+                self._check_aux(sf, call, cls, aux, findings)
+        return findings
+
+    def _check_aux(self, sf, call, cls, aux, findings):
+        anns = _class_annotations(sf.tree, cls.split(".")[-1])
+        elts = aux.elts if isinstance(aux, (ast.Tuple, ast.List)) else [aux]
+        for e in elts:
+            if isinstance(e, (ast.List, ast.Dict, ast.Set)):
+                findings.append(self.finding(
+                    sf, e,
+                    f"pytree `{cls}` aux_data contains an unhashable "
+                    "literal — aux must be hashable (jit cache key)"))
+                continue
+            if isinstance(e, ast.Call):
+                fdn = dotted_name(e.func)
+                if fdn and fdn.split(".")[-1] in UNHASHABLE_CALLS:
+                    findings.append(self.finding(
+                        sf, e,
+                        f"pytree `{cls}` aux_data calls "
+                        f"`{fdn.split('.')[-1]}()` — aux must be hashable"))
+                continue
+            if isinstance(e, ast.Attribute):
+                ann = anns.get(e.attr)
+                if ann and ARRAY_ANN_RE.search(ann):
+                    findings.append(self.finding(
+                        sf, e,
+                        f"pytree `{cls}` puts array-annotated field "
+                        f"`{e.attr}: {ann}` in aux_data — arrays belong "
+                        "in children; aux is a static jit cache key"))
+                elif ann and UNHASHABLE_ANN_RE.search(ann):
+                    findings.append(self.finding(
+                        sf, e,
+                        f"pytree `{cls}` puts unhashable-annotated field "
+                        f"`{e.attr}: {ann}` in aux_data — aux must be "
+                        "hashable (jit cache key)"))
+        # aux as a whole being a list literal (not tuple) is unhashable
+        if isinstance(aux, ast.List):
+            findings.append(self.finding(
+                sf, aux,
+                f"pytree `{cls}` aux_data is a list literal — use a "
+                "tuple (aux must be hashable)"))

@@ -1,0 +1,148 @@
+"""recompile-hazard: jit signatures that silently retrace.
+
+Two sub-rules:
+
+  1. A jit-wrapped function whose parameter is used in a *static-only*
+     position — `range()` bound, shape tuple of jnp.zeros/ones/full/
+     reshape/broadcast_to/arange, bare `if`/`while` test, f-string —
+     must have that parameter covered by static_argnums /
+     static_argnames. Passing it traced fails; passing it as a Python
+     scalar retraces on every new value.
+
+  2. A call to a known jit-bound callable inside a `for`/`while` loop
+     that passes a freshly computed Python scalar (`len(...)`,
+     `int(...)`, `x.shape[i]`) as an argument: every distinct value is
+     a new trace. The serving stack's contract (PR 3) is to bucket such
+     scalars (pow2) or hoist them to static config before the loop.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.iteralint.framework import Analyzer, dotted_name
+
+SHAPE_FNS = {"zeros", "ones", "full", "empty", "arange", "reshape",
+             "broadcast_to", "tile", "eye", "linspace"}
+
+
+def _param_names(fn) -> list[str]:
+    a = fn.args
+    names = [p.arg for p in a.posonlyargs + a.args]
+    return names
+
+
+def _static_positions(fn, param: str):
+    """Yield nodes where `param` appears in a static-only position."""
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call):
+            f = node.func
+            fname = f.id if isinstance(f, ast.Name) else (
+                f.attr if isinstance(f, ast.Attribute) else None)
+            if fname == "range":
+                for arg in node.args:
+                    if isinstance(arg, ast.Name) and arg.id == param:
+                        yield node, "a `range()` bound"
+            elif fname in SHAPE_FNS and node.args:
+                cands = node.args if fname in ("reshape", "broadcast_to",
+                                               "tile") else [node.args[0]]
+                for arg in cands:
+                    elts = arg.elts if isinstance(
+                        arg, (ast.Tuple, ast.List)) else [arg]
+                    for e in elts:
+                        if isinstance(e, ast.Name) and e.id == param:
+                            yield node, f"a `{fname}` shape"
+        elif isinstance(node, (ast.If, ast.While)):
+            t = node.test
+            if isinstance(t, ast.Name) and t.id == param:
+                yield node, "a python branch test"
+        elif isinstance(node, ast.FormattedValue):
+            if isinstance(node.value, ast.Name) and node.value.id == param:
+                yield node, "an f-string"
+
+
+def _is_step_varying_scalar(arg) -> str | None:
+    if isinstance(arg, ast.Call) and isinstance(arg.func, ast.Name) \
+            and arg.func.id in ("len", "int") and arg.args:
+        return f"{arg.func.id}(...)"
+    if isinstance(arg, ast.Subscript):
+        dn = dotted_name(arg.value)
+        if dn and dn.endswith(".shape"):
+            return f"{dn}[...]"
+    return None
+
+
+class RecompileHazardAnalyzer(Analyzer):
+
+    name = "recompile-hazard"
+    description = ("jitted callees with unmarked static params; per-step "
+                   "python scalars flowing into jitted calls")
+
+    def run(self, project):
+        graph = project.callgraph()
+        findings = []
+        analysis = set(project.analysis_rels)
+
+        seen_sites = set()
+        for site in graph.jit_sites:
+            if site.wrapped_ast is None or site.sf.rel not in analysis:
+                continue
+            key = (site.sf.rel, site.wrapped_ast.lineno,
+                   site.wrapped_ast.col_offset)
+            if key in seen_sites:
+                continue
+            seen_sites.add(key)
+            params = _param_names(site.wrapped_ast)
+            for i, p in enumerate(params):
+                if p in ("self", "cls") or i in site.static_argnums \
+                        or p in site.static_argnames:
+                    continue
+                for node, where in _static_positions(site.wrapped_ast, p):
+                    findings.append(self.finding(
+                        site.sf, node,
+                        f"jitted function uses param `{p}` in {where} "
+                        "but it is not in static_argnums/static_argnames "
+                        "— traced values fail here, python scalars "
+                        "retrace per value"))
+                    break       # one finding per (site, param)
+
+        # sub-rule 2: jit-bound attributes called in loops with fresh
+        # python scalars. "jit-bound" = assigned from a jax.jit(...) call
+        # anywhere in the same file (self._step = jax.jit(...)).
+        for sf in project.analysis_files:
+            bound = self._jit_bound_names(sf)
+            if not bound:
+                continue
+            for loop in ast.walk(sf.tree):
+                if not isinstance(loop, (ast.For, ast.While)):
+                    continue
+                for call in ast.walk(loop):
+                    if not isinstance(call, ast.Call):
+                        continue
+                    dn = dotted_name(call.func)
+                    if dn is None or dn.split(".")[-1] not in bound:
+                        continue
+                    for arg in list(call.args) + [k.value for k in
+                                                  call.keywords]:
+                        what = _is_step_varying_scalar(arg)
+                        if what:
+                            findings.append(self.finding(
+                                sf, arg,
+                                f"per-step python scalar `{what}` passed "
+                                f"to jitted `{dn}` inside a loop — every "
+                                "new value retraces; bucket it (pow2) or "
+                                "mark it static"))
+        return findings
+
+    @staticmethod
+    def _jit_bound_names(sf) -> set[str]:
+        graph_names = set()
+        for node in ast.walk(sf.tree):
+            if isinstance(node, ast.Assign) and isinstance(
+                    node.value, ast.Call):
+                dn = dotted_name(node.value.func)
+                if dn and dn.split(".")[-1] in ("jit", "pmap"):
+                    for tgt in node.targets:
+                        tdn = dotted_name(tgt)
+                        if tdn:
+                            graph_names.add(tdn.split(".")[-1])
+        return graph_names

@@ -1,0 +1,162 @@
+"""tp-boundary: one all-reduce per TP boundary, collectives stay caged.
+
+The TP serving contract (PR 6): each attention / MLP block ends in
+exactly one all-reduce, fused into the boundary matmul via
+`apply_linear(..., reduce_tp=True)` at the `wo` / `down` projection,
+executed as an f32 psum before the single output cast. Extra
+collectives double ICI traffic; a missing one silently de-synchronizes
+shards (caught today only by the token-identity tests).
+
+Rules:
+
+  * in functions reachable from the shard-mapped serving step
+    (`repro.models.transformer:unified_step`, plus any function marked
+    `# iteralint: tp-root`), an `apply_linear` call whose weight is a
+    `[...]["wo"]` / `[...]["down"]` subscript must pass
+    `reduce_tp=True`;
+  * no function anywhere may contain two `reduce_tp=True` call sites —
+    one boundary, one reduce;
+  * raw `jax.lax` collectives (psum / psum_scatter / all_gather /
+    all_to_all / ppermute) are only allowed in the sanctioned wrapper
+    modules (`runtime/shardctx.py`, `runtime/compression.py`) or
+    lexically inside shard_map-reachable functions — anywhere else they
+    execute outside a mesh axis scope and fail (or worse, run under a
+    stale axis name).
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.iteralint.framework import Analyzer, dotted_name
+
+BOUNDARY_KEYS = {"wo", "down"}
+COLLECTIVES = {"psum", "psum_scatter", "all_gather", "all_to_all",
+               "ppermute", "pmean", "pmax", "pmin"}
+SANCTIONED_MODULES = {"repro.runtime.shardctx", "repro.runtime.compression"}
+SEEDS = ("repro.models.transformer:unified_step",)
+
+
+def _boundary_key(call) -> str | None:
+    for arg in call.args:
+        if isinstance(arg, ast.Subscript) and isinstance(
+                arg.slice, ast.Constant) \
+                and arg.slice.value in BOUNDARY_KEYS:
+            return arg.slice.value
+    return None
+
+
+def _has_reduce_tp(call) -> bool:
+    for k in call.keywords:
+        if k.arg == "reduce_tp":
+            return isinstance(k.value, ast.Constant) \
+                and k.value.value is True
+    return False
+
+
+class TPBoundaryAnalyzer(Analyzer):
+
+    name = "tp-boundary"
+    description = ("one reduce_tp per boundary function; raw collectives "
+                   "only in sanctioned modules / shard_map scope")
+
+    def run(self, project):
+        graph = project.callgraph()
+        findings = []
+        analysis = set(project.analysis_rels)
+
+        seeds = set(SEEDS)
+        for qual, fi in graph.functions.items():
+            if isinstance(fi.node, (ast.FunctionDef,
+                                    ast.AsyncFunctionDef)) \
+                    and fi.sf.marker_near("tp-root", fi.node.lineno):
+                seeds.add(qual)
+        tp_reachable = graph.reachable_from(seeds)
+        shard_scope = graph.reachable_from(graph.roots_of_kind("shard_map"))
+
+        # rule 1: boundary projections inside the TP step must reduce.
+        for qual in sorted(tp_reachable):
+            fi = graph.functions[qual]
+            if fi.sf.rel not in analysis:
+                continue
+            for call in self._own_calls(fi.node):
+                fname = dotted_name(call.func) or ""
+                if fname.split(".")[-1] != "apply_linear":
+                    continue
+                key = _boundary_key(call)
+                if key is not None and not _has_reduce_tp(call):
+                    findings.append(self.finding(
+                        fi.sf, call,
+                        f"`apply_linear` on the `{key}` boundary "
+                        "projection inside the TP serving step must pass "
+                        "reduce_tp=True — shards stay partial-summed "
+                        "without it"))
+
+        # rule 2 + 3 are lexical, per analyzed file.
+        for sf in project.analysis_files:
+            by_node = {id(fi.node): fi for fi in graph.functions.values()
+                       if fi.sf is sf}
+            self._lexical(sf, by_node, shard_scope, findings)
+        return findings
+
+    @staticmethod
+    def _own_calls(fn):
+        """Call nodes in `fn` excluding nested def/lambda bodies."""
+        out = []
+
+        def walk(node, top):
+            for child in ast.iter_child_nodes(node):
+                if isinstance(child, (ast.FunctionDef,
+                                      ast.AsyncFunctionDef, ast.Lambda)) \
+                        and not top:
+                    continue
+                if isinstance(child, ast.Call):
+                    out.append(child)
+                walk(child, False)
+
+        walk(fn, True)
+        return out
+
+    def _lexical(self, sf, by_node, shard_scope, findings):
+        stack = []
+
+        def enclosing_quals():
+            return [by_node[id(n)].qual for n in stack if id(n) in by_node]
+
+        def walk(node):
+            is_fn = isinstance(node, (ast.FunctionDef,
+                                      ast.AsyncFunctionDef, ast.Lambda))
+            if is_fn:
+                stack.append(node)
+                if isinstance(node, (ast.FunctionDef,
+                                     ast.AsyncFunctionDef)):
+                    n_reduce = sum(
+                        1 for c in self._own_calls(node)
+                        if _has_reduce_tp(c))
+                    if n_reduce > 1:
+                        findings.append(self.finding(
+                            sf, node,
+                            f"function `{node.name}` has {n_reduce} "
+                            "reduce_tp=True call sites — the TP contract "
+                            "is exactly one all-reduce per boundary "
+                            "function"))
+            for child in ast.iter_child_nodes(node):
+                if isinstance(child, ast.Call):
+                    dn = dotted_name(child.func)
+                    if dn and dn.split(".")[-1] in COLLECTIVES \
+                            and ("lax" in dn.split(".")[:-1]
+                                 or dn.startswith("jax.")):
+                        if sf.module not in SANCTIONED_MODULES and not any(
+                                q in shard_scope
+                                for q in enclosing_quals()):
+                            findings.append(self.finding(
+                                sf, child,
+                                f"raw collective `{dn}` outside the "
+                                "sanctioned wrappers (runtime/shardctx, "
+                                "runtime/compression) and outside any "
+                                "shard_map-reachable function — use "
+                                "psum_tp / tp_shard_map"))
+                walk(child)
+            if is_fn:
+                stack.pop()
+
+        walk(sf.tree)

@@ -1,0 +1,233 @@
+"""trace-safety: host-Python operations on traced values.
+
+Within functions reachable from a trace root (jit / shard_map / pallas
+kernel / lax combinator — see callgraph), flag:
+
+  * Python `if` / `while` / `assert` whose test involves a traced value
+    (tracing either fails with a ConcretizationTypeError or, worse,
+    silently specializes on one branch);
+  * host syncs: `.item()` / `.tolist()` on anything, `float()` / `int()`
+    / `bool()` / `len()` of a traced value, and any `np.*` call — numpy
+    materializes its argument on the host, which blocks the dispatch
+    pipeline mid-step (the exact bug class the serve loop's
+    count-based readback was built to avoid).
+
+"Traced value" is a deliberately conservative taint: only values
+produced by `jnp.*` / `jax.lax.*` / `jax.nn.*` / `jax.random.*` calls
+(and arithmetic / indexing / method chains on them) are tainted.
+Function parameters are NOT assumed traced — this codebase routinely
+threads static Python ints (verify_width, block factors, speculation
+k) through jitted functions, and flagging `if verify_width:` would bury
+the real findings. `.shape` / `.ndim` / `.dtype` / `.size` reads are
+untainted: they are static under tracing and branching on them is the
+sanctioned pattern.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.iteralint.framework import Analyzer, import_table
+
+DEVICE_PREFIXES = ("jax.numpy", "jax.lax", "jax.nn", "jax.random",
+                   "jax.scipy")
+STATIC_ATTRS = {"shape", "ndim", "dtype", "size"}
+# jax.numpy calls that yield static (non-array) values.
+STATIC_FNS = {"dtype", "issubdtype", "ShapeDtypeStruct", "result_type"}
+HOST_SYNC_METHODS = {"item", "tolist", "block_until_ready"}
+
+
+def _device_module_aliases(table):
+    """Module import aliases that resolve under jax (np stays separate)."""
+    dev, np_alias = set(), set()
+    for alias, tgt in table.items():
+        if tgt == "numpy" or tgt.startswith("numpy."):
+            np_alias.add(alias)
+        elif any(tgt == p or tgt.startswith(p + ".")
+                 for p in DEVICE_PREFIXES) or tgt == "jax":
+            dev.add(alias)
+    return dev, np_alias
+
+
+class _FnChecker(ast.NodeVisitor):
+
+    def __init__(self, analyzer, sf, fn_node, dev_aliases, np_aliases):
+        self.a = analyzer
+        self.sf = sf
+        self.dev = dev_aliases
+        self.np = np_aliases
+        self.taint: set[str] = set()
+        self.findings = []
+        body = fn_node.body
+        for stmt in (body if isinstance(body, list) else [body]):
+            self.visit(stmt)
+
+    # -- taint -------------------------------------------------------------
+
+    def _root_alias(self, node):
+        while isinstance(node, (ast.Attribute, ast.Subscript, ast.Call)):
+            node = node.func if isinstance(node, ast.Call) else node.value
+        return node.id if isinstance(node, ast.Name) else None
+
+    def is_device_call(self, call: ast.Call) -> bool:
+        f = call.func
+        if isinstance(f, ast.Attribute):
+            root = self._root_alias(f)
+            if root in self.dev and f.attr not in STATIC_FNS:
+                return True
+            # method chain on a tainted value: x.astype(...), x.at[i].set()
+            if self.tainted(f.value):
+                return True
+        return False
+
+    def tainted(self, node) -> bool:
+        if isinstance(node, ast.Name):
+            return node.id in self.taint
+        if isinstance(node, ast.Call):
+            return self.is_device_call(node)
+        if isinstance(node, ast.Attribute):
+            if node.attr in STATIC_ATTRS:
+                return False
+            return self.tainted(node.value)
+        if isinstance(node, ast.Subscript):
+            return self.tainted(node.value)
+        if isinstance(node, ast.BinOp):
+            return self.tainted(node.left) or self.tainted(node.right)
+        if isinstance(node, ast.UnaryOp):
+            return self.tainted(node.operand)
+        if isinstance(node, ast.BoolOp):
+            return any(self.tainted(v) for v in node.values)
+        if isinstance(node, ast.Compare):
+            return self.tainted(node.left) or any(
+                self.tainted(c) for c in node.comparators)
+        if isinstance(node, ast.IfExp):
+            return self.tainted(node.body) or self.tainted(node.orelse)
+        if isinstance(node, (ast.Tuple, ast.List)):
+            return any(self.tainted(e) for e in node.elts)
+        if isinstance(node, ast.Starred):
+            return self.tainted(node.value)
+        return False
+
+    def _mark(self, target, is_tainted):
+        if isinstance(target, ast.Name):
+            if is_tainted:
+                self.taint.add(target.id)
+            else:
+                self.taint.discard(target.id)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for e in target.elts:
+                self._mark(e, is_tainted)
+
+    # -- statements --------------------------------------------------------
+
+    def visit_Assign(self, node):
+        t = self.tainted(node.value)
+        for tgt in node.targets:
+            self._mark(tgt, t)
+        self.generic_visit(node)
+
+    def visit_AnnAssign(self, node):
+        if node.value is not None:
+            self._mark(node.target, self.tainted(node.value))
+        self.generic_visit(node)
+
+    def visit_AugAssign(self, node):
+        if self.tainted(node.value):
+            self._mark(node.target, True)
+        self.generic_visit(node)
+
+    def visit_For(self, node):
+        if self.tainted(node.iter):
+            self._mark(node.target, True)
+            self.findings.append(self.a.finding(
+                self.sf, node,
+                "python `for` over a traced value in a traced function "
+                "(use lax.scan / lax.fori_loop)"))
+        self.generic_visit(node)
+
+    def visit_If(self, node):
+        if self.tainted(node.test):
+            self.findings.append(self.a.finding(
+                self.sf, node,
+                "python `if` on a traced value in a traced function "
+                "(use jnp.where / lax.cond)"))
+        self.generic_visit(node)
+
+    def visit_While(self, node):
+        if self.tainted(node.test):
+            self.findings.append(self.a.finding(
+                self.sf, node,
+                "python `while` on a traced value in a traced function "
+                "(use lax.while_loop)"))
+        self.generic_visit(node)
+
+    def visit_Assert(self, node):
+        if self.tainted(node.test):
+            self.findings.append(self.a.finding(
+                self.sf, node,
+                "`assert` on a traced value in a traced function "
+                "(assert on .shape/static config instead, or use "
+                "checkify)"))
+        self.generic_visit(node)
+
+    # Nested defs/lambdas are separate graph nodes; don't double-visit.
+    def visit_FunctionDef(self, node):
+        pass
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def visit_Lambda(self, node):
+        pass
+
+    # -- host syncs --------------------------------------------------------
+
+    def visit_Call(self, node):
+        f = node.func
+        if isinstance(f, ast.Attribute):
+            if f.attr in HOST_SYNC_METHODS:
+                self.findings.append(self.a.finding(
+                    self.sf, node,
+                    f"`.{f.attr}()` host sync inside a traced function"))
+            root = self._root_alias(f)
+            if root in self.np:
+                self.findings.append(self.a.finding(
+                    self.sf, node,
+                    f"numpy call `{ast.unparse(f)}` inside a traced "
+                    "function materializes on host (use jnp)"))
+        elif isinstance(f, ast.Name):
+            if f.id in ("float", "int", "bool") and node.args \
+                    and self.tainted(node.args[0]):
+                self.findings.append(self.a.finding(
+                    self.sf, node,
+                    f"`{f.id}()` of a traced value forces a host sync "
+                    "inside a traced function"))
+            elif f.id == "len" and node.args \
+                    and self.tainted(node.args[0]):
+                self.findings.append(self.a.finding(
+                    self.sf, node,
+                    "`len()` of a traced array inside a traced function "
+                    "(read .shape instead)"))
+        self.generic_visit(node)
+
+
+class TraceSafetyAnalyzer(Analyzer):
+
+    name = "trace-safety"
+    description = ("host control flow / host syncs on traced values in "
+                   "jit- or shard_map-reachable functions")
+
+    def run(self, project):
+        graph = project.callgraph()
+        traced = graph.traced()
+        findings = []
+        analysis = set(project.analysis_rels)
+        for qual in sorted(traced):
+            fi = graph.functions[qual]
+            if fi.sf.rel not in analysis:
+                continue
+            table = getattr(fi.sf, "imports", None)
+            if table is None:
+                table = fi.sf.imports = import_table(fi.sf.tree)
+            dev, np_alias = _device_module_aliases(table)
+            chk = _FnChecker(self, fi.sf, fi.node, dev, np_alias)
+            findings.extend(chk.findings)
+        return findings

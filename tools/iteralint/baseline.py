@@ -1,0 +1,58 @@
+"""Baseline file: known findings the CI gate tolerates.
+
+JSON, committed next to this module. Every entry must carry a
+`justification` — an entry without one is itself an error, so the
+baseline cannot silently absorb new debt. Matching ignores line/col
+(they drift with unrelated edits): identity is (rule, path, message).
+
+Regenerate after an intentional change with:
+
+    python -m tools.iteralint src tests --update-baseline
+
+then hand-edit the justifications before committing.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+VERSION = 1
+DEFAULT_PATH = pathlib.Path(__file__).parent / "baseline.json"
+
+
+def load(path=DEFAULT_PATH):
+    """-> (set of (rule, path, message) keys, list of format errors)."""
+    p = pathlib.Path(path)
+    if not p.exists():
+        return set(), []
+    try:
+        data = json.loads(p.read_text(encoding="utf-8"))
+    except json.JSONDecodeError as e:
+        return set(), [f"{p}: invalid JSON ({e})"]
+    errors = []
+    if data.get("version") != VERSION:
+        errors.append(f"{p}: unknown baseline version "
+                      f"{data.get('version')!r}")
+    keys = set()
+    for i, e in enumerate(data.get("entries", [])):
+        missing = [k for k in ("rule", "path", "message") if k not in e]
+        if missing:
+            errors.append(f"{p}: entry {i} missing {missing}")
+            continue
+        if not e.get("justification", "").strip():
+            errors.append(f"{p}: entry {i} ({e['rule']} @ {e['path']}) "
+                          "has no justification — baselined findings "
+                          "must say why")
+        keys.add((e["rule"], e["path"], e["message"]))
+    return keys, errors
+
+
+def save(findings, path=DEFAULT_PATH):
+    entries = [{"rule": f.rule, "path": f.path, "message": f.message,
+                "justification": "TODO: justify or fix"}
+               for f in findings]
+    data = {"version": VERSION, "entries": entries}
+    pathlib.Path(path).write_text(
+        json.dumps(data, indent=2, sort_keys=True) + "\n",
+        encoding="utf-8")
+    return len(entries)

@@ -1,0 +1,119 @@
+"""Command line driver: `python -m tools.iteralint [paths...]`.
+
+Exit codes: 0 clean (with --fail-on-new: no *new* findings beyond the
+baseline), 1 findings (or new findings), 2 usage / internal error.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+from tools.iteralint import baseline as baseline_mod
+from tools.iteralint.analyzers import ALL, BY_NAME
+from tools.iteralint.framework import Project, run_analyzers
+
+
+def build_parser():
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.iteralint",
+        description="Repo-aware static analysis for the ITERA serving "
+                    "stack (jit / Pallas / TP invariants).")
+    ap.add_argument("paths", nargs="*", default=["src", "tests"],
+                    help="files or directories to lint "
+                         "(default: src tests)")
+    ap.add_argument("--rules", metavar="R1,R2",
+                    help="comma-separated subset of rules to run")
+    ap.add_argument("--baseline", default=str(baseline_mod.DEFAULT_PATH),
+                    help="baseline JSON path")
+    ap.add_argument("--fail-on-new", action="store_true",
+                    help="exit 0 unless a finding is NOT in the baseline")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite the baseline from current findings")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="machine-readable JSON findings on stdout")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalog and exit")
+    ap.add_argument("--no-default-excludes", action="store_true",
+                    help="also lint the deliberate-violation fixture "
+                         "tree (tests/fixtures/lint)")
+    ap.add_argument("--root", default=".",
+                    help="repo root (default: cwd)")
+    return ap
+
+
+def main(argv=None) -> int:
+    args = build_parser().parse_args(argv)
+
+    if args.list_rules:
+        for a in ALL:
+            print(f"{a.name:18s} {a.description}")
+        return 0
+
+    analyzers = ALL
+    if args.rules:
+        wanted = [r.strip() for r in args.rules.split(",") if r.strip()]
+        unknown = [r for r in wanted if r not in BY_NAME]
+        if unknown:
+            print(f"iteralint: unknown rules {unknown}; known: "
+                  f"{sorted(BY_NAME)}", file=sys.stderr)
+            return 2
+        analyzers = [BY_NAME[r] for r in wanted]
+
+    root = pathlib.Path(args.root)
+    paths = []
+    for p in args.paths:
+        pp = pathlib.Path(p)
+        if not pp.exists():
+            print(f"iteralint: no such path {p}", file=sys.stderr)
+            return 2
+        paths.append(pp)
+
+    project = Project(root, paths,
+                      use_default_excludes=not args.no_default_excludes)
+    for e in project.errors:
+        print(f"iteralint: {e}", file=sys.stderr)
+
+    findings = run_analyzers(project, analyzers)
+
+    if args.update_baseline:
+        n = baseline_mod.save(findings, args.baseline)
+        print(f"iteralint: baseline rewritten with {n} entries "
+              f"({args.baseline}); fill in the justifications")
+        return 0
+
+    base_keys, base_errors = baseline_mod.load(args.baseline)
+    for e in base_errors:
+        print(f"iteralint: {e}", file=sys.stderr)
+    new = [f for f in findings if f.key not in base_keys]
+    stale = base_keys - {f.key for f in findings}
+
+    if args.as_json:
+        print(json.dumps({
+            "version": 1,
+            "findings": [
+                {"rule": f.rule, "path": f.path, "line": f.line,
+                 "col": f.col + 1, "message": f.message,
+                 "baselined": f.key in base_keys}
+                for f in findings],
+            "summary": {"total": len(findings), "new": len(new),
+                        "baselined": len(findings) - len(new),
+                        "stale_baseline_entries": len(stale),
+                        "files_analyzed": len(project.analysis_rels)},
+        }, indent=2))
+    else:
+        for f in findings:
+            tag = "" if f.key not in base_keys else "  (baselined)"
+            print(f.render() + tag)
+        if stale:
+            print(f"iteralint: note: {len(stale)} baseline entrie(s) no "
+                  "longer match any finding — prune the baseline")
+        print(f"iteralint: {len(project.analysis_rels)} files, "
+              f"{len(findings)} finding(s), {len(new)} new")
+
+    if base_errors:
+        return 1
+    if args.fail_on_new:
+        return 1 if new else 0
+    return 1 if findings else 0

@@ -1,0 +1,282 @@
+"""Shared infrastructure for the iteralint analyzers.
+
+Everything here is plain-stdlib `ast` work: a `SourceFile` wraps one
+parsed module (with its suppression comments and magic markers), a
+`Project` owns every parsed file plus the cross-module call graph, and a
+`Finding` is the unit every analyzer emits. No jax import anywhere —
+the linter must run on a box that cannot even install the runtime deps.
+
+Suppression syntax (checked per finding line, same line or the line
+directly above):
+
+    x = compute()  # iteralint: disable=trace-safety
+    # iteralint: disable=tp-boundary,host-purity
+    y = other()
+
+File-wide:
+
+    # iteralint: disable-file=recompile-hazard
+
+Magic markers used by individual analyzers:
+
+    # iteralint: host-pure-module      (file-wide host-purity strictness)
+    # iteralint: tp-root               (next `def` seeds TP reachability)
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import pathlib
+import re
+
+DISABLE_RE = re.compile(r"#\s*iteralint:\s*disable=([\w\-,\s]+)")
+DISABLE_FILE_RE = re.compile(r"#\s*iteralint:\s*disable-file=([\w\-,\s]+)")
+MARKER_RE = re.compile(r"#\s*iteralint:\s*([\w\-]+)\s*$")
+
+# Paths (repo-relative, posix) skipped when walking directories. The lint
+# fixtures are deliberate rule violations; CI must not trip over them.
+DEFAULT_EXCLUDES = ("tests/fixtures/lint",)
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One analyzer hit. `line`/`col` are 1-based / 0-based (ast style).
+
+    Baseline matching deliberately ignores line/col (they drift with
+    unrelated edits): the identity of a finding is (rule, path, message),
+    so messages must not embed line numbers.
+    """
+    rule: str
+    path: str
+    line: int
+    col: int
+    message: str
+
+    @property
+    def key(self) -> tuple[str, str, str]:
+        return (self.rule, self.path, self.message)
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}:{self.col + 1}: " \
+               f"[{self.rule}] {self.message}"
+
+
+def _split_rules(blob: str) -> set[str]:
+    return {r.strip() for r in blob.split(",") if r.strip()}
+
+
+class SourceFile:
+    """One parsed Python file plus its comment-level lint directives."""
+
+    def __init__(self, path: pathlib.Path, rel: str, module: str,
+                 text: str):
+        self.path = path
+        self.rel = rel                      # repo-relative posix string
+        self.module = module                # dotted module name
+        self.text = text
+        self.lines = text.splitlines()
+        self.tree = ast.parse(text, filename=rel)
+        self.suppressed: dict[int, set[str]] = {}
+        self.file_suppressed: set[str] = set()
+        self.markers: dict[int, str] = {}   # line -> marker name
+        self.file_markers: set[str] = set()
+        for i, raw in enumerate(self.lines, start=1):
+            if "#" not in raw:
+                continue
+            m = DISABLE_FILE_RE.search(raw)
+            if m:
+                self.file_suppressed |= _split_rules(m.group(1))
+                continue
+            m = DISABLE_RE.search(raw)
+            if m:
+                self.suppressed[i] = _split_rules(m.group(1))
+                continue
+            m = MARKER_RE.search(raw)
+            if m and m.group(1).startswith(("host-", "tp-")):
+                self.markers[i] = m.group(1)
+                self.file_markers.add(m.group(1))
+
+    def is_suppressed(self, rule: str, line: int) -> bool:
+        if rule in self.file_suppressed or "all" in self.file_suppressed:
+            return True
+        for ln in (line, line - 1):
+            rules = self.suppressed.get(ln)
+            if rules and (rule in rules or "all" in rules):
+                return True
+        return False
+
+    def marker_near(self, marker: str, line: int) -> bool:
+        """Marker on `line` or the line directly above (decorator style)."""
+        return self.markers.get(line) == marker \
+            or self.markers.get(line - 1) == marker
+
+
+def module_name_for(rel: str) -> str:
+    """Dotted module name for a repo-relative path. Files under src/ drop
+    the prefix (the repo runs with PYTHONPATH=src), everything else keeps
+    its full path so test/tool modules cannot collide with repro.*."""
+    p = pathlib.PurePosixPath(rel)
+    parts = list(p.with_suffix("").parts)
+    if parts and parts[0] == "src":
+        parts = parts[1:]
+    if parts and parts[-1] == "__init__":
+        parts = parts[:-1]
+    return ".".join(parts)
+
+
+class Project:
+    """All parsed files for one lint run.
+
+    `analysis_files` are the files findings may be reported against
+    (the CLI paths). The project additionally parses everything under
+    `src/` so cross-module analyses (call graph, transitive jax imports)
+    see the whole runtime even when only a subset is being linted.
+    """
+
+    def __init__(self, root: pathlib.Path, paths: list[pathlib.Path],
+                 use_default_excludes: bool = True):
+        self.root = root
+        self.files: dict[str, SourceFile] = {}        # rel -> SourceFile
+        self.by_module: dict[str, SourceFile] = {}
+        self.analysis_rels: list[str] = []
+        self.errors: list[str] = []
+        seen: set[str] = set()
+        for p in paths:
+            for f in self._walk(p, use_default_excludes):
+                rel = self._rel(f)
+                if rel in seen:
+                    continue
+                seen.add(rel)
+                if self._load(f, rel) is not None:
+                    self.analysis_rels.append(rel)
+        src = root / "src"
+        if src.is_dir():
+            for f in self._walk(src, use_default_excludes):
+                rel = self._rel(f)
+                if rel not in seen:
+                    seen.add(rel)
+                    self._load(f, rel)
+        self._graph = None
+
+    def _rel(self, f: pathlib.Path) -> str:
+        try:
+            return f.resolve().relative_to(self.root.resolve()).as_posix()
+        except ValueError:
+            return f.as_posix()
+
+    def _walk(self, p: pathlib.Path, use_default_excludes: bool):
+        if p.is_file():
+            if p.suffix == ".py":
+                yield p
+            return
+        for f in sorted(p.rglob("*.py")):
+            rel = self._rel(f)
+            if use_default_excludes and any(
+                    rel == ex or rel.startswith(ex + "/")
+                    for ex in DEFAULT_EXCLUDES):
+                continue
+            yield f
+
+    def _load(self, f: pathlib.Path, rel: str):
+        try:
+            sf = SourceFile(f, rel, module_name_for(rel),
+                            f.read_text(encoding="utf-8"))
+        except (OSError, SyntaxError) as e:
+            self.errors.append(f"{rel}: unparseable ({e})")
+            return None
+        self.files[rel] = sf
+        self.by_module[sf.module] = sf
+        return sf
+
+    @property
+    def analysis_files(self) -> list[SourceFile]:
+        return [self.files[r] for r in self.analysis_rels]
+
+    def callgraph(self):
+        if self._graph is None:
+            from tools.iteralint.callgraph import CallGraph
+            self._graph = CallGraph(self)
+        return self._graph
+
+
+class Analyzer:
+    """Base class: subclasses set `name` and implement `run`."""
+
+    name = "base"
+    description = ""
+
+    def run(self, project: Project) -> list[Finding]:
+        raise NotImplementedError
+
+    def finding(self, sf: SourceFile, node: ast.AST, message: str):
+        return Finding(self.name, sf.rel, getattr(node, "lineno", 1),
+                       getattr(node, "col_offset", 0), message)
+
+
+def run_analyzers(project: Project, analyzers) -> list[Finding]:
+    """Run analyzers, drop suppressed findings, sort stably."""
+    out = []
+    for a in analyzers:
+        for f in a.run(project):
+            sf = project.files.get(f.path)
+            if sf is not None and sf.is_suppressed(f.rule, f.line):
+                continue
+            out.append(f)
+    out.sort(key=lambda f: (f.path, f.line, f.col, f.rule, f.message))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Small ast helpers shared by several analyzers.
+
+def dotted_name(node: ast.AST) -> str | None:
+    """'a.b.c' for a Name/Attribute chain, else None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def import_table(tree: ast.Module) -> dict[str, str]:
+    """alias -> fully qualified target for module-level imports.
+
+    `import a.b as c`      -> {'c': 'a.b'}
+    `import a.b`           -> {'a': 'a'}          (only the root binds)
+    `from a.b import c`    -> {'c': 'a.b.c'}
+    `from a.b import c as d` -> {'d': 'a.b.c'}
+    """
+    table: dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.asname:
+                    table[a.asname] = a.name
+                else:
+                    root = a.name.split(".")[0]
+                    table[root] = root
+        elif isinstance(node, ast.ImportFrom) and node.module \
+                and node.level == 0:
+            for a in node.names:
+                if a.name == "*":
+                    continue
+                table[a.asname or a.name] = f"{node.module}.{a.name}"
+    return table
+
+
+def resolves_to(table: dict[str, str], node: ast.AST,
+                prefix: str) -> bool:
+    """True when the Name/Attribute chain resolves under `prefix` (a
+    module path like 'jax' or 'jax.numpy') through the import table."""
+    dn = dotted_name(node)
+    if dn is None:
+        return False
+    head, _, rest = dn.partition(".")
+    target = table.get(head)
+    if target is None:
+        return False
+    full = target + ("." + rest if rest else "")
+    return full == prefix or full.startswith(prefix + ".")

@@ -15,7 +15,14 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
                                 "benchmarks"))
-from roofline import roofline_row  # noqa: E402
+
+
+def _roofline_row(rec):
+    # Lazy: roofline -> common -> jax. Keeps `--validate` (the CI lint
+    # job's schema guard) and the BENCH diff modes importable on a bare
+    # python without the benchmark stack installed.
+    from roofline import roofline_row
+    return roofline_row(rec)
 
 
 def load(cell, out="results/dryrun"):
@@ -24,7 +31,7 @@ def load(cell, out="results/dryrun"):
         if os.path.exists(p):
             rec = json.load(open(p))
             if rec.get("status") == "ok":
-                return roofline_row(rec)
+                return _roofline_row(rec)
     return None
 
 
@@ -244,13 +251,64 @@ def serving_table(base_path, new_path=None):
         print(f"| {name} | {b:.2f} | {n:.2f} | {100 * (n - b) / b:+.1f}% |")
 
 
+def validate(kernels_path="BENCH_kernels.json",
+             serving_path="BENCH_serving.json"):
+    """Fast CI guard: check the committed benchmark JSONs still parse and
+    carry the fields every table in this script joins on, without running
+    any benchmark. Anyone regenerating BENCH_*.json with a changed schema
+    finds out in the <1 min lint job, not in a broken perf-review diff.
+    """
+    problems = []
+    if os.path.exists(kernels_path):
+        try:
+            rows = load_kernels(kernels_path)
+            if not rows:
+                problems.append(f"{kernels_path}: no rows")
+            for name, (us, _hbm) in rows.items():
+                if us <= 0:
+                    problems.append(
+                        f"{kernels_path}: {name}: us_per_call={us}")
+        except (SystemExit, KeyError, TypeError, ValueError,
+                json.JSONDecodeError) as e:
+            problems.append(f"{kernels_path}: {e}")
+    else:
+        problems.append(f"{kernels_path}: missing")
+    if os.path.exists(serving_path):
+        try:
+            rec = json.load(open(serving_path))
+            if "workload" not in rec:
+                problems.append(f"{serving_path}: no 'workload' section")
+            resolved = sum(
+                1 for _n, path, scale in SERVING_METRICS
+                if _serving_metric(rec, path, scale) is not None)
+            if not resolved:
+                problems.append(
+                    f"{serving_path}: none of the {len(SERVING_METRICS)} "
+                    "serving metrics resolve — schema drifted?")
+        except (TypeError, ValueError, json.JSONDecodeError) as e:
+            problems.append(f"{serving_path}: {e}")
+    else:
+        problems.append(f"{serving_path}: missing")
+    if problems:
+        for p in problems:
+            print(f"perf_compare --validate: {p}", file=sys.stderr)
+        raise SystemExit(1)
+    print(f"perf_compare --validate: ok ({kernels_path}, {serving_path})")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--kernels", nargs="+", metavar="BENCH_kernels.json",
                     help="one file: print table; two files: before/after")
     ap.add_argument("--serving", nargs="+", metavar="BENCH_serving.json",
                     help="one file: print table; two files: before/after")
+    ap.add_argument("--validate", action="store_true",
+                    help="schema-check committed BENCH_*.json and exit "
+                         "(fast CI guard; runs no benchmarks)")
     args = ap.parse_args()
+    if args.validate:
+        validate()
+        return
     if args.kernels:
         if len(args.kernels) > 2:
             raise SystemExit("--kernels takes one or two files")
@@ -281,7 +339,7 @@ def roofline_report():
         rec = json.load(open(f))
         if rec.get("status") != "ok":
             continue
-        r = roofline_row(rec)
+        r = _roofline_row(rec)
         print(f"| {r['cell']} | {r['t_compute_s']:.4g} "
               f"| {r['t_memory_s']:.4g} | {r['t_collective_s']:.4g} "
               f"| {r['dominant']} | {r['roofline_mfu']:.4f} "
