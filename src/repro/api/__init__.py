@@ -12,6 +12,7 @@ from repro.api.engine import (
     InferenceEngine,
     SamplingParams,
     ServeResult,
+    TokenEvent,
 )
 from repro.runtime.scheduler import Request
 from repro.runtime.speculation import DraftSpec
@@ -19,5 +20,5 @@ from repro.runtime.speculation import DraftSpec
 __all__ = [
     "CompressionPlan", "LayerPlan", "merge_plans",
     "GenerationResult", "InferenceEngine", "SamplingParams",
-    "ServeResult", "Request", "DraftSpec",
+    "ServeResult", "TokenEvent", "Request", "DraftSpec",
 ]

@@ -53,19 +53,72 @@ from repro.runtime.speculation import DraftSpec, SpeculationController
 
 @dataclasses.dataclass(frozen=True)
 class SamplingParams:
-    """Per-generate sampling controls. temperature <= 0 means greedy;
-    top_k == 0 samples the full vocabulary."""
+    """Per-call sampling / stop controls (a `runtime.scheduler.Request`
+    can override any of them per request). temperature <= 0 means
+    greedy; top_k == 0 and top_p == 1.0 apply no truncation tighter
+    than the sampler's static top-`sampling.TOPK_CAP` candidate window. `stop` is a tuple of token-id sequences matched inclusively
+    — generation stops after emitting the token that completes a match,
+    and the matched tokens stay in the output (see runtime/sampling.py);
+    eos_id is a single-token stop. Seeded sampled runs are reproducible
+    token-for-token across repeats, prefix-cache on/off, TP mesh sizes,
+    and the generate()/serve() split (per-row counter-based PRNG keys)."""
 
     max_tokens: int = 32
     temperature: float = 0.0
     top_k: int = 0
+    top_p: float = 1.0
     seed: int = 0
+    eos_id: int | None = None
+    stop: tuple = ()
 
     def __post_init__(self):
         if self.max_tokens < 1:
             raise ValueError(f"max_tokens must be >= 1, got {self.max_tokens}")
         if self.top_k < 0:
             raise ValueError(f"top_k must be >= 0, got {self.top_k}")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
+        if self.eos_id is not None and self.eos_id < 0:
+            raise ValueError(f"eos_id must be >= 0, got {self.eos_id}")
+        object.__setattr__(self, "stop", tuple(
+            tuple(int(t) for t in s) for s in self.stop))
+        if any(len(s) == 0 for s in self.stop):
+            raise ValueError("empty stop sequence")
+
+    def to_dict(self) -> dict:
+        d = {"max_tokens": self.max_tokens, "temperature": self.temperature,
+             "top_k": self.top_k, "top_p": self.top_p, "seed": self.seed}
+        if self.eos_id is not None:
+            d["eos_id"] = int(self.eos_id)
+        if self.stop:
+            d["stop"] = [list(s) for s in self.stop]
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "SamplingParams":
+        return cls(max_tokens=int(d.get("max_tokens", 32)),
+                   temperature=float(d.get("temperature", 0.0)),
+                   top_k=int(d.get("top_k", 0)),
+                   top_p=float(d.get("top_p", 1.0)),
+                   seed=int(d.get("seed", 0)),
+                   eos_id=(None if d.get("eos_id") is None
+                           else int(d["eos_id"])),
+                   stop=tuple(tuple(s) for s in d.get("stop", ())))
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenEvent:
+    """One streamed token, delivered by serve(on_token=...) the moment
+    the pipelined readback confirms it (true completion time, the same
+    timestamp TTFT/TPOT use). `index` is the token's position in the
+    request's output; `final` marks the request's last token (its stop
+    criterion fired or max_tokens was reached)."""
+
+    rid: int
+    token: int
+    index: int
+    time: float
+    final: bool
 
 
 @dataclasses.dataclass
@@ -126,6 +179,15 @@ class ServeResult:
     cache_cow_blocks: int = 0
     cache_evictions: int = 0
     preemptions: int = 0
+    # SLO accounting: queue_times[i] is request i's admission wait
+    # (serve() start -> scheduler admission; re-admission after a
+    # preemption overwrites it), finish_times[i] its completion time
+    # relative to serve() start. `stopped_early` counts requests a
+    # device stop criterion (eos / stop sequence) finished before
+    # max_tokens.
+    queue_times: list[float] = dataclasses.field(default_factory=list)
+    finish_times: list[float] = dataclasses.field(default_factory=list)
+    stopped_early: int = 0
 
     @property
     def accept_rate(self) -> float:
@@ -179,6 +241,33 @@ class ServeResult:
     def tpot_p95(self) -> float:
         return _percentile([t for t in self.tpot if t > 0], 95)
 
+    @property
+    def queue_p50(self) -> float:
+        return _percentile(self.queue_times, 50)
+
+    @property
+    def queue_p95(self) -> float:
+        return _percentile(self.queue_times, 95)
+
+    def goodput(self, deadline_s: float) -> float:
+        """Tokens per second counting ONLY requests that finished within
+        `deadline_s` of serve() start — the SLO-aware throughput number
+        (a request that blows its deadline contributes nothing, however
+        many tokens it produced)."""
+        good = sum(self.outputs[i].size for i, f in enumerate(
+            self.finish_times) if f <= deadline_s)
+        return good / max(self.seconds, 1e-9)
+
+    def slo_attainment(self, ttft_s: float, tpot_s: float) -> float:
+        """Fraction of requests meeting BOTH a TTFT and a per-output-
+        token latency target."""
+        n = len(self.outputs)
+        if not n:
+            return 0.0
+        ok = sum(1 for i in range(n)
+                 if self.ttft[i] <= ttft_s and self.tpot[i] <= tpot_s)
+        return ok / n
+
 
 def _as_token_batch(requests):
     """Normalize requests: a (B, S) int32 array when rectangular, else a
@@ -216,23 +305,26 @@ def _tree_nbytes(tree) -> int:
                for l in jax.tree_util.tree_leaves(tree))
 
 
-def _serve_step(params, pool, block_tables, step_buf, prev, cfg):
-    """One fused serving dispatch. step_buf: (B, W + 3) int32 — the
-    host-built span tokens (B, W) with three metadata columns appended
-    (ctx_lens, q_lens, use_prev), packed so the hot loop uploads ONE
-    array per step. Decode rows' first token column is spliced from
-    `prev` (the previous step's device-resident sampled tokens) so token
-    values never round-trip through the host. Returns (logits (B, 1, V),
-    greedy next tokens (B, 1), pool)."""
-    tokens = step_buf[:, :-3]
-    ctx_lens, q_lens, use_prev = (step_buf[:, -3], step_buf[:, -2],
-                                  step_buf[:, -1])
-    tokens = tokens.at[:, 0].set(
-        jnp.where(use_prev.astype(bool), prev[:, 0], tokens[:, 0]))
-    logits, pool = tfm.unified_step(params, pool, block_tables, ctx_lens,
-                                    q_lens, tokens, cfg)
-    toks = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
-    return logits, toks, pool
+def _generate_pick(logits, temperature, top_k, top_p, seed, counter):
+    """Sampled next tokens for the rectangular generate() path: (B, 1)
+    int32 from (B, ..., V) last-position logits. Scalar sampling
+    controls are broadcast per row; keys are counter-based —
+    fold_in(fold_in(PRNGKey(seed), row), counter) with row == batch
+    index == the rid serve() would assign the same prompts — so the
+    rectangular and continuous-batching paths sample identical tokens
+    under a shared seed (counter is a traced scalar: one trace serves
+    every step)."""
+    from repro.runtime import sampling as smp
+
+    last = logits[:, -1]
+    b = last.shape[0]
+    bcast = lambda x, dt: jnp.full((b,), x, dt)    # noqa: E731
+    keys = smp.row_keys(bcast(seed, jnp.int32),
+                        jnp.arange(b, dtype=jnp.int32),
+                        bcast(counter, jnp.int32))
+    return smp.sample_tokens(last, bcast(temperature, jnp.float32),
+                             bcast(top_k, jnp.int32),
+                             bcast(top_p, jnp.float32), keys)[:, None]
 
 
 class InferenceEngine:
@@ -297,50 +389,82 @@ class InferenceEngine:
         self._decode = jax.jit(
             lambda p, cache, tok, pos: tfm.decode_step(p, cache, tok, pos,
                                                        cfg))
-        # the unified serving step: static in (capacity, span width, max
-        # blocks/seq); the span width is power-of-two bucketed, so one
-        # jitted function in O(log chunk_tokens) shapes serves the whole
+        # the unified serving step (models.transformer.serve_step):
+        # static in (capacity, span width, max blocks/seq); the span
+        # width is power-of-two bucketed, so one jitted function in
+        # O(log chunk_tokens) shapes serves the whole
         # admit/chunk/decode/evict loop. Everything per-step is fused
         # into this single dispatch — splicing the previous step's
         # device-resident sampled tokens into decode rows, the forward
-        # pass, and the greedy argmax — because serving throughput on
-        # small steps is bounded by host dispatch overhead, not FLOPs.
-        self._unified = jax.jit(
-            lambda p, pool, bt, buf, prev: _serve_step(
-                p, pool, bt, buf, prev, cfg))
+        # pass, per-row temperature/top-k/top-p sampling, and the
+        # eos/stop/max-tokens finished mask — because serving
+        # throughput on small steps is bounded by host dispatch
+        # overhead, not FLOPs. One variant traces per static
+        # (any-row-samples, any-stop-criteria) pair; the (False, False)
+        # variant is the bare greedy step (no sort, no PRNG, no ring).
+        self._unified_cache: dict[tuple[bool, bool], object] = {}
+        if self._tp:
+            from repro.launch import sharding as shd
+
+            shd.check_tp_geometry(cfg, self._tp)
+        # greedy sampling is the rectangular-generate hot path: one fused
+        # jitted argmax instead of a chain of eager ops per step; the
+        # sampled path is the SAME fused sampler the serve step uses,
+        # keyed by (seed, row, emission counter) so generate() and
+        # serve() agree token-for-token under a shared seed.
+        self._argmax = jax.jit(
+            lambda lg: jnp.argmax(lg[:, -1], axis=-1)[:, None]
+            .astype(jnp.int32))
+        self._sample = jax.jit(_generate_pick)
+        # copy-on-write block duplication for fully-cached prompts; block
+        # indices are traced scalars so one trace covers every copy, and
+        # the op moves along the (unsharded) block axis so it is TP-inert.
+        self._cow_copy = jax.jit(kvblocks.copy_block)
+
+    def _unified_fn(self, sample: bool, stop: bool):
+        """The jitted fused serving step for one static (sample, stop)
+        pair, traced on first use and cached for the engine's lifetime."""
+        fn = self._unified_cache.get((sample, stop))
+        if fn is not None:
+            return fn
+        cfg = self.cfg
         if self._tp:
             # shard_map the SAME fused step: each shard runs it with the
             # per-shard config (its slice of heads / hidden columns) over
             # its head-slice of the pool; tokens / tables / buffers are
             # replicated. tp_axis binds at trace time, so the boundary
             # psums in transformer.unified_step land in this jaxpr only.
+            # Sampling runs identically on every shard: the residual —
+            # hence the logits and the per-row keys — is replicated
+            # after the boundary psums, so toks/finished come out
+            # replicated too (out_specs P()), exactly like the greedy
+            # argmax before.
             from jax.sharding import PartitionSpec as P
 
             from repro.launch import sharding as shd
             from repro.runtime import shardctx
 
-            shd.check_tp_geometry(cfg, self._tp)
             lcfg = shd.tp_local_config(cfg, self._tp)
-            pspecs = shd.tp_param_specs(params, self._tp)
+            pspecs = shd.tp_param_specs(self.params, self._tp)
             pool_specs = kvblocks.pool_pspecs(cfg)
 
-            def tp_body(p, pool, bt, buf, prev):
+            def tp_body(p, pool, bt, buf, prev, recent, stops):
                 with shardctx.tp_axis("model"):
-                    return _serve_step(p, pool, bt, buf, prev, lcfg)
+                    return tfm.serve_step(p, pool, bt, buf, prev, recent,
+                                          stops, lcfg, sample=sample,
+                                          stop=stop)
 
-            self._unified = jax.jit(shardctx.tp_shard_map(
-                tp_body, mesh,
-                in_specs=(pspecs, pool_specs, P(), P(), P()),
-                out_specs=(P(), P(), pool_specs)))
-        # greedy sampling is the serving hot path: one fused jitted argmax
-        # instead of a chain of eager ops + PRNG key splits per step.
-        self._argmax = jax.jit(
-            lambda lg: jnp.argmax(lg[:, -1], axis=-1)[:, None]
-            .astype(jnp.int32))
-        # copy-on-write block duplication for fully-cached prompts; block
-        # indices are traced scalars so one trace covers every copy, and
-        # the op moves along the (unsharded) block axis so it is TP-inert.
-        self._cow_copy = jax.jit(kvblocks.copy_block)
+            fn = jax.jit(shardctx.tp_shard_map(
+                tp_body, self.mesh,
+                in_specs=(pspecs, pool_specs, P(), P(), P(), P(), P()),
+                out_specs=(P(), P(), P(), pool_specs)))
+        else:
+            fn = jax.jit(
+                lambda p, pool, bt, buf, prev, recent, stops:
+                tfm.serve_step(p, pool, bt, buf, prev, recent, stops, cfg,
+                               sample=sample, stop=stop))
+        self._unified_cache[(sample, stop)] = fn
+        return fn
 
     @staticmethod
     def _can_bucket(cfg) -> bool:
@@ -437,14 +561,21 @@ class InferenceEngine:
         unified token-budget step. Either way the result is the generated
         continuation only, (B, max_tokens), in request order — greedy
         outputs are token-identical between the two paths and to running
-        each prompt alone.
+        each prompt alone, seeded sampled outputs likewise (both paths
+        share the fused sampler and counter-based keys,
+        runtime/sampling.py). Stop criteria (sampling.eos_id / .stop)
+        truncate inclusively; rows that stop early are zero-padded to
+        max_tokens to keep the result rectangular.
         """
         sampling = sampling or SamplingParams()
         toks = _as_token_batch(requests)
         if isinstance(toks, list):          # ragged -> continuous batching
             res = self.serve(toks, sampling)
+            out = np.zeros((len(res.outputs), sampling.max_tokens), np.int32)
+            for i, o in enumerate(res.outputs):
+                out[i, :o.size] = o         # stop-shortened rows: zero tail
             return GenerationResult(
-                tokens=np.stack(res.outputs).astype(np.int32),
+                tokens=out,
                 prompt_len=max(res.prompt_lens), seconds=res.seconds,
                 prompt_lens=list(res.prompt_lens))
         s = toks.shape[1]
@@ -458,27 +589,33 @@ class InferenceEngine:
         ctx = (shardctx.use_mesh(self.mesh) if self.mesh is not None
                else contextlib.nullcontext())
         t0 = time.time()
-        greedy = sampling.temperature <= 0.0
         with ctx:
             logits, cache = self._prefill(self.params, toks, max_len,
                                           jnp.asarray(s - 1))
-            key = None if greedy else jax.random.PRNGKey(sampling.seed)
             out = []
-            k = None
-            if not greedy:
-                key, k = jax.random.split(key)
-            tok = self._pick(logits, k, sampling)
+            tok = self._pick(logits, sampling, 0)
             for i in range(sampling.max_tokens):
                 out.append(tok)
                 if i + 1 == sampling.max_tokens:
                     break
                 logits, cache = self._decode(self.params, cache, tok,
                                              jnp.asarray(s + i))
-                if not greedy:
-                    key, k = jax.random.split(key)
-                tok = self._pick(logits, k, sampling)
+                tok = self._pick(logits, sampling, i + 1)
             gen = jax.block_until_ready(jnp.concatenate(out, axis=1))
-        return GenerationResult(tokens=np.asarray(gen), prompt_len=s,
+        arr = np.asarray(gen)
+        if sampling.eos_id is not None or sampling.stop:
+            # lockstep decode runs every row to max_tokens; apply the
+            # shared stop oracle post-hoc (inclusive match, zero tail)
+            # so the rectangular and ragged paths return the same thing
+            from repro.runtime import sampling as smp
+            arr = arr.copy()
+            for i in range(arr.shape[0]):
+                keep = smp.match_stop_host(arr[i], sampling.eos_id,
+                                           sampling.stop,
+                                           sampling.max_tokens)
+                if keep is not None:
+                    arr[i, keep:] = 0
+        return GenerationResult(tokens=arr, prompt_len=s,
                                 seconds=time.time() - t0)
 
     # ------------------------------------------------------------- serve --
@@ -487,7 +624,8 @@ class InferenceEngine:
               num_blocks: int | None = None,
               chunk_tokens: int | None = None,
               speculate: bool | None = None,
-              prefix_cache: bool | None = None) -> ServeResult:
+              prefix_cache: bool | None = None,
+              on_token=None) -> ServeResult:
         """In-flight batching with chunked prefill: ragged prompts,
         per-request max_tokens, one jitted token-budget step.
 
@@ -524,13 +662,34 @@ class InferenceEngine:
         it for this call; `speculate=True` requires the engine to have a
         draft model. This path is synchronous (acceptance is
         value-dependent), trading the 2-deep pipeline for >1 token per
-        dispatch.
+        dispatch. Rows decoding with temperature > 0 never draft —
+        greedy acceptance verifies an argmax chain — but they sample in
+        the same fused dispatch, so mixed greedy+sampled batches keep
+        speculating on their greedy rows.
 
-        serve() is greedy-only: speculative verification and the
-        count-based pipelined bookkeeping both rely on deterministic
-        argmax tokens, so SamplingParams.temperature > 0 raises instead
-        of being silently ignored (rectangular `generate` batches do
-        sample).
+        Sampling is per request and fused into the dispatch: each
+        request's temperature / top_k / top_p / seed (its Request
+        fields, else `sampling`) travel as packed metadata columns in
+        the one per-step buffer upload, and tokens are sampled on
+        device with counter-based PRNG keys (runtime/sampling.py) — so
+        seeded sampled runs replay token-identically across repeats,
+        prefix-cache on/off, and TP mesh sizes; rows with temperature
+        <= 0 stay bit-identical to greedy serve; and an all-greedy call
+        still traces the bare argmax program (no sort, no PRNG).
+
+        Stop criteria (eos_id / stop token sequences, per request or
+        call-wide) are evaluated on device in the same dispatch; the
+        per-row finished mask rides the already-pipelined readback, so
+        the loop learns of a stop at most two steps late (those zombie
+        steps' tokens are discarded), then frees the row's blocks.
+        Matching is inclusive: the matched tokens stay in the (possibly
+        shorter than max_tokens) output.
+
+        on_token, if given, is called as `on_token(TokenEvent(...))`
+        the moment the pipelined readback confirms each token — the
+        async streaming front door (`launch.serve.serve_stream`)
+        bridges it onto an event loop. Callbacks run between dispatches
+        on the serve thread, so keep them cheap.
 
         prefix_cache (default: the engine's build-time setting) shares
         KV blocks between requests with equal full-block prompt
@@ -544,15 +703,6 @@ class InferenceEngine:
         pool is per-call); hit/COW/eviction counts land in the result.
         """
         sampling = sampling or SamplingParams()
-        if sampling.temperature > 0.0:
-            raise NotImplementedError(
-                f"serve() (in-flight batching) is greedy-only: speculative "
-                f"verification and count-based pipelined scheduling rely on "
-                f"deterministic argmax tokens, but "
-                f"SamplingParams.temperature={sampling.temperature} requests "
-                f"sampled decoding. Set SamplingParams.temperature=0 (the "
-                f"default, greedy), or use generate() on a rectangular "
-                f"batch, which does support temperature/top_k sampling.")
         ctl = self.speculation
         if speculate is False:
             ctl = None
@@ -560,16 +710,38 @@ class InferenceEngine:
             raise ValueError(
                 "speculate=True but the engine has no draft model — build "
                 "with speculate=DraftSpec(...) or a plan carrying .draft")
+        # resolve every per-request sampling/stop field against the
+        # call-level SamplingParams BEFORE submission: the scheduler and
+        # the packed-buffer build only ever see concrete values.
         reqs: list[Request] = []
         for i, r in enumerate(requests):
             if not isinstance(r, Request):
                 r = Request(tokens=r)
+            repl: dict = {"rid": i}
             if r.max_tokens is None:
-                r = dataclasses.replace(r, max_tokens=sampling.max_tokens)
-            reqs.append(dataclasses.replace(r, rid=i))
+                repl["max_tokens"] = sampling.max_tokens
+            if r.temperature is None:
+                repl["temperature"] = sampling.temperature
+            if r.top_k is None:
+                repl["top_k"] = sampling.top_k
+            if r.top_p is None:
+                repl["top_p"] = sampling.top_p
+            if r.seed is None:
+                repl["seed"] = sampling.seed
+            if r.eos_id is None:
+                repl["eos_id"] = sampling.eos_id
+            if not r.stop:
+                repl["stop"] = sampling.stop
+            reqs.append(dataclasses.replace(r, **repl))
         if not reqs:
             raise ValueError("empty request batch")
         kvblocks.check_paged_support(self.cfg)
+        # serve-call statics: which fused-step variant traces, and the
+        # stop-buffer geometry (ring width S, stop slots NS)
+        do_sample = any(r.temperature > 0.0 for r in reqs)
+        do_stop = any(r.eos_id is not None or r.stop for r in reqs)
+        n_stops = max([len(r.stop) for r in reqs] + [1])
+        stop_len = max([len(s) for r in reqs for s in r.stop] + [1])
 
         bs = block_size or self.block_size
         cap = min(max_batch or self.max_batch, len(reqs))
@@ -597,9 +769,12 @@ class InferenceEngine:
         out_vals: list[list[int]] = [[] for _ in reqs]
         first_tok_t = [None] * len(reqs)
         finish_t = [0.0] * len(reqs)
+        queue_t = [0.0] * len(reqs)
         steps = prefill_chunks = prefill_tokens = mixed_steps = 0
         drafted = accepted = spec_rounds = 0
+        spec_stopped = 0
 
+        from repro.runtime import sampling as smp
         from repro.runtime import shardctx
 
         # TP serving must NOT install the GSPMD mesh: the step is a
@@ -609,32 +784,66 @@ class InferenceEngine:
                if self.mesh is not None and not self._tp
                else contextlib.nullcontext())
         t0 = time.time()
+        # rids whose device stop criterion fired before max_tokens: the
+        # pipeline learns (at most two steps late, at consume time) and
+        # discards the zombie steps' tokens; the loop top frees the row.
+        stopped: set[int] = set()
 
-        def consume(emits, toks_dev):
-            """Read back one step's sampled tokens (blocks until the
-            device finishes that step) and credit them to requests."""
+        def consume(emits, toks_dev, fin_dev):
+            """Read back one step's sampled tokens + finished mask
+            (blocks until the device finishes that step) and credit
+            them to requests."""
             vals = np.asarray(toks_dev)
+            fins = None if fin_dev is None else np.asarray(fin_dev)
             now = time.time()
             for rid, r in emits:
+                if rid in stopped:
+                    continue    # zombie tokens dispatched past the stop
                 out_vals[rid].append(int(vals[r, 0]))
                 if first_tok_t[rid] is None:
                     first_tok_t[rid] = now
-                if len(out_vals[rid]) == reqs[rid].max_tokens:
+                done = len(out_vals[rid]) >= reqs[rid].max_tokens
+                if fins is not None and fins[r]:
+                    if not done:            # eos / stop sequence fired
+                        stopped.add(rid)    # before the token budget ran
+                    done = True
+                if done:
                     finish_t[rid] = now
+                if on_token is not None:
+                    on_token(TokenEvent(rid=rid, token=out_vals[rid][-1],
+                                        index=len(out_vals[rid]) - 1,
+                                        time=now, final=done))
 
         with ctx:
             if ctl is not None:
                 (steps, prefill_chunks, prefill_tokens, mixed_steps,
-                 drafted, accepted, spec_rounds) = self._spec_loop(
-                    reqs, sched, pool, tables, cap, budget, ctl,
-                    out_vals, first_tok_t, finish_t)
+                 drafted, accepted, spec_rounds, spec_stopped) = \
+                    self._spec_loop(
+                        reqs, sched, pool, tables, cap, budget, ctl,
+                        out_vals, first_tok_t, finish_t, queue_t, t0,
+                        do_sample, on_token)
                 sched_done = True
             else:
                 sched_done = False
+            step_fn = self._unified_fn(do_sample, do_stop)
             tables_dev = None       # device-safe copy, refreshed on change
-            inflight = collections.deque()   # (emits, device toks), oldest
+            stops_dev = None        # ditto, for the stop-sequence buffer
+            stop_buf = np.full((cap, n_stops, stop_len), -1, np.int32)
+            no_stops = jnp.zeros((cap, 1, 1), jnp.int32)  # stop=False dummy
+            inflight = collections.deque()  # (emits, toks, fin), oldest
             prev_toks = jnp.zeros((cap, 1), jnp.int32)
+            recent = jnp.zeros((cap, stop_len), jnp.int32)
             while not sched_done and sched.has_work():
+                # rows whose stop fired (discovered at consume): retire
+                # them before scheduling so the row + blocks free now
+                if stopped:
+                    for seq in list(sched.rows):
+                        if seq is not None and seq.req.rid in stopped:
+                            sched.finish(seq)
+                            tables[seq.row] = 0
+                            tables_dev = None
+                    if not sched.has_work():
+                        break
                 plan = sched.schedule(budget)
                 for r in plan.preempted:    # victim rows: table to trash
                     tables[r] = 0           # (before any admission that
@@ -643,6 +852,11 @@ class InferenceEngine:
                     tables[seq.row] = 0
                     tables[seq.row, :len(seq.block_ids)] = seq.block_ids
                     tables_dev = None
+                    queue_t[seq.req.rid] = time.time() - t0
+                    if do_stop:
+                        stop_buf[seq.row] = smp.pack_stop_seqs(
+                            seq.req.stop, n_stops, stop_len)
+                        stops_dev = None
                     if seq.cow_dst is not None:
                         # fully-cached prompt: materialize a private copy
                         # of the last matched block before this step's
@@ -655,43 +869,52 @@ class InferenceEngine:
                         "scheduler returned an empty step with work "
                         "pending — admission deadlock")
                 # ---- build the (cap, W + meta) span batch ----------------
-                # one fresh packed buffer per step: span tokens then
-                # (ctx, q_len, use_prev) columns. Handed to the jitted
-                # step as numpy — never mutated after dispatch, so jax's
-                # zero-copy aliasing of host buffers is safe here.
+                # one fresh packed buffer per step: span tokens, the
+                # (ctx, q_len, use_prev) scheduling columns, then the
+                # packed per-row sampling/stop metadata — still ONE
+                # upload. Handed to the jitted step as numpy — never
+                # mutated after dispatch, so jax's zero-copy aliasing of
+                # host buffers is safe here.
                 w = _pow2_bucket(plan.max_span)
-                buf = np.zeros((cap, w + 3), np.int32)
+                m = smp.SAMP_COLS
+                buf = np.zeros((cap, w + 3 + m), np.int32)
                 for r, width in plan.prefill.items():
                     seq = sched.rows[r]
                     lo = seq.prefilled
                     buf[r, :width] = seq.req.tokens[lo:lo + width]
-                    buf[r, -3] = lo
-                    buf[r, -2] = width
+                    buf[r, -(m + 3)] = lo
+                    buf[r, -(m + 2)] = width
                 for r in plan.decode:
                     seq = sched.rows[r]
                     # the input token is the one sampled last step; it is
                     # still on device (prev_toks), spliced in by the step.
                     # pool holds prompt + all but that newest token.
-                    buf[r, -3] = seq.prompt_len + seq.n_emitted - 1
-                    buf[r, -2] = 1
-                    buf[r, -1] = 1
+                    buf[r, -(m + 3)] = seq.prompt_len + seq.n_emitted - 1
+                    buf[r, -(m + 2)] = 1
+                    buf[r, -(m + 1)] = 1
+                for r in list(plan.prefill) + plan.decode:
+                    seq = sched.rows[r]
+                    smp.write_row_meta(buf, r, seq.req, seq.n_emitted)
                 # ---- ONE fused dispatch for the prefill/decode mix -------
                 if tables_dev is None:
                     # a private copy: `tables` is mutated by later
                     # admissions/evictions while earlier dispatched steps
                     # may still be reading the (possibly aliased) upload
                     tables_dev = tables.copy()
-                logits, toks_dev, pool = self._unified(
-                    self.params, pool, tables_dev, buf, prev_toks)
+                if do_stop and stops_dev is None:
+                    stops_dev = stop_buf.copy()
+                toks_dev, fin_dev, recent, pool = step_fn(
+                    self.params, pool, tables_dev, buf, prev_toks,
+                    recent, stops_dev if do_stop else no_stops)
                 steps += 1
                 prefill_chunks += len(plan.prefill)
                 prefill_tokens += sum(plan.prefill.values())
                 mixed_steps += plan.is_mixed
                 prev_toks = toks_dev
                 # ---- count-based bookkeeping at dispatch time ------------
-                # (no early stopping, so who emits/finishes never depends
-                # on token values — eviction and admission can run ahead
-                # of the device)
+                # (scheduling never waits on token values — eviction and
+                # admission run ahead of the device; value-dependent
+                # stops arrive via the pipelined finished mask above)
                 emits = []
                 for r, width in plan.prefill.items():
                     # advance + register newly completed full prompt
@@ -711,20 +934,28 @@ class InferenceEngine:
                 # ---- consume an older step while this one runs -----------
                 # (two steps of lookahead keep the device queue busy
                 # through the host's scheduling + readback work)
-                inflight.append((emits, toks_dev))
+                inflight.append((emits, toks_dev,
+                                 fin_dev if do_stop else None))
                 if len(inflight) > 2:
                     consume(*inflight.popleft())
             while inflight:
                 consume(*inflight.popleft())
+            # stops discovered in the final drain: the rows already
+            # finished by count, but late-stopped outputs stay truncated
+            if not sched_done:
+                for seq in list(sched.rows):
+                    if seq is not None and seq.req.rid in stopped:
+                        sched.finish(seq)
+                        tables[seq.row] = 0
         if pool_alloc.available != pool_alloc.capacity:
             raise RuntimeError(
                 f"leaked KV blocks: {pool_alloc.capacity - pool_alloc.available}"
                 f" of {pool_alloc.capacity} still allocated after drain")
         outputs = [np.asarray(v, np.int32) for v in out_vals]
         ttft = [first_tok_t[i] - t0 for i in range(len(reqs))]
-        tpot = [(finish_t[i] - first_tok_t[i]) / max(r.max_tokens - 1, 1)
-                if r.max_tokens > 1 else 0.0
-                for i, r in enumerate(reqs)]
+        tpot = [(finish_t[i] - first_tok_t[i]) / (len(out_vals[i]) - 1)
+                if len(out_vals[i]) > 1 else 0.0
+                for i in range(len(reqs))]
         return ServeResult(
             outputs=outputs, prompt_lens=[r.tokens.size for r in reqs],
             seconds=time.time() - t0, steps=steps,
@@ -740,10 +971,14 @@ class InferenceEngine:
             cache_hit_tokens=sched.cache_hit_tokens,
             cache_cow_blocks=sched.cache_cow_blocks,
             cache_evictions=pool_alloc.evictions,
-            preemptions=sched.preemptions)
+            preemptions=sched.preemptions,
+            queue_times=queue_t,
+            finish_times=[finish_t[i] - t0 for i in range(len(reqs))],
+            stopped_early=len(stopped) + spec_stopped)
 
     def _spec_loop(self, reqs, sched, pool, tables, cap, budget, ctl,
-                   out_vals, first_tok_t, finish_t):
+                   out_vals, first_tok_t, finish_t, queue_t, t0,
+                   do_sample, on_token):
         """The speculative serve loop: one fused draft->verify->accept
         dispatch per step (runtime.speculation.speculative_step).
 
@@ -752,15 +987,27 @@ class InferenceEngine:
         must wait for this step's readback. The throughput win comes
         from E[accepted + 1] tokens per dispatch, not from pipelining;
         in the dispatch-bound small-step regime that IS the serving
-        bottleneck. Only two step variants ever trace: draft width
-        spec.k (any drafting row this step) and 0 (none — e.g. a
-        prefill-only step), mirroring the non-speculative path's
-        power-of-two span bucketing.
+        bottleneck. Only two step variants ever trace per sampling
+        mode: draft width spec.k (any drafting row this step) and 0
+        (none — e.g. a prefill-only step), mirroring the
+        non-speculative path's power-of-two span bucketing.
 
-        Mutates out_vals / first_tok_t / finish_t in place (same
-        contract as serve's consume()); returns the step counters."""
+        Rows with temperature > 0 never draft (the scheduler skips them
+        in the spec offer) but sample their one token inside the same
+        fused dispatch. Stop criteria are evaluated host-side with the
+        shared oracle (`sampling.match_stop_host`) — this loop reads
+        every token back synchronously anyway, so the device mask would
+        buy nothing.
+
+        Mutates out_vals / first_tok_t / finish_t / queue_t in place
+        (same contract as serve's consume()); returns the step
+        counters."""
+        from repro.runtime import sampling as smp
+
         steps = prefill_chunks = prefill_tokens = mixed_steps = 0
         drafted = accepted = spec_rounds = 0
+        stopped_early = 0
+        m = smp.SAMP_COLS
         tables_dev = None
         prev_toks = jnp.zeros((cap, 1), jnp.int32)
         while sched.has_work():
@@ -772,6 +1019,7 @@ class InferenceEngine:
                 tables[seq.row] = 0
                 tables[seq.row, :len(seq.block_ids)] = seq.block_ids
                 tables_dev = None
+                queue_t[seq.req.rid] = time.time() - t0
                 if seq.cow_dst is not None:
                     pool = self._cow_copy(pool, jnp.int32(seq.cow_src),
                                           jnp.int32(seq.cow_dst))
@@ -790,24 +1038,28 @@ class InferenceEngine:
             # ---- (cap, W + meta) span batch; meta gains spec_lens -------
             k_step = ctl.spec.k if plan.spec else 0
             w = _pow2_bucket(max(plan.max_span, k_step + 1))
-            buf = np.zeros((cap, w + 4), np.int32)
+            buf = np.zeros((cap, w + 4 + m), np.int32)
             for r, width in plan.prefill.items():
                 seq = sched.rows[r]
                 lo = seq.prefilled
                 buf[r, :width] = seq.req.tokens[lo:lo + width]
-                buf[r, -4] = lo
-                buf[r, -3] = width
+                buf[r, -(m + 4)] = lo
+                buf[r, -(m + 3)] = width
             for r in plan.decode:
                 seq = sched.rows[r]
                 kr = plan.spec.get(r, 0)
                 # span: [prev (device-spliced), kr draft slots]
-                buf[r, -4] = seq.prompt_len + seq.n_emitted - 1
-                buf[r, -3] = 1 + kr
-                buf[r, -2] = 1
-                buf[r, -1] = kr
+                buf[r, -(m + 4)] = seq.prompt_len + seq.n_emitted - 1
+                buf[r, -(m + 3)] = 1 + kr
+                buf[r, -(m + 2)] = 1
+                buf[r, -(m + 1)] = kr
+            for r in list(plan.prefill) + plan.decode:
+                seq = sched.rows[r]
+                smp.write_row_meta(buf, r, seq.req, seq.n_emitted)
             if tables_dev is None:
                 tables_dev = tables.copy()
-            full_toks, n_acc, prev_toks, pool = ctl.step_fn(k_step)(
+            full_toks, n_acc, prev_toks, pool = ctl.step_fn(
+                k_step, do_sample)(
                 self.params, ctl.draft_params, pool, tables_dev, buf,
                 prev_toks)
             steps += 1
@@ -834,6 +1086,7 @@ class InferenceEngine:
                     # own token at the first divergence (or the bonus)
                     toks = fv[r, :int(na[r]) + 1]
                 rid = seq.req.rid
+                prev_len = len(out_vals[rid])
                 out_vals[rid].extend(int(t) for t in toks)
                 if first_tok_t[rid] is None:
                     first_tok_t[rid] = now
@@ -847,21 +1100,37 @@ class InferenceEngine:
                         tables[r] = 0
                         tables[r, :len(seq.block_ids)] = seq.block_ids
                         tables_dev = None
-                if seq.done:
+                # host-side stop check (shared oracle; tokens already
+                # read back). Inclusive semantics: keep through the
+                # matching token, drop anything verified past it.
+                keep = smp.match_stop_host(out_vals[rid], seq.req.eos_id,
+                                           seq.req.stop, seq.max_tokens)
+                if keep is not None:
+                    del out_vals[rid][keep:]
+                if on_token is not None:
+                    for j in range(prev_len, len(out_vals[rid])):
+                        on_token(TokenEvent(
+                            rid=rid, token=out_vals[rid][j], index=j,
+                            time=now,
+                            final=(keep is not None
+                                   and j == len(out_vals[rid]) - 1)))
+                if keep is not None:
+                    stopped_early += len(out_vals[rid]) < seq.max_tokens
                     finish_t[rid] = now
                     sched.finish(seq)
                     tables[r] = 0
                     tables_dev = None
         return (steps, prefill_chunks, prefill_tokens, mixed_steps,
-                drafted, accepted, spec_rounds)
+                drafted, accepted, spec_rounds, stopped_early)
 
-    def _pick(self, logits, key, sampling: SamplingParams) -> jnp.ndarray:
-        """(B, 1) next tokens from (B, ..., V) last-position logits."""
+    def _pick(self, logits, sampling: SamplingParams,
+              counter: int) -> jnp.ndarray:
+        """(B, 1) next tokens from (B, ..., V) last-position logits —
+        greedy argmax, or the shared counter-keyed sampler (see
+        runtime/sampling.py; `counter` is the output-token index)."""
         if sampling.temperature <= 0.0:
             return self._argmax(logits)
-        last = logits[:, -1]
-        scaled = last / sampling.temperature
-        if sampling.top_k > 0 and sampling.top_k < scaled.shape[-1]:
-            kth = jax.lax.top_k(scaled, sampling.top_k)[0][..., -1:]
-            scaled = jnp.where(scaled < kth, -jnp.inf, scaled)
-        return jax.random.categorical(key, scaled)[:, None].astype(jnp.int32)
+        return self._sample(logits, np.float32(sampling.temperature),
+                            np.int32(sampling.top_k),
+                            np.float32(sampling.top_p),
+                            np.int32(sampling.seed), np.int32(counter))

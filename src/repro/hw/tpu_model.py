@@ -22,12 +22,14 @@ bandwidth scalings (the paper's Fig. 10/11 bandwidth-limited axis).
 from __future__ import annotations
 
 import dataclasses
+import math
 
 from repro.core.quant import packed_pad_ok
 from repro.kernels.lowrank_qmm import vmem_bytes as lr_vmem
 from repro.kernels.quant_matmul import vmem_bytes as qm_vmem
-from repro.launch.mesh import (HBM_BW, ICI_BW_PER_LINK, ICI_LINKS,
-                               PEAK_OPS_INT8, VMEM_BYTES)
+from repro.launch.mesh import (DISPATCH_S, HBM_BW, ICI_BW_PER_LINK,
+                               ICI_LINKS, PCIE_BW, PEAK_OPS_INT8,
+                               VMEM_BYTES)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -484,3 +486,67 @@ def prefix_cache_point(prompt_len: int, hit_rate: float, *, num_layers: int,
         kv_bytes_saved=cached * kv_tok,
         prefill_s=with_cache, prefill_s_nocache=nocache,
         ttft_speedup=nocache / with_cache)
+
+
+# -------------------------------------------------------------- sampling --
+
+@dataclasses.dataclass(frozen=True)
+class SamplingPoint:
+    """Priced per-step sampling point: fused in-device selection
+    (models/transformer.serve_step's sample branch) vs the host
+    round-trip alternative that ships full logits back over PCIe and
+    pays a second dispatch to upload the picked tokens."""
+
+    batch: int
+    vocab: int
+    sampled_frac: float             # fraction of rows with temperature > 0
+    fused_ops: float                # argmax scan + top-k window ops
+    fused_s: float                  # device-side selection time per step
+    host_bytes: float               # logits shipped per step if host-sampled
+    host_s: float                   # PCIe transfer + extra dispatch
+    overhead_vs_greedy: float       # fused_s_sampled / fused_s_greedy
+    speedup_vs_host: float          # host_s / fused_s
+
+
+def sampling_point(*, batch: int, vocab: int, sampled_frac: float = 1.0,
+                   logit_bytes: int = 4, peak_ops: float = PEAK_OPS_INT8,
+                   pcie_bw: float = PCIE_BW,
+                   dispatch_s: float = DISPATCH_S) -> SamplingPoint:
+    """Price one (batch, vocab) sampling configuration for the DSE.
+
+    The fused path selects tokens where the logits already live: greedy
+    rows cost one O(B·V) argmax scan; sampled rows add the shared
+    top-`TOPK_CAP` candidate window (O(B·V·log cap) compare-exchange
+    ops — a bounded lax.top_k, not a full-vocab sort) that serves the
+    top-k threshold, top-p mass, and categorical draw in one pass.
+    Rows are priced by `sampled_frac` since temperature-0 rows take the
+    argmax-only branch inside the same fused step. The host alternative
+    pays (batch, vocab) float logits over PCIe every step plus one extra
+    dispatch to push the chosen tokens back — latency that scales with
+    vocab and never overlaps the next step, which is why the fused path
+    wins by orders of magnitude at serving vocab sizes (asserted
+    monotone in tests)."""
+    if batch < 1 or vocab < 2:
+        raise ValueError(f"need batch >= 1 and vocab >= 2, got "
+                         f"batch={batch} vocab={vocab}")
+    if not 0.0 <= sampled_frac <= 1.0:
+        raise ValueError(
+            f"sampled_frac must be in [0, 1], got {sampled_frac}")
+    from repro.runtime.sampling import TOPK_CAP
+
+    argmax_ops = batch * vocab
+    window_ops = batch * vocab * math.log2(min(vocab, TOPK_CAP))
+    fused_ops = argmax_ops + sampled_frac * window_ops
+    # selection is elementwise/compare work, not MXU MACs: price at a
+    # vector-unit fraction of peak
+    vpu_ops = peak_ops / 8
+    fused_s = fused_ops / vpu_ops
+    host_bytes = batch * vocab * logit_bytes
+    host_s = host_bytes / pcie_bw + dispatch_s
+    greedy_s = argmax_ops / vpu_ops
+    return SamplingPoint(
+        batch=int(batch), vocab=int(vocab),
+        sampled_frac=float(sampled_frac), fused_ops=fused_ops,
+        fused_s=fused_s, host_bytes=host_bytes, host_s=host_s,
+        overhead_vs_greedy=fused_s / greedy_s,
+        speedup_vs_host=host_s / fused_s)

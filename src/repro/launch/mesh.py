@@ -68,3 +68,5 @@ ICI_BW_PER_LINK = 50e9        # B/s per link
 ICI_LINKS = 4                 # v5e: 4 ICI links per chip (2D torus x2 dirs)
 VMEM_BYTES = 16 * 2 ** 20     # ~16 MiB/core wired scratchpad
 HBM_BYTES = 16 * 2 ** 30      # 16 GiB HBM per v5e chip
+PCIE_BW = 16e9                # B/s host<->device (PCIe gen3 x16 effective)
+DISPATCH_S = 30e-6            # fixed host->device launch latency per dispatch

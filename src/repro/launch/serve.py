@@ -27,10 +27,58 @@ import argparse
 import jax.numpy as jnp
 import numpy as np
 
-from repro.api import CompressionPlan, InferenceEngine, SamplingParams
+from repro.api import (CompressionPlan, InferenceEngine, SamplingParams,
+                       TokenEvent)
 from repro.configs import get_config
 from repro.core.compress import CompressionConfig
 from repro.data import pipeline
+
+
+async def serve_stream(engine, requests, sampling=None, **serve_kwargs):
+    """Async streaming front door over `engine.serve`: yields each
+    `TokenEvent` the moment the pipelined readback confirms it, then the
+    final `ServeResult` as the last item.
+
+    The serve loop runs unchanged on a worker thread (its 2-deep
+    dispatch pipeline never blocks on the consumer); the engine's
+    `on_token` callback bridges events onto the caller's running event
+    loop with `call_soon_threadsafe`, so ordering is preserved and the
+    consumer sees tokens at true completion time — not at drain. A
+    serve-side exception is re-raised here after the events that
+    preceded it.
+
+        async for ev in serve_stream(engine, prompts, sampling):
+            if isinstance(ev, TokenEvent):
+                ...                     # stream ev.rid / ev.token out
+            else:
+                result = ev             # the closing ServeResult
+    """
+    import asyncio
+    import threading
+
+    loop = asyncio.get_running_loop()
+    q: asyncio.Queue = asyncio.Queue()
+
+    def on_token(ev: TokenEvent) -> None:
+        loop.call_soon_threadsafe(q.put_nowait, ev)
+
+    def run() -> None:
+        try:
+            res = engine.serve(requests, sampling, on_token=on_token,
+                               **serve_kwargs)
+        except BaseException as e:     # surface serve errors to the consumer
+            loop.call_soon_threadsafe(q.put_nowait, e)
+        else:
+            loop.call_soon_threadsafe(q.put_nowait, res)
+
+    threading.Thread(target=run, daemon=True).start()
+    while True:
+        item = await q.get()
+        if isinstance(item, BaseException):
+            raise item
+        yield item
+        if not isinstance(item, TokenEvent):   # the ServeResult closes it
+            return
 
 
 def generate(params, cfg, prompts, gen_len: int, *, greedy=True, seed=0):
@@ -103,9 +151,23 @@ def main(argv=None):
     ap.add_argument("--no-prefix-cache", dest="prefix_cache",
                     action="store_false")
     ap.add_argument("--temperature", type=float, default=0.0,
-                    help="<= 0 -> greedy decode")
+                    help="<= 0 -> greedy decode (sampling is fused "
+                         "in-device; seeded runs replay token-for-token)")
     ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus sampling threshold in (0, 1]; 1.0 "
+                         "keeps the whole distribution")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--eos-id", type=int, default=None,
+                    help="stop a request after it emits this token id "
+                         "(evaluated on device, inclusive)")
+    ap.add_argument("--stop", action="append", default=[], metavar="IDS",
+                    help="stop token sequence as comma-separated ids "
+                         "(repeatable; matched inclusively on device)")
+    ap.add_argument("--stream", action="store_true",
+                    help="with --ragged: consume the serve through the "
+                         "async streaming front door (serve_stream) and "
+                         "print tokens as they complete")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -143,9 +205,12 @@ def main(argv=None):
 
     task = pipeline.MarkovTask(cfg.vocab_size, seed=args.seed)
     prompts = task.batch(0, args.batch, args.prompt_len)["tokens"]
+    stop = tuple(tuple(int(t) for t in s.split(",")) for s in args.stop)
     sampling = SamplingParams(max_tokens=args.gen,
                               temperature=args.temperature,
-                              top_k=args.top_k, seed=args.seed)
+                              top_k=args.top_k, top_p=args.top_p,
+                              seed=args.seed, eos_id=args.eos_id,
+                              stop=stop)
 
     if args.ragged:
         # mixed-length workload: truncate each row to a different length
@@ -153,7 +218,24 @@ def main(argv=None):
         lens = [max(4, args.prompt_len - 4 * (i % 4))
                 for i in range(args.batch)]
         ragged = [base[i, :lens[i]] for i in range(args.batch)]
-        res = engine.serve(ragged, sampling)
+        if args.stream:
+            import asyncio
+
+            async def drive():
+                shown = 0
+                async for ev in serve_stream(engine, ragged, sampling):
+                    if isinstance(ev, TokenEvent):
+                        if shown < 8 or ev.final:
+                            tag = " (final)" if ev.final else ""
+                            print(f"[stream] rid={ev.rid} "
+                                  f"#{ev.index}: {ev.token}{tag}")
+                        shown += 1
+                    else:
+                        return ev
+
+            res = asyncio.run(drive())
+        else:
+            res = engine.serve(ragged, sampling)
         print(f"[serve] in-flight batching: {len(ragged)} requests "
               f"(prompt lens {lens}) in {res.seconds:.1f}s — "
               f"{res.steps} unified steps ({res.mixed_steps} mixed), "
@@ -164,6 +246,13 @@ def main(argv=None):
         print(f"[serve] latency: TTFT p50 {res.ttft_p50 * 1e3:.0f}ms / "
               f"p95 {res.ttft_p95 * 1e3:.0f}ms, per-output-token p50 "
               f"{res.tpot_p50 * 1e3:.1f}ms / p95 {res.tpot_p95 * 1e3:.1f}ms")
+        # goodput under a deadline of 2x the median finish time: requests
+        # the queue starved past that contribute nothing
+        deadline = 2 * float(np.median(res.finish_times))
+        print(f"[serve] SLO: queue p50 {res.queue_p50 * 1e3:.0f}ms / "
+              f"p95 {res.queue_p95 * 1e3:.0f}ms, goodput@{deadline:.1f}s "
+              f"{res.goodput(deadline):.1f} tok/s, "
+              f"{res.stopped_early} stopped early")
         if res.spec_k:
             print(f"[serve] speculation: k={res.spec_k}, accept rate "
                   f"{res.accept_rate:.2f} ({res.accepted}/{res.drafted} "
@@ -178,7 +267,10 @@ def main(argv=None):
                   f"{res.cache_evictions} evictions, "
                   f"{res.preemptions} preemptions")
         print("[serve] sample:", res.outputs[0][:16].tolist())
-        return np.stack(res.outputs)
+        out = np.zeros((len(res.outputs), args.gen), np.int32)
+        for i, o in enumerate(res.outputs):   # stop-shortened rows: 0-pad
+            out[i, :o.size] = o
+        return out
 
     res = engine.generate(prompts, sampling)
     print(f"[serve] generated {res.tokens.shape} in {res.seconds:.1f}s "

@@ -462,6 +462,60 @@ def unified_step(params, pool, block_tables, ctx_lens, q_lens, inputs, cfg,
     return logits_for(params, h1, cfg), pool
 
 
+def serve_step(params, pool, block_tables, step_buf, prev, recent,
+               stop_seqs, cfg, *, sample: bool = False, stop: bool = False):
+    """One fused serving dispatch: `unified_step` plus the logits→token
+    path (sampling) and device stop evaluation, all in one jit.
+
+    step_buf: (B, W + 3 + runtime.sampling.SAMP_COLS) int32 — the
+    host-built span tokens (B, W), three scheduling columns (ctx_lens,
+    q_lens, use_prev), then the packed per-row sampling/stop metadata
+    (see runtime/sampling.py), so the hot loop still uploads ONE array
+    per step. Decode rows' first token column is spliced from `prev`
+    (the previous step's device-resident sampled tokens) so token
+    values never round-trip through the host. `recent` is the per-row
+    ring of the last S emitted tokens (device-resident, carried across
+    steps like `prev`); `stop_seqs` is the (B, NS, S) right-aligned
+    stop-sequence buffer (refreshed on admission, like block tables).
+
+    `sample` / `stop` are STATIC: the engine traces one variant per
+    (any-row-samples, any-stop-criteria) pair for a serve call, so an
+    all-greedy, no-stop serve runs a program with no sort, no PRNG, and
+    no ring update — exactly the previous greedy step. Within a sampled
+    variant, rows with temperature <= 0 still take the raw-logits
+    argmax (bit-identical to greedy; see sampling.sample_tokens).
+
+    Returns (toks (B, 1) int32, finished (B,) int32, recent, pool).
+    `finished` flags rows whose emission this step completed the
+    request (eos / stop sequence / max_tokens); the engine reads it off
+    the already-pipelined readback — no extra host sync.
+    """
+    from repro.runtime import sampling as smp
+
+    meta = step_buf[:, -(3 + smp.SAMP_COLS):]
+    tokens = step_buf[:, :-(3 + smp.SAMP_COLS)]
+    ctx_lens, q_lens, use_prev = meta[:, 0], meta[:, 1], meta[:, 2]
+    tokens = tokens.at[:, 0].set(
+        jnp.where(use_prev.astype(bool), prev[:, 0], tokens[:, 0]))
+    logits, pool = unified_step(params, pool, block_tables, ctx_lens,
+                                q_lens, tokens, cfg)
+    last = logits[:, -1]
+    if sample:
+        sp = smp.unpack_meta(step_buf)
+        keys = smp.row_keys(sp["seed"], sp["rid"], sp["counter"])
+        toks = smp.sample_tokens(last, sp["temperature"], sp["top_k"],
+                                 sp["top_p"], keys)[:, None]
+    else:
+        toks = jnp.argmax(last, axis=-1)[:, None].astype(jnp.int32)
+    if stop:
+        sp = smp.unpack_meta(step_buf)
+        recent = smp.push_recent(recent, toks)
+        fin = smp.finished_mask(toks[:, 0], recent, sp, stop_seqs)
+    else:
+        fin = jnp.zeros((toks.shape[0],), jnp.int32)
+    return toks, fin, recent, pool
+
+
 def decode_step(params, cache, inputs, pos, cfg):
     """One decode step. inputs: (B, 1) tokens or (B, 1, D) embeds.
     Returns (logits (B, 1, V) f32, new cache)."""

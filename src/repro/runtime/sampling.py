@@ -1,0 +1,260 @@
+"""Fused in-device sampling and stop evaluation for the serving step.
+
+Serving throughput on small steps is bounded by host dispatch overhead,
+so per-request sampling must ride the ONE packed buffer the serve loop
+already uploads per step — never a second upload, never a host round
+trip. This module owns that contract:
+
+  * **Packed sampling metadata** — every dispatch buffer ends in
+    `SAMP_COLS` int32 columns per row: temperature / top_p as float32
+    *bit patterns* (the buffer stays a single int32 array), top_k, the
+    request's seed / rid / emission counter for key derivation, and the
+    eos id + max_tokens for the stop mask. `write_row_meta` packs a row
+    host-side; `unpack_meta` bitcasts it back inside the jitted step.
+
+  * **Counter-based PRNG keys** — row r samples its c-th output token
+    with `fold_in(fold_in(PRNGKey(seed_r), rid_r), c)`. Keys are a pure
+    function of (request, emission index): NOT of batch composition,
+    batch row, prefix-cache hits, TP mesh size, or speculation — which
+    is the whole reproducibility story. Seeded runs replay token-for-
+    token across all of those, and `generate()` derives keys the same
+    way so the rectangular and continuous-batching paths agree.
+
+  * **One shared sampler** — `sample_tokens` applies temperature
+    scaling, per-row top-k, then top-p *in that order* inside a static
+    top-`TOPK_CAP` candidate window (one `lax.top_k` serves both
+    truncations; no full-vocab sort), then a per-row-keyed categorical.
+    Rows with temperature <= 0 return the raw-logits argmax —
+    bit-identical to the greedy serving path.
+
+  * **Device stop evaluation** — a per-row ring of the last S emitted
+    tokens (`push_recent`, carried across steps like the engine's
+    `prev_toks`) lets `finished_mask` match eos / stop sequences /
+    max_tokens entirely on device; the engine reads the mask off the
+    already-pipelined completion path. Stop sequences are right-aligned
+    in a (-1)-padded (B, NS, S) buffer; a length-l match additionally
+    requires l <= counter + 1, which provably ignores ring content left
+    behind by a row's previous occupant (the newest counter + 1 slots
+    are exactly this request's emissions, because once a row decodes it
+    emits every step until it finishes).
+
+Stop semantics are *inclusive*: generation stops AFTER emitting the
+token that completes the eos/stop match, and the matched tokens stay in
+the output (streaming front doors forward tokens as they complete, so
+un-emitting is not an option). `match_stop_host` is the numpy oracle
+with the same semantics — tests diff device truncation against it, and
+the synchronous speculative loop (which reads tokens back every step
+anyway) uses it directly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# --- packed sampling metadata: the last SAMP_COLS columns of every ---
+# --- serve dispatch buffer, one int32 block per row ------------------
+SAMP_COLS = 8
+# column offsets inside the block (negative-indexed from the buffer end)
+TEMP, TOPK, TOPP, SEED, RID, COUNTER, EOS, MAXTOK = range(SAMP_COLS)
+
+
+def f32_bits(x: float) -> int:
+    """Host-side float32 -> int32 bit pattern (the exact inverse of the
+    device-side bitcast in `unpack_meta`)."""
+    return int(np.float32(x).view(np.int32))
+
+
+def write_row_meta(buf: np.ndarray, row: int, req, counter: int) -> None:
+    """Pack one row's sampling/stop metadata into the buffer's trailing
+    SAMP_COLS columns. `req` is a resolved `runtime.scheduler.Request`
+    (temperature/top_k/top_p/seed all concrete); `counter` is the index
+    of the output token this dispatch samples (seq.n_emitted at build
+    time — 0 for rows still mid-prompt, whose logits nobody reads)."""
+    m = buf[row, -SAMP_COLS:]
+    m[TEMP] = f32_bits(req.temperature)
+    m[TOPK] = int(req.top_k)
+    m[TOPP] = f32_bits(req.top_p)
+    m[SEED] = int(req.seed)
+    m[RID] = int(req.rid)
+    m[COUNTER] = int(counter)
+    m[EOS] = -1 if req.eos_id is None else int(req.eos_id)
+    m[MAXTOK] = int(req.max_tokens)
+
+
+def unpack_meta(step_buf):
+    """Bitcast the trailing SAMP_COLS columns back into per-row arrays
+    (inside the jitted step; pure slicing + bitcasts, no data movement).
+    All-zero metadata (idle rows) decodes to temperature 0.0 / eos 0 /
+    max_tokens 0 — harmless, because the mask guards below and the
+    engine never credits tokens from rows it did not schedule."""
+    m = step_buf[:, -SAMP_COLS:]
+    return {
+        "temperature": jax.lax.bitcast_convert_type(m[:, TEMP], jnp.float32),
+        "top_k": m[:, TOPK],
+        "top_p": jax.lax.bitcast_convert_type(m[:, TOPP], jnp.float32),
+        "seed": m[:, SEED],
+        "rid": m[:, RID],
+        "counter": m[:, COUNTER],
+        "eos": m[:, EOS],
+        "max_tokens": m[:, MAXTOK],
+    }
+
+
+# ------------------------------------------------------------- keys --
+def row_keys(seed, rid, counter):
+    """(B,) ints -> (B,) PRNG keys: fold_in(fold_in(PRNGKey(seed), rid),
+    counter). A pure function of the request and the emission index, so
+    a seeded run replays identically whatever the batch around it did."""
+
+    def one(s, r, c):
+        return jax.random.fold_in(jax.random.fold_in(
+            jax.random.PRNGKey(s), r), c)
+
+    return jax.vmap(one)(seed, rid, counter)
+
+
+# ---------------------------------------------------------- sampler --
+# Static candidate-window bound (cf. TensorRT-LLM's TOP_K_MAX): the
+# fused sampler draws from the top TOPK_CAP scaled logits per row, so
+# per-row traced top_k/top_p need one O(V log cap) lax.top_k instead of
+# a full-vocab sort — on the CPU proxy that is the difference between
+# sampled serving riding the greedy step (~1ms extra at 32k vocab) and
+# losing 25% of it. top_k requests are clamped to the window; top_k==0
+# / top_p==1.0 mean "no tighter truncation than the window".
+TOPK_CAP = 256
+
+
+def _token_gumbel(keys, token_ids):
+    """(B,) keys + (B, cap) int32 token ids -> (B, cap) Gumbel noise that
+    is a pure function of (row key, token id). Indexing the noise by
+    token id — not by the token's rank in the candidate window — is
+    what keeps a seeded draw stable when reduction order (TP mesh,
+    prefix-cache skips) permutes near-tied candidates."""
+    tiny = jnp.finfo(jnp.float32).tiny
+
+    def per_row(key, ids):
+        u = jax.vmap(lambda i: jax.random.uniform(
+            jax.random.fold_in(key, i), minval=tiny))(ids)
+        return -jnp.log(-jnp.log(u))
+
+    return jax.vmap(per_row)(keys, token_ids)
+
+
+def sample_tokens(logits, temperature, top_k, top_p, keys):
+    """Per-row temperature / top-k / top-p sampling over (B, V) f32
+    logits; `keys` from `row_keys`. Returns (B,) int32 next tokens.
+
+    Order (shared verbatim by generate() and the fused serve step, so
+    the two paths agree token-for-token under one seed): scale by
+    temperature, take the top min(V, TOPK_CAP) candidates, keep the
+    top-k of them (k == 0 or k >= cap keeps the whole window), keep the
+    smallest prefix of the remainder whose cumulative probability
+    reaches top_p (the top token always survives; mass is normalized
+    over the FULL vocabulary, so top_p means what it says even at the
+    window edge), Gumbel-max over what is left. Rows with temperature
+    <= 0 bypass all of it and return the raw-logits argmax —
+    bit-identical to the greedy path.
+
+    The Gumbel noise is derived per TOKEN ID (`fold_in(key, token)`),
+    not per window rank: candidate order inside the window is
+    irrelevant, so runs whose logits differ only by reduction order
+    (TP mesh sizes, prefix-cache skips) pick the same token unless the
+    perturbation flips an actual logit+noise argmax. Rank-indexed noise
+    (what `jax.random.categorical` over the window would do) breaks
+    exactly that — near-tied bf16 candidates permute across meshes and
+    drag the noise with them.
+
+    top_k and top_p are per-row *traced* values, so the one static
+    lax.top_k provides both thresholds; that window is the entire extra
+    cost of the sampled variant.
+    """
+    v = logits.shape[-1]
+    cap = min(v, TOPK_CAP)
+    greedy = temperature <= 0.0
+    scaled = logits / jnp.where(greedy, 1.0, temperature)[:, None]
+    cand, cand_idx = jax.lax.top_k(scaled, cap)             # (B, cap) desc
+    k = jnp.where((top_k <= 0) | (top_k > cap), cap, top_k)     # (B,)
+    kth = jnp.take_along_axis(cand, (k - 1)[:, None], axis=-1)
+    # top-p inside the top-k survivors, evaluated in sorted space (rank
+    # < k), with probabilities normalized over the full vocabulary
+    ranks = jnp.arange(cap)[None, :]
+    in_k = ranks < k[:, None]
+    lse = jax.scipy.special.logsumexp(scaled, axis=-1, keepdims=True)
+    probs = jnp.where(in_k, jnp.exp(cand - lse), 0.0)
+    before = jnp.cumsum(probs, axis=-1) - probs     # cumulative mass above
+    n_keep = jnp.maximum(
+        jnp.sum((before < top_p[:, None]) & in_k, axis=-1), 1)
+    pth = jnp.take_along_axis(cand, (n_keep - 1)[:, None], axis=-1)
+    masked = jnp.where((cand < kth) | (cand < pth), -jnp.inf, cand)
+    gumbel = _token_gumbel(keys, cand_idx)
+    choice = jnp.argmax(masked + gumbel, axis=-1)
+    sampled = jnp.take_along_axis(cand_idx, choice[:, None], axis=-1)[:, 0]
+    return jnp.where(greedy, jnp.argmax(logits, axis=-1),
+                     sampled).astype(jnp.int32)
+
+
+# ---------------------------------------------------- stop criteria --
+def push_recent(recent, toks):
+    """Shift this step's sampled tokens into the per-row ring of the
+    last S emissions. Unconditional for every row every step — rows
+    that did not emit push garbage, which `finished_mask`'s counter
+    guard provably never reads."""
+    return jnp.concatenate([recent[:, 1:], toks], axis=1)
+
+
+def finished_mask(toks, recent, meta, stop_seqs):
+    """(B,) int32: 1 where this step's emission finishes the row.
+
+    toks (B,) — this step's sampled tokens; recent (B, S) — the ring
+    AFTER `push_recent` (a stop match includes the just-emitted token);
+    meta — `unpack_meta` output; stop_seqs (B, NS, S) int32 — each
+    row's stop sequences right-aligned with -1 padding on the left.
+
+    A length-l stop matches only when l <= counter + 1: the newest
+    counter + 1 ring slots are exactly this request's emitted tokens
+    (a decoding row emits every step until it finishes, so nothing
+    interleaves), and everything older — the previous occupant's tokens
+    or prefill-step garbage — is out of reach without any ring reset.
+    eos < 0 disables the eos check; max_tokens <= 0 disables the length
+    check (idle rows carry all-zero metadata)."""
+    counter = meta["counter"]
+    fin = (meta["eos"] >= 0) & (toks == meta["eos"])
+    fin |= (meta["max_tokens"] > 0) & (counter + 1 >= meta["max_tokens"])
+    pad = stop_seqs < 0                                       # (B, NS, S)
+    lens = jnp.sum(~pad, axis=-1)                             # (B, NS)
+    hit = (jnp.all(pad | (stop_seqs == recent[:, None, :]), axis=-1)
+           & (lens >= 1) & (lens <= counter[:, None] + 1))
+    return (fin | jnp.any(hit, axis=-1)).astype(jnp.int32)
+
+
+def pack_stop_seqs(stops, n_stops: int, max_len: int) -> np.ndarray:
+    """Host helper: one row's stop sequences -> (n_stops, max_len) int32,
+    right-aligned, -1-padded (the layout `finished_mask` matches
+    against). `stops` is a tuple of token-id tuples."""
+    out = np.full((n_stops, max_len), -1, np.int32)
+    for j, s in enumerate(stops):
+        out[j, max_len - len(s):] = np.asarray(s, np.int32)
+    return out
+
+
+def match_stop_host(tokens, eos_id, stops, max_tokens) -> int | None:
+    """Numpy oracle for the device stop path: the output length at which
+    generation stops (inclusive of the matching token), or None if the
+    stream never stops within `tokens`. Same semantics as
+    `finished_mask` consumed step-by-step; the speculative serve loop
+    (synchronous, tokens already on host) uses it directly and the
+    tests diff fused-serve truncation against it."""
+    stops = [tuple(int(t) for t in s) for s in (stops or ())]
+    for j, t in enumerate(tokens):
+        t = int(t)
+        if eos_id is not None and t == int(eos_id):
+            return j + 1
+        for s in stops:
+            l = len(s)
+            if l and l <= j + 1 and tuple(
+                    int(x) for x in tokens[j + 1 - l:j + 1]) == s:
+                return j + 1
+        if max_tokens is not None and j + 1 >= int(max_tokens):
+            return j + 1
+    return None

@@ -76,12 +76,25 @@ class Request:
     """One generation request. max_tokens=None defers to the engine-level
     SamplingParams; rid is assigned by the engine (submission order).
     `requeued` is set by pool-pressure preemption — a request yields its
-    blocks at most once."""
+    blocks at most once.
+
+    Per-request sampling / stop controls are plain fields (floats, ints,
+    tuples — this module must stay jax-free) with None meaning "defer to
+    the engine-level SamplingParams"; `engine.serve` resolves every
+    field to a concrete value before `submit`. temperature <= 0 is
+    greedy; `stop` is a tuple of token-id tuples matched inclusively
+    (the matching tokens stay in the output)."""
 
     tokens: np.ndarray
     max_tokens: int | None = None
     rid: int | None = None
     requeued: bool = False
+    temperature: float | None = None
+    top_k: int | None = None
+    top_p: float | None = None
+    seed: int | None = None
+    eos_id: int | None = None
+    stop: tuple = ()
 
     def __post_init__(self):
         self.tokens = np.asarray(self.tokens, np.int32).reshape(-1)
@@ -89,6 +102,15 @@ class Request:
             raise ValueError("empty prompt")
         if self.max_tokens is not None and self.max_tokens < 1:
             raise ValueError(f"max_tokens must be >= 1, got {self.max_tokens}")
+        if self.top_k is not None and self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0, got {self.top_k}")
+        if self.top_p is not None and not 0.0 < self.top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
+        if self.eos_id is not None and self.eos_id < 0:
+            raise ValueError(f"eos_id must be >= 0, got {self.eos_id}")
+        self.stop = tuple(tuple(int(t) for t in s) for s in self.stop)
+        if any(len(s) == 0 for s in self.stop):
+            raise ValueError("empty stop sequence")
 
 
 @dataclasses.dataclass
@@ -143,6 +165,15 @@ class Sequence:
     @property
     def done(self) -> bool:
         return self.n_emitted >= self.max_tokens
+
+    @property
+    def sampled(self) -> bool:
+        """True when this row decodes with temperature > 0. Sampled rows
+        never draft: greedy speculative acceptance verifies an argmax
+        chain, which a stochastic target makes worthless (acceptance
+        would be the chance the sample equals the argmax)."""
+        t = self.req.temperature
+        return t is not None and t > 0.0
 
 
 @dataclasses.dataclass
@@ -380,6 +411,8 @@ class Scheduler:
             for seq in decoding:
                 if budget <= 0:
                     break
+                if seq.sampled:     # sampled rows never draft (greedy
+                    continue        # acceptance verifies argmax chains)
                 kr = self.reserve_speculation(seq, min(spec_k, budget))
                 if kr > 0:
                     spec[seq.row] = kr

@@ -161,14 +161,25 @@ def is_exact_draft(params, draft_params) -> bool:
 
 
 def speculative_step(params, draft_params, pool, block_tables, step_buf,
-                     prev, cfg, k: int):
+                     prev, cfg, k: int, sample: bool = False):
     """One fused draft->verify->accept serving dispatch.
 
-    step_buf: (B, W + 4) int32 — span tokens (B, W) with four metadata
-    columns appended: ctx_lens, q_lens, use_prev, spec_lens. Decode rows
-    carry q_lens = 1 + spec_lens (the previous token plus their draft
-    span); prefill rows carry their chunk width and spec_lens = 0. W is
+    step_buf: (B, W + 4 + sampling.SAMP_COLS) int32 — span tokens (B, W)
+    with four metadata columns appended — ctx_lens, q_lens, use_prev,
+    spec_lens — followed by the packed per-row sampling block
+    (`runtime.sampling.write_row_meta`). Decode rows carry
+    q_lens = 1 + spec_lens (the previous token plus their draft span);
+    prefill rows carry their chunk width and spec_lens = 0. W is
     bucketed by the driver and must be >= k + 1 when k > 0.
+
+    With `sample=True` (a static trace variant, like k), rows whose
+    packed temperature is > 0 replace their emitted token with a
+    temperature/top-k/top-p sample from the verify pass's last-valid
+    logits, keyed by the same counter-based derivation as the plain
+    serve step. Sampled rows never draft (the scheduler gives them
+    spec_lens = 0), so their accept count is naturally 0 and the one
+    sampled token is the round's whole emission; greedy rows are
+    untouched — bit-identical to sample=False.
 
     Phases (all inside one jit, so the host pays ONE dispatch per round):
       draft  — k unrolled width-1 `unified_step` calls with
@@ -198,11 +209,14 @@ def speculative_step(params, draft_params, pool, block_tables, step_buf,
     convention (no draft passes, verify_width 1).
     """
     from repro.models import transformer as tfm
+    from repro.runtime import sampling as smp
 
     b = step_buf.shape[0]
-    tokens = step_buf[:, :-4]
+    m = smp.SAMP_COLS
+    tokens = step_buf[:, :-(4 + m)]
     ctx_lens, q_lens, use_prev, spec_lens = (
-        step_buf[:, -4], step_buf[:, -3], step_buf[:, -2], step_buf[:, -1])
+        step_buf[:, -(m + 4)], step_buf[:, -(m + 3)],
+        step_buf[:, -(m + 2)], step_buf[:, -(m + 1)])
 
     # ---- draft: k chained single-token passes with the truncated model
     drafts = []
@@ -225,6 +239,21 @@ def speculative_step(params, draft_params, pool, block_tables, step_buf,
     logits, pool = tfm.unified_step(params, pool, block_tables, ctx_lens,
                                     q_lens, tokens, cfg, verify_width=k + 1)
     full_toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)    # (B, k+2)
+    if sample:
+        # sampled rows (temperature > 0; never drafting, so n_acc will
+        # be 0) emit one token drawn from the last-valid-position logits
+        # — column k+1, which for a q = 1 decode row is the same
+        # position as column 0. Override both emission columns so the
+        # host readback and next_prev agree whichever one a row uses.
+        meta = smp.unpack_meta(step_buf)
+        keys = smp.row_keys(meta["seed"], meta["rid"], meta["counter"])
+        samp = smp.sample_tokens(logits[:, -1], meta["temperature"],
+                                 meta["top_k"], meta["top_p"], keys)
+        srow = meta["temperature"] > 0.0
+        full_toks = full_toks.at[:, 0].set(
+            jnp.where(srow, samp, full_toks[:, 0]))
+        full_toks = full_toks.at[:, k + 1].set(
+            jnp.where(srow, samp, full_toks[:, k + 1]))
 
     # ---- accept: longest matching draft prefix (cumprod of matches)
     if k:
@@ -255,7 +284,7 @@ class SpeculationController:
         self.draft_params = (derive_draft_params(params, spec)
                              if draft_params is None else draft_params)
         self.exact = is_exact_draft(params, self.draft_params)
-        self._steps: dict[int, object] = {}
+        self._steps: dict[tuple[int, bool], object] = {}
         # tensor-parallel speculation: same recipe as the engine's plain
         # TP step — shard-map the whole fused round (draft chain +
         # verify + accept), draft params sliced with the SAME rules as
@@ -281,11 +310,12 @@ class SpeculationController:
                     lambda s: NamedSharding(mesh, s), self._dspecs,
                     is_leaf=lambda x: isinstance(x, P)))
 
-    def step_fn(self, k: int):
-        """Jitted speculative_step specialized on draft width k (the
-        serve loop uses k == spec.k on rounds with any drafting row and
-        k == 0 otherwise, so at most two variants trace)."""
-        fn = self._steps.get(k)
+    def step_fn(self, k: int, sample: bool = False):
+        """Jitted speculative_step specialized on draft width k and the
+        sampling mode (the serve loop uses k == spec.k on rounds with
+        any drafting row and k == 0 otherwise, and one sample flag per
+        serve call, so at most two variants trace per serve)."""
+        fn = self._steps.get((k, sample))
         if fn is None:
             if self._tp:
                 from jax.sharding import PartitionSpec as P
@@ -294,10 +324,11 @@ class SpeculationController:
 
                 pool_specs = kvblocks.pool_pspecs(self.cfg)
 
-                def tp_body(p, dp, pool, bt, buf, prev, _k=k):
+                def tp_body(p, dp, pool, bt, buf, prev, _k=k, _s=sample):
                     with shardctx.tp_axis("model"):
                         return speculative_step(p, dp, pool, bt, buf, prev,
-                                                self._local_cfg, _k)
+                                                self._local_cfg, _k,
+                                                sample=_s)
 
                 fn = jax.jit(shardctx.tp_shard_map(
                     tp_body, self.mesh,
@@ -306,8 +337,8 @@ class SpeculationController:
                     out_specs=(P(), P(), P(), pool_specs)))
             else:
                 fn = jax.jit(
-                    lambda p, dp, pool, bt, buf, prev, _k=k:
+                    lambda p, dp, pool, bt, buf, prev, _k=k, _s=sample:
                     speculative_step(p, dp, pool, bt, buf, prev, self.cfg,
-                                     _k))
-            self._steps[k] = fn
+                                     _k, sample=_s))
+            self._steps[(k, sample)] = fn
         return fn

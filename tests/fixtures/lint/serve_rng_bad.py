@@ -1,0 +1,26 @@
+"""Fixture: host RNG on the serve loop's host path (serve-rng fires).
+
+Every pattern here breaks seeded reproducibility: host RNG state (or a
+threaded jax key) makes each token's randomness depend on how many
+steps ran before it, which batch composition, prefix-cache hits, and
+chunking all change.
+"""
+# iteralint: host-serve-loop
+import random
+
+import jax
+import numpy as np
+
+
+def serve_loop(reqs, step_fn, key):
+    outs = []
+    for r in reqs:
+        key, sub = jax.random.split(key)        # per-step host split
+        temp = np.random.uniform(0.5, 1.0)      # numpy host RNG
+        jitter = random.random()                # stdlib host RNG
+        outs.append(step_fn(r, sub, temp, jitter))
+    return outs
+
+
+def pick_row(rows):
+    return rows[np.random.randint(len(rows))]   # scheduling must not roll dice

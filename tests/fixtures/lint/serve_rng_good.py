@@ -1,0 +1,33 @@
+"""Fixture: the sanctioned serve sampling pattern (serve-rng clean).
+
+The host packs (seed, rid, counter) metadata into the one per-step
+buffer; keys are derived and consumed inside the jitted step. PRNGKey
+per request (not per step) is fine; jax.random use inside a traced
+function is exactly the point of the rule's exemption.
+"""
+# iteralint: host-serve-loop
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def fused_step(buf):
+    seed, rid, counter = buf[:, -3], buf[:, -2], buf[:, -1]
+
+    def one(s, r, c):
+        return jax.random.fold_in(jax.random.fold_in(
+            jax.random.PRNGKey(s), r), c)
+
+    keys = jax.vmap(one)(seed, rid, counter)
+    return jax.vmap(jax.random.categorical)(
+        keys, jnp.zeros((buf.shape[0], 8), jnp.float32))
+
+
+def serve_loop(reqs):
+    outs = []
+    for step, r in enumerate(reqs):
+        buf = np.zeros((len(reqs), 8), np.int32)
+        buf[:, -3:] = (7, r, step)      # metadata, not randomness
+        outs.append(fused_step(buf))
+    return outs

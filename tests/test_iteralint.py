@@ -29,6 +29,7 @@ FIXTURE_STEM = {
     "pytree-aux": "pytree_aux",
     "tp-boundary": "tp_boundary",
     "host-purity": "host_purity",
+    "serve-rng": "serve_rng",
 }
 
 
@@ -107,6 +108,19 @@ def test_tp_boundary_counts_and_reachability():
     assert any("raw collective" in m for m in msgs)
     # the suppressed psum inside apply_linear stays suppressed
     assert not any(f.line == 8 for f in findings)
+
+
+def test_serve_rng_names_each_pattern():
+    findings = lint_paths([FIXTURES / "serve_rng_bad.py"],
+                          rules=["serve-rng"])
+    blob = " ".join(f.message for f in findings)
+    for needle in ("np.random.uniform", "stdlib `random.random`",
+                   "per-step `jax.random.split`", "np.random.randint"):
+        assert needle in blob, f"missing {needle!r} finding"
+    # keys derived inside the jitted step are the sanctioned pattern
+    good = lint_paths([FIXTURES / "serve_rng_good.py"],
+                      rules=["serve-rng"])
+    assert not good, [f.render() for f in good]
 
 
 def test_host_purity_flags_lazy_imports_in_pure_modules():

@@ -219,10 +219,16 @@ def test_build_speculate_resolution(engine):
 
 
 # ------------------------------------------------------ serve guards --
-def test_serve_is_greedy_only(dense_engine):
-    with pytest.raises(NotImplementedError, match="greedy-only"):
-        dense_engine.serve([np.arange(4)],
-                           SamplingParams(max_tokens=2, temperature=0.7))
+def test_sampled_rows_never_draft(engine):
+    """Speculation is a greedy-row optimization: an all-sampled batch on
+    a draft-carrying engine proposes zero draft tokens (verify-logits
+    sampling only), while the same prompts served greedy do draft."""
+    sp = SamplingParams(max_tokens=4, temperature=0.7, top_k=8, seed=3)
+    prompts = [np.arange(1, 5), np.arange(2, 9)]
+    sampled = engine.serve(prompts, sp)
+    assert sampled.drafted == 0 and sampled.spec_rounds == 0
+    greedy = engine.serve(prompts, SamplingParams(max_tokens=4))
+    assert greedy.drafted > 0
 
 
 def test_speculate_true_requires_draft(dense_engine):

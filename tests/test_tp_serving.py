@@ -10,8 +10,8 @@ Mesh cases run in a subprocess with
 XLA_FLAGS=--xla_force_host_platform_device_count=8 (tests in this
 process must keep seeing 1 device); the whole dtype x kv x mesh matrix
 runs in ONE subprocess to amortize import + compile cost. Pure-rule
-cases (TP spec rules, geometry errors, the serve temperature message)
-run in-process.
+cases (TP spec rules, geometry errors) run in-process; the sampled-
+serving TP identity case rides its own subprocess.
 """
 import os
 import subprocess
@@ -278,22 +278,25 @@ def test_build_rejects_bad_tp_geometry():
 
 # ---------------------------------------------------------- temperature --
 
-def test_serve_temperature_error_names_field():
-    """The greedy-only constraint must be actionable: the error names
-    SamplingParams.temperature (the field to change) and the constraint
-    itself."""
-    import jax
-    import numpy as np
+def test_serve_sampled_tp_matches_single_device():
+    """Seeded sampled serving is token-identical across TP mesh sizes:
+    the residual (hence logits and per-row PRNG keys) is replicated
+    after the boundary psums, so every shard samples the same token —
+    and the counter-based keys make mesh 1 and mesh 2 draw the same
+    stream for the same (seed, rid, counter)."""
+    run_sub("""
+        import numpy as np
+        from repro.api.engine import InferenceEngine, SamplingParams
+        from repro.launch.mesh import make_serving_mesh
 
-    from repro.api.engine import InferenceEngine, SamplingParams
-    from repro.configs import get_config
-    from repro.models import transformer as tfm
-
-    cfg = get_config("opus-mt", smoke=True)
-    eng = InferenceEngine(cfg, tfm.init_params(jax.random.PRNGKey(0), cfg))
-    prompts = [np.arange(1, 6, dtype=np.int32)]
-    with pytest.raises(NotImplementedError,
-                       match=r"SamplingParams\.temperature=0\.7"):
-        eng.serve(prompts, SamplingParams(max_tokens=2, temperature=0.7))
-    with pytest.raises(NotImplementedError, match=r"greedy"):
-        eng.serve(prompts, SamplingParams(max_tokens=2, temperature=0.7))
+        prompts = [list(range(1, 8)), list(range(3, 15)), [5, 4, 3]]
+        sp = SamplingParams(max_tokens=6, temperature=0.8, top_k=20,
+                            top_p=0.9, seed=7)
+        ref = InferenceEngine.build("opus-mt", smoke=True).serve(prompts, sp)
+        tp = InferenceEngine.build(
+            "opus-mt", smoke=True, mesh=make_serving_mesh(2)
+        ).serve(prompts, sp)
+        for a, b in zip(ref.outputs, tp.outputs):
+            assert np.array_equal(a, b), (a, b)
+        print("TP_SAMPLED_OK")
+        """)

@@ -4,6 +4,7 @@ from tools.iteralint.analyzers.host_purity import HostPurityAnalyzer
 from tools.iteralint.analyzers.pallas_contract import PallasContractAnalyzer
 from tools.iteralint.analyzers.pytree_aux import PytreeAuxAnalyzer
 from tools.iteralint.analyzers.recompile import RecompileHazardAnalyzer
+from tools.iteralint.analyzers.serve_rng import ServeRngAnalyzer
 from tools.iteralint.analyzers.tp_boundary import TPBoundaryAnalyzer
 from tools.iteralint.analyzers.trace_safety import TraceSafetyAnalyzer
 
@@ -14,6 +15,7 @@ ALL = [
     PytreeAuxAnalyzer(),
     TPBoundaryAnalyzer(),
     HostPurityAnalyzer(),
+    ServeRngAnalyzer(),
 ]
 
 BY_NAME = {a.name: a for a in ALL}

@@ -1,0 +1,101 @@
+"""serve-rng: host RNG on the serving loop's host path.
+
+The fused serving step samples on device with counter-based PRNG keys
+(`runtime/sampling.py`): key = fold_in(fold_in(PRNGKey(seed), rid),
+counter), a pure function of the request and the emission index. That
+is what makes seeded serves replay token-identically across batch
+composition, prefix-cache on/off, TP mesh sizes, and the
+generate()/serve() split — and it only holds if NO host-side code in
+the serve path consumes randomness of its own. The regression class
+this rule guards against:
+
+  * `np.random.*` / stdlib `random.*` anywhere on the host path —
+    host RNG state makes outputs depend on call order, which batch
+    composition and scheduling change freely;
+  * per-step `jax.random.split` on the host path — the classic
+    key-threading pattern couples each token's key to how many steps
+    ran before it, so prefix-cache hits or different chunking change
+    every subsequent sample (and the host->device key upload breaks
+    the one-buffer-per-step dispatch contract).
+
+Scope: non-traced functions of the serve front ends
+(`repro.api.engine`, `repro.launch.serve`) and of any file marked
+`# iteralint: host-serve-loop`. Traced functions are exempt — keyed
+`jax.random.*` calls inside the jitted step are exactly the sanctioned
+pattern. `jax.random.PRNGKey` at build time is fine (it is
+per-request, not per-step); only `split` threads state.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.iteralint.framework import Analyzer, import_table, resolves_to
+
+SERVE_MODULES = {"repro.api.engine", "repro.launch.serve"}
+MARKER = "host-serve-loop"
+
+
+def _own_calls(fn_node):
+    """Call nodes lexically inside `fn_node` but not inside a nested
+    def/lambda (nested functions are separate call-graph nodes and are
+    checked under their own qual)."""
+    body = fn_node.body
+    stack = list(body) if isinstance(body, list) else [body]
+    while stack:
+        node = stack.pop()
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+            continue
+        if isinstance(node, ast.Call):
+            yield node
+        stack.extend(ast.iter_child_nodes(node))
+
+
+class ServeRngAnalyzer(Analyzer):
+
+    name = "serve-rng"
+    description = ("host RNG (np.random / random.*) or per-step "
+                   "jax.random.split on the serve loop's host path — "
+                   "sampling must stay on device with counter-based keys")
+
+    def run(self, project):
+        graph = project.callgraph()
+        traced = graph.traced()
+        findings = []
+        analysis = set(project.analysis_rels)
+        for qual in sorted(graph.functions):
+            fi = graph.functions[qual]
+            sf = fi.sf
+            if sf.rel not in analysis:
+                continue
+            if sf.module not in SERVE_MODULES \
+                    and MARKER not in sf.file_markers:
+                continue
+            if qual in traced:
+                continue        # in-device keyed PRNG is the point
+            table = getattr(sf, "imports", None)
+            if table is None:
+                table = sf.imports = import_table(sf.tree)
+            fname = qual.split(":", 1)[1]
+            for call in _own_calls(fi.node):
+                f = call.func
+                if resolves_to(table, f, "numpy.random"):
+                    findings.append(self.finding(
+                        sf, call,
+                        f"`{ast.unparse(f)}` host RNG in serve host-path "
+                        f"function `{fname}` — sample on device with "
+                        "counter-based keys (runtime/sampling.py)"))
+                elif resolves_to(table, f, "random"):
+                    findings.append(self.finding(
+                        sf, call,
+                        f"stdlib `{ast.unparse(f)}` host RNG in serve "
+                        f"host-path function `{fname}` — sample on device "
+                        "with counter-based keys (runtime/sampling.py)"))
+                elif resolves_to(table, f, "jax.random.split"):
+                    findings.append(self.finding(
+                        sf, call,
+                        f"per-step `jax.random.split` in serve host-path "
+                        f"function `{fname}` — key threading couples "
+                        "tokens to step count; derive keys in-device via "
+                        "fold_in(seed, rid, counter)"))
+        return findings

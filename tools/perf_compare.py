@@ -180,6 +180,13 @@ SERVING_METRICS = [
     ("TTFT p95 (ms)", ("continuous", "ttft_p95_s"), 1e3),
     ("TPOT p50 (ms)", ("continuous", "tpot_p50_s"), 1e3),
     ("TPOT p95 (ms)", ("continuous", "tpot_p95_s"), 1e3),
+    # sampled-serving section (fig13 --sample; '-' without it)
+    ("sampled tok/s", ("sampled", "tokens_per_second"), 1.0),
+    ("sampled greedy tok/s", ("sampled", "greedy_tokens_per_second"), 1.0),
+    ("sampled/greedy throughput", ("sampled", "throughput_vs_greedy"), 1.0),
+    ("sampled queue p50 (ms)", ("sampled", "queue_p50_s"), 1e3),
+    ("sampled goodput tok/s @2x-median",
+     ("sampled", "goodput_tok_per_s_at_2x_median"), 1.0),
     # self-speculative decoding section (fig13 --speculate K; rows print
     # '-' for runs benchmarked without it)
     ("spec tok/s", ("speculation", "tokens_per_second"), 1.0),
